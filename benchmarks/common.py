@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall seconds of fn(*args), blocking on device results."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(getattr(r, "__dict__", r)) or [0])
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(getattr(r, "__dict__", r)) or [0])
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], r
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,55 @@
+"""Paper Fig. 1: count vs distinct across engines and sizes.
+
+Claim reproduced: the array engine wins `count` (O(1) container metadata, the
+SciDB side of Fig. 1) while the columnar engine wins `distinct` when the
+array layout carries padding (the PostGRES side) — no single engine wins both.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import DenseTensor, ENGINES
+from repro.core import cast as castmod
+from benchmarks.common import bench, row
+
+
+def make_padded_dense(n_valid: int, pad_factor: int = 4, seed: int = 0):
+    """Sparse-ish data in a padded dense array (fill = 0), plus its compacted
+    columnar form — the same logical table in two engines."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, max(n_valid // 8, 2),
+                        size=n_valid).astype(np.float32)
+    dense = np.zeros(n_valid * pad_factor, np.float32)
+    idx = rng.choice(dense.size, n_valid, replace=False)
+    dense[idx] = vals
+    d = DenseTensor(jnp.asarray(dense), valid_count=n_valid)
+    col = castmod.cast(DenseTensor(jnp.asarray(vals)), "columnar")
+    return d, col
+
+
+def main():
+    print("# fig1: name,us_per_call,derived", flush=True)
+    for n in (10_000, 100_000, 1_000_000):
+        d, col = make_padded_dense(n)
+        t, _ = bench(ENGINES["dense_array"].run, "count", {}, d)
+        row(f"fig1.count.dense_array.n{n}", t * 1e6)
+        t, _ = bench(ENGINES["columnar"].run, "count", {}, col)
+        row(f"fig1.count.columnar.n{n}", t * 1e6)
+        t, _ = bench(ENGINES["dense_array"].run, "distinct", {}, d)
+        row(f"fig1.distinct.dense_array.n{n}", t * 1e6)
+        t, _ = bench(ENGINES["columnar"].run, "distinct", {}, col)
+        row(f"fig1.distinct.columnar.n{n}", t * 1e6)
+    # crossover assertion at the largest size
+    d, col = make_padded_dense(1_000_000)
+    tc_d, _ = bench(ENGINES["dense_array"].run, "count", {}, d)
+    tc_c, _ = bench(ENGINES["columnar"].run, "count", {}, col)
+    td_d, _ = bench(ENGINES["dense_array"].run, "distinct", {}, d)
+    td_c, _ = bench(ENGINES["columnar"].run, "distinct", {}, col)
+    row("fig1.crossover", 0.0,
+        f"count: dense {tc_c/tc_d:.1f}x faster; "
+        f"distinct: columnar {td_d/td_c:.1f}x faster")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig. 4: middleware overhead — BigDAWG execute() vs direct engine
+invocation.
+
+As in the paper, these are single-engine queries issued through the
+*degenerate island* (full engine power, no location transparency), so the
+difference is pure middleware cost: signature computation, monitor lookup /
+recording, plan materialization and result delivery.
+
+Claim reproduced: overhead is a small percentage for long queries and only a
+large share for very short ones ("There is a minimum overhead incurred which
+may be a larger percentage for queries of shorter duration").
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import BigDAWG, DenseTensor, ENGINES, degenerate
+from benchmarks.common import bench, row
+
+scidb = degenerate("dense_array")
+
+
+def main():
+    print("# fig4: name,us_per_call,derived", flush=True)
+    bd = BigDAWG()
+    rng = np.random.default_rng(0)
+    for n in (64, 256, 1024, 2048):
+        name = f"W{n}"
+        w = DenseTensor(jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)))
+        bd.register(name, w, engine="dense_array")
+        q = scidb.matmul(scidb.matmul(name, name), name)
+
+        bd.execute(q, mode="training")       # warm + record
+        t_mw, _ = bench(lambda: bd.execute(q, mode="production"), iters=5)
+
+        eng = ENGINES["dense_array"]
+        def direct():
+            return eng.run("matmul", {}, eng.run("matmul", {}, w, w), w)
+        t_direct, _ = bench(direct, iters=5)
+
+        ovh = (t_mw - t_direct) / t_direct * 100.0
+        row(f"fig4.direct.n{n}", t_direct * 1e6)
+        row(f"fig4.bigdawg.n{n}", t_mw * 1e6, f"overhead={ovh:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

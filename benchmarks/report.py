@@ -1,0 +1,73 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load, FIX_HINTS
+
+ORDER = ["internlm2-1.8b", "codeqwen1.5-7b", "qwen2-72b", "glm4-9b",
+         "mamba2-370m", "internvl2-26b", "zamba2-7b", "seamless-m4t-medium",
+         "deepseek-v2-lite-16b", "grok-1-314b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _by_cell(rows):
+    return {(r["arch"], r["shape"]): r for r in rows}
+
+
+def dryrun_table():
+    pod = _by_cell(load("pod_16x16"))
+    mp = _by_cell(load("multipod_2x16x16"))
+    print("| arch | shape | pod 16x16: HBM/dev | fits 16G | compile s | "
+          "multipod 2x16x16: HBM/dev | fits | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ORDER:
+        for s in SHAPES:
+            r, r2 = pod.get((a, s)), mp.get((a, s))
+            if r is None:
+                continue
+            if not r.get("applicable", True):
+                print(f"| {a} | {s} | SKIP (long-context needs sub-quadratic "
+                      f"attention; full-attention family) | | | | | |")
+                continue
+            m, m2 = r.get("memory", {}), (r2 or {}).get("memory", {})
+            print(f"| {a} | {s} | {r['hbm_bytes_per_device']/1e9:.2f} GB "
+                  f"| {'Y' if r['fits_16g'] else 'N'} "
+                  f"| {m.get('compile_s', 0):.1f} "
+                  f"| {(r2 or {}).get('hbm_bytes_per_device', 0)/1e9:.2f} GB "
+                  f"| {'Y' if (r2 or {}).get('fits_16g') else '-'} "
+                  f"| {m2.get('compile_s', 0):.1f} |")
+
+
+def roofline_table():
+    pod = _by_cell(load("pod_16x16"))
+    print("| arch | shape | t_compute s | t_memory s | t_collective s | "
+          "dominant | MODEL/HLO flops | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER:
+        for s in SHAPES:
+            r = pod.get((a, s))
+            if r is None or not r.get("applicable", True):
+                continue
+            rf = r.get("roofline")
+            if rf is None:
+                continue
+            print(f"| {a} | {s} | {rf['t_compute']:.3f} | {rf['t_memory']:.3f} "
+                  f"| {rf['t_collective']:.3f} | {rf['dominant']} "
+                  f"| {rf['useful_flops_ratio']:.3f} "
+                  f"| {rf['roofline_fraction']:.4f} "
+                  f"| {FIX_HINTS[rf['dominant']][:70]} |")
+
+
+def main():
+    print("### Dry-run (memory compiles)\n")
+    dryrun_table()
+    print("\n### Roofline (single-pod, cost probes)\n")
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads benchmarks/artifacts/dryrun/*.json, prints per-cell terms and the
+dominant bottleneck.  Run the sweep first: python -m repro.launch.sweep.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTDIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+FIX_HINTS = {
+    "collective": "raise arithmetic intensity per chip: fewer TP shards for "
+                  "this size / larger per-chip batch / SP+reduce-scatter "
+                  "instead of all-reduce",
+    "memory": "fuse/remat less, raise accumulation microbatch, or bf16 "
+              "moments to cut state traffic",
+    "compute": "already MXU-bound: only kernel-level wins left (flash "
+               "attention tiling, fused SSD)",
+}
+
+
+def load(mesh="pod_16x16"):
+    short = "pod" if mesh.startswith("pod") else "multipod"
+    rows, seen = [], set()
+    for p in sorted(glob.glob(os.path.join(ARTDIR, "*.json"))):
+        r = json.load(open(p))
+        if r.get("mesh", "") not in (mesh, short):
+            continue
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r):
+    if not r.get("applicable", True):
+        return (f"{r['arch']:22s} {r['shape']:12s} SKIP "
+                f"({r['skip_reason'][:60]}...)")
+    rf = r.get("roofline")
+    if rf is None:
+        return f"{r['arch']:22s} {r['shape']:12s} (memory-only cell)"
+    return (f"{r['arch']:22s} {r['shape']:12s} "
+            f"comp={rf['t_compute']:9.4f}s mem={rf['t_memory']:9.4f}s "
+            f"coll={rf['t_collective']:9.4f}s dom={rf['dominant']:10s} "
+            f"useful={rf['useful_flops_ratio']:.3f} "
+            f"rooffrac={rf['roofline_fraction']:.4f} "
+            f"hbm={r['hbm_bytes_per_device']/1e9:5.1f}GB "
+            f"fits={r['fits_16g']}")
+
+
+def main():
+    print("# roofline: single-pod 16x16 (256 chips), v5e constants")
+    print("# name,us_per_call,derived")
+    for r in load("pod_16x16"):
+        print(fmt_row(r))
+        rf = r.get("roofline")
+        if rf:
+            dom = rf["dominant"]
+            us = max(rf["t_compute"], rf["t_memory"], rf["t_collective"]) * 1e6
+            print(f"roofline.{r['arch']}.{r['shape']},{us:.1f},"
+                  f"dom={dom};frac={rf['roofline_fraction']:.4f};"
+                  f"fix={FIX_HINTS[dom][:48]}")
+    print("\n# multipod fits-proof (2x16x16, 512 chips)")
+    for r in load("multipod_2x16x16"):
+        if not r.get("applicable", True):
+            continue
+        if "memory" in r:
+            print(f"multipod.{r['arch']}.{r['shape']},"
+                  f"{r['memory']['compile_s']*1e6:.0f},"
+                  f"hbm={r['hbm_bytes_per_device']/1e9:.2f}GB;"
+                  f"fits={r['fits_16g']}")
+
+
+if __name__ == "__main__":
+    main()

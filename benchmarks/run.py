@@ -1,0 +1,42 @@
+"""Benchmark runner — one section per paper table/figure.
+
+  fig1     count/distinct engine crossover          (paper Fig. 1)
+  matmul   dense vs join-aggregate matrix multiply  (paper §II anecdote)
+  fig4     middleware overhead                      (paper Fig. 4)
+  fig5     hybrid medical analytic                  (paper Fig. 5, §IV-B)
+  roofline dry-run roofline table (requires sweep artifacts)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig1_engine_crossover, fig4_overhead,
+                            fig5_polystore_analytic, matmul_engines, roofline)
+    sections = [
+        ("fig1", fig1_engine_crossover.main),
+        ("matmul", matmul_engines.main),
+        ("fig4", fig4_overhead.main),
+        ("fig5", fig5_polystore_analytic.main),
+        ("roofline", roofline.main),
+    ]
+    failed = []
+    for name, fn in sections:
+        print(f"\n==== {name} ====", flush=True)
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print("\nall benchmark sections completed", flush=True)
+
+
+if __name__ == '__main__':
+    main()

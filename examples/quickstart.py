@@ -1,0 +1,33 @@
+"""Quickstart: a cross-island polystore query in ~20 lines.
+
+This is the paper's own example (§III-C-2):
+    ARRAY( multiply( RELATIONAL( select * from A ... ), B ) )
+The RELATIONAL scope runs on the columnar engine, the ARRAY scope on the
+dense engine, and the middleware inserts the Cast between them.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import BigDAWG, DenseTensor, array, relational
+
+bd = BigDAWG()
+rng = np.random.default_rng(0)
+bd.register("A", DenseTensor(jnp.asarray(
+    rng.normal(size=(256, 256)).astype(np.float32))), engine="columnar")
+bd.register("B", DenseTensor(jnp.asarray(
+    rng.normal(size=(256, 64)).astype(np.float32))), engine="dense_array")
+
+# the paper's cross-island query
+query = array.matmul(relational.select("A", column="value", lo=-0.5, hi=2.0),
+                     "B")
+
+report = bd.execute(query, mode="training")      # first time: explore plans
+print(f"training phase: tried {report.plans_tried} plans, "
+      f"winner={report.plan_key} in {report.seconds*1e3:.1f} ms")
+
+report = bd.execute(query)                       # now: production phase
+print(f"production phase: plan={report.plan_key} "
+      f"in {report.seconds*1e3:.1f} ms (cast {report.cast_bytes/1e6:.1f} MB)")
+print("result:", report.result.data.shape, report.result.data.dtype)

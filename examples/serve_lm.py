@@ -1,0 +1,70 @@
+"""Batched LM serving with continuous slot management: prefill into free KV
+slots, decode all active slots together, release on completion — the
+standard continuous-batching loop, over a reduced internlm2-family model.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--requests 12] [--slots 4]
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, PlanConfig, ShapeConfig
+from repro.models import api
+from repro.models import transformer as T
+from repro.runtime import BatchServer
+from repro.runtime.server import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_arch("internlm2-1.8b"), name="internlm2-serve",
+        num_layers=4, d_model=256, num_heads=4, num_kv_heads=2, head_dim=64,
+        d_ff=1024, vocab_size=1024)
+    plan = PlanConfig(param_dtype="float32", compute_dtype="float32",
+                      attn_chunk=64, remat="none")
+    params = api.init_params(cfg, jax.random.PRNGKey(0), plan)
+    shape = ShapeConfig("serve", "decode", args.max_len, args.slots)
+
+    prefill1 = jax.jit(lambda p, toks: T.lm_prefill(cfg, plan, p, toks,
+                                                    args.max_len))
+    decode = jax.jit(api.make_decode_step(cfg, shape, plan))
+
+    server = BatchServer(
+        slots=args.slots, max_len=args.max_len,
+        prefill_fn=prefill1, decode_fn=decode, params=params,
+        init_cache_fn=lambda b, ml: T.init_cache(cfg, b, ml,
+                                                 jnp.float32),
+        eos_id=None)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(4, 17)).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    server.run(reqs)
+
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == args.new_tokens for r in reqs)
+    s = server.stats
+    tps = s["tokens_out"] / max(s["decode_seconds"], 1e-9)
+    print(f"served {len(reqs)} requests on {args.slots} slots: "
+          f"{s['prefills']} prefills, {s['decode_steps']} decode steps")
+    print(f"decode throughput: {tps:,.0f} tokens/s "
+          f"(batched decode over active slots)")
+    print("sample output:", reqs[0].out_tokens[:10])
+    print("OK: continuous-batching serving loop")
+
+
+if __name__ == "__main__":
+    main()

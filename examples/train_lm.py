@@ -1,0 +1,82 @@
+"""End-to-end LM training driver on CPU: a reduced internlm2-family model
+through the full production stack — sharded loader, AdamW + cosine schedule,
+grad accumulation, async checkpointing, failure injection + automatic
+restart, straggler detection.
+
+Defaults train a ~13M-param model for 60 steps (a few minutes on this
+container); ``--d-model 768 --layers 12 --steps 300`` gives a ~100M-param
+run when you have the budget.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 60] [--fail-at 25]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_arch, PlanConfig
+from repro.data import TokenStream
+from repro.models import api
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import FailureInjector, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a node failure at this step")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_arch("internlm2-1.8b"), name="internlm2-mini",
+        num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(args.d_model // 64, 2),
+        num_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=args.vocab)
+    plan = PlanConfig(param_dtype="float32", compute_dtype="float32",
+                      master_dtype="float32", accum=args.accum,
+                      attn_chunk=64, loss_chunk=64, remat="none")
+    n = api.count_params(cfg)
+    print(f"model: {cfg.name} {n/1e6:.1f}M params; "
+          f"{args.batch}x{args.seq} tokens/step, accum={args.accum}")
+
+    opt = AdamW(learning_rate=cosine_schedule(3e-4, 10, args.steps),
+                weight_decay=0.01)
+    state = api.init_train_state(cfg, plan, jax.random.PRNGKey(0), opt)
+    step_fn = jax.jit(api.make_train_step(cfg, plan, opt), donate_argnums=0)
+
+    stream = TokenStream(vocab_size=cfg.vocab_size, batch=args.batch,
+                         seq_len=args.seq, seed=42)
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    trainer = Trainer(
+        step_fn, lambda s: {"tokens": stream.batch_at(s)},
+        CheckpointManager(args.ckpt_dir, keep_last=2), ckpt_every=10,
+        injector=FailureInjector({args.fail_at}) if args.fail_at else None)
+    trainer.straggler.on_straggler = \
+        lambda s, t: print(f"  [straggler] step {s}: {t:.2f}s")
+
+    state, restarts = trainer.run_with_restarts(state, args.steps)
+    losses = trainer.losses()
+    print(f"restarts: {restarts}")
+    print(f"loss: first5={losses[:5].mean():.4f} last5={losses[-5:].mean():.4f}")
+    assert losses[-5:].mean() < losses[:5].mean(), "training must reduce loss"
+    tps = args.batch * args.seq / np.mean(
+        [h["seconds"] for h in trainer.history[5:]])
+    print(f"throughput: {tps:,.0f} tokens/s on CPU; "
+          f"checkpoints at {args.ckpt_dir}: steps {trainer.ckpt.steps()}")
+    print("OK: end-to-end training with fault tolerance")
+
+
+if __name__ == "__main__":
+    main()

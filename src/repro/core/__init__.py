@@ -1,0 +1,20 @@
+# The paper's primary contribution — the BigDAWG polystore middleware,
+# adapted to TPU execution regimes (see DESIGN.md §2).
+from repro.core.tables import DenseTensor, ColumnarTable, COOMatrix, StreamBuffer
+from repro.core.ops import PolyOp, Ref
+from repro.core.engines import ENGINES, Engine
+from repro.core.islands import ISLANDS, array, relational, text, stream, degenerate
+from repro.core.signature import signature, signature_text
+from repro.core.planner import Plan, enumerate_plans, find_containers
+from repro.core.monitor import Monitor, usage_snapshot
+from repro.core.executor import execute_plan, ExecutionResult
+from repro.core.middleware import BigDAWG, Report
+
+__all__ = [
+    "DenseTensor", "ColumnarTable", "COOMatrix", "StreamBuffer",
+    "PolyOp", "Ref", "ENGINES", "Engine", "ISLANDS",
+    "array", "relational", "text", "stream", "degenerate",
+    "signature", "signature_text", "Plan", "enumerate_plans",
+    "find_containers", "Monitor", "usage_snapshot", "execute_plan",
+    "ExecutionResult", "BigDAWG", "Report",
+]

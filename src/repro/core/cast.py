@@ -1,0 +1,135 @@
+"""Casts — data migration between engine formats (paper §III-C: "the Cast
+operation sends information about the translation between data models and
+moves the data as needed").
+
+On a TPU deployment a cast is a resharding collective plus a layout/format
+conversion; here the conversions are executed directly and the *cost model*
+(bytes moved / link bandwidth + conversion cost) feeds the planner.  Dynamic-
+shape conversions (dense->COO) run eagerly — on-device they would use
+static-capacity buffers.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.tables import COOMatrix, ColumnarTable, DenseTensor, StreamBuffer
+
+# v5e ICI per-link bandwidth — shared with the roofline model
+ICI_BYTES_PER_S = 50e9
+
+
+def dense_to_columnar(d: DenseTensor) -> ColumnarTable:
+    a = np.asarray(d.data)
+    if a.ndim == 1:
+        cols = {"i": jnp.arange(a.shape[0], dtype=jnp.int32),
+                "value": jnp.asarray(a)}
+    elif a.ndim == 2:
+        n, t = a.shape
+        ii, jj = np.meshgrid(np.arange(n), np.arange(t), indexing="ij")
+        cols = {"i": jnp.asarray(ii.ravel().astype(np.int32)),
+                "j": jnp.asarray(jj.ravel().astype(np.int32)),
+                "value": jnp.asarray(a.ravel())}
+    else:
+        raise ValueError("columnar cast supports <=2D")
+    return ColumnarTable(cols)
+
+
+def columnar_to_dense(t: ColumnarTable, shape=None) -> DenseTensor:
+    v = np.asarray(t.columns["value"])
+    valid = np.asarray(t.valid)
+    if "j" in t.columns:
+        i = np.asarray(t.columns["i"])[valid]
+        j = np.asarray(t.columns["j"])[valid]
+        vv = v[valid]
+        if shape is None:
+            shape = (int(i.max()) + 1 if i.size else 0,
+                     int(j.max()) + 1 if j.size else 0)
+        out = np.zeros(shape, v.dtype)
+        out[i, j] = vv
+    else:
+        i = np.asarray(t.columns["i"])[valid]
+        vv = v[valid]
+        if shape is None:
+            shape = (int(i.max()) + 1 if i.size else 0,)
+        out = np.zeros(shape, v.dtype)
+        out[i] = vv
+    return DenseTensor(jnp.asarray(out), valid_count=int(valid.sum()))
+
+
+def dense_to_coo(d: DenseTensor) -> COOMatrix:
+    a = np.asarray(d.data)
+    assert a.ndim == 2
+    r, c = np.nonzero(a != d.fill)
+    return COOMatrix(jnp.asarray(r.astype(np.int32)),
+                     jnp.asarray(c.astype(np.int32)),
+                     jnp.asarray(a[r, c]), a.shape)
+
+
+def coo_to_dense(m: COOMatrix) -> DenseTensor:
+    out = np.zeros(m.shape, np.asarray(m.vals).dtype)
+    out[np.asarray(m.rows), np.asarray(m.cols)] = np.asarray(m.vals)
+    return DenseTensor(jnp.asarray(out), valid_count=m.nnz)
+
+
+def coo_to_columnar(m: COOMatrix) -> ColumnarTable:
+    return ColumnarTable({"i": m.rows, "j": m.cols, "value": m.vals})
+
+
+def columnar_to_coo(t: ColumnarTable, shape=None) -> COOMatrix:
+    valid = np.asarray(t.valid)
+    r = np.asarray(t.columns["i"])[valid].astype(np.int32)
+    c = np.asarray(t.columns["j"])[valid].astype(np.int32)
+    v = np.asarray(t.columns["value"])[valid]
+    if shape is None:
+        shape = (int(r.max()) + 1 if r.size else 0,
+                 int(c.max()) + 1 if c.size else 0)
+    return COOMatrix(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), shape)
+
+
+def stream_to_dense(s: StreamBuffer) -> DenseTensor:
+    d = s.data
+    if d.ndim == 2:                  # (n_windows, window_len): rows = windows
+        return DenseTensor(d)
+    return DenseTensor(d.reshape((-1,) + d.shape[2:]))
+
+
+def dense_to_stream(d: DenseTensor) -> StreamBuffer:
+    """Each row becomes one window (the ETL inverse of stream_to_dense)."""
+    a = d.data
+    assert a.ndim == 2, "stream cast expects (n_windows, window_len)"
+    return StreamBuffer(a)
+
+
+_CASTS = {
+    ("dense", "columnar"): dense_to_columnar,
+    ("columnar", "dense"): columnar_to_dense,
+    ("dense", "coo"): dense_to_coo,
+    ("coo", "dense"): coo_to_dense,
+    ("coo", "columnar"): coo_to_columnar,
+    ("columnar", "coo"): columnar_to_coo,
+    ("stream", "dense"): stream_to_dense,
+    ("dense", "stream"): dense_to_stream,
+}
+
+
+def can_cast(src_kind: str, dst_kind: str) -> bool:
+    return src_kind == dst_kind or (src_kind, dst_kind) in _CASTS
+
+
+def cast(obj, dst_kind: str):
+    if obj.kind == dst_kind:
+        return obj
+    try:
+        return _CASTS[(obj.kind, dst_kind)](obj)
+    except KeyError:
+        # two-hop through dense
+        mid = _CASTS[(obj.kind, "dense")](obj)
+        return _CASTS[("dense", dst_kind)](mid)
+
+
+def cast_cost_seconds(obj, dst_kind: str) -> float:
+    """Planner-side cast cost estimate: bytes over the interconnect."""
+    if obj.kind == dst_kind:
+        return 0.0
+    return obj.nbytes / ICI_BYTES_PER_S

@@ -1,0 +1,77 @@
+"""Executor (paper §III-C / [19]): runs a plan tree — resolves refs against
+the catalog, migrates inputs to each node's engine via the migrator, invokes
+the shim (engine op), and collects wall time + cast statistics for the
+monitor."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+import jax
+
+from repro.core.engines import ENGINES
+from repro.core.migrator import Migrator
+from repro.core.ops import PolyOp, Ref
+from repro.core.planner import Plan
+
+# the data model a query's result is delivered in = its root island's model
+ISLAND_KIND = {"array": "dense", "relational": "columnar", "text": "coo",
+               "stream": "stream"}
+
+
+@dataclass
+class ExecutionResult:
+    value: Any
+    seconds: float
+    cast_bytes: float
+    n_casts: int
+    plan: Plan
+    per_node_seconds: Dict[int, float] = field(default_factory=dict)
+
+
+def _block(x):
+    """Block on all device buffers in a container (honest timing)."""
+    for leaf in jax.tree.leaves(getattr(x, "__dict__", x)):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return x
+
+
+def execute_plan(query: PolyOp, plan: Plan, catalog) -> ExecutionResult:
+    amap = plan.engine_map(query)
+    migrator = Migrator()
+    values: Dict[int, Any] = {}
+    per_node: Dict[int, float] = {}
+    t0 = time.perf_counter()
+
+    for node in query.nodes():                  # post-order
+        eng = ENGINES[amap[node.uid]]
+        args = []
+        for inp in node.inputs:
+            if isinstance(inp, Ref):
+                obj = catalog[inp.name].obj
+            else:
+                obj = values[inp.uid]
+            args.append(migrator.to_engine(obj, eng.name))
+        tn = time.perf_counter()
+        out = eng.run(node.op, node.attrs, *args)
+        _block(out)
+        per_node[node.uid] = time.perf_counter() - tn
+        values[node.uid] = out
+
+    # deliver in the root island's data model (location transparency: the
+    # caller sees the island model regardless of which engine produced it)
+    result = values[query.uid]
+    if query.island in ISLAND_KIND:
+        want = ISLAND_KIND[query.island]
+    else:                                        # degenerate:<engine>
+        want = ENGINES[query.island.split(":", 1)[1]].kind
+    if getattr(result, "kind", want) != want:
+        from repro.core import cast as castmod
+        result = castmod.cast(result, want)
+        _block(result)
+
+    total = time.perf_counter() - t0
+    return ExecutionResult(result, total, migrator.bytes_moved,
+                           migrator.n_casts, plan, per_node)

@@ -1,0 +1,112 @@
+"""Islands — the user-facing scope abstraction (paper §III-B).
+
+Each island = (data model, operator set, member engines).  Users build
+queries by calling island operators; the island tag on each node is its
+*scope*, which tells the planner which shims (engine lowerings) are legal.
+Degenerate islands expose a single engine's full op set (semantic
+completeness at the price of location transparency).
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Set, Union
+
+from repro.core.engines import ENGINES
+from repro.core.ops import PolyOp, Ref
+
+
+def _as_input(x):
+    if isinstance(x, (PolyOp, Ref)):
+        return x
+    if isinstance(x, str):
+        return Ref(x)
+    raise TypeError(f"query inputs must be PolyOp/Ref/str, got {type(x)}")
+
+
+class Island:
+    def __init__(self, name: str, ops: Dict[str, Sequence[str]]):
+        self.name = name
+        self.ops = {op: tuple(engines) for op, engines in ops.items()}
+
+    def candidates(self, op: str) -> Sequence[str]:
+        return self.ops[op]
+
+    def _build(self, op: str, *inputs, **attrs) -> PolyOp:
+        if op not in self.ops:
+            raise ValueError(f"island {self.name!r} has no operator {op!r}")
+        return PolyOp(op=op, island=self.name,
+                      inputs=tuple(_as_input(i) for i in inputs), attrs=attrs)
+
+    def __getattr__(self, op):
+        if op.startswith("_"):
+            raise AttributeError(op)
+        if op not in self.__dict__.get("ops", {}):
+            raise AttributeError(f"island {self.name!r}: no operator {op!r}")
+        return lambda *inputs, **attrs: self._build(op, *inputs, **attrs)
+
+
+# ---------------------------------------------------------------------------
+# standard islands (engine lists are ordered by *a-priori* preference; the
+# monitor's measured history overrides this ordering in production phase)
+# ---------------------------------------------------------------------------
+
+array = Island("array", {
+    "matmul": ["dense_array", "columnar"],
+    "haar": ["dense_array", "columnar", "stream"],
+    "count": ["dense_array", "columnar", "kv_sparse"],
+    "distinct": ["dense_array", "columnar", "kv_sparse"],
+    "select": ["dense_array", "columnar"],
+    "bin_hist": ["dense_array", "columnar"],
+    "tfidf": ["dense_array", "columnar", "kv_sparse"],
+    "knn": ["dense_array", "columnar", "kv_sparse"],
+    "add": ["dense_array"],
+    "scale": ["dense_array"],
+    "transpose": ["dense_array"],
+})
+
+relational = Island("relational", {
+    "select": ["columnar"],
+    "project": ["columnar"],
+    "count": ["columnar", "dense_array", "kv_sparse"],
+    "distinct": ["columnar", "dense_array", "kv_sparse"],
+    "groupby_sum": ["columnar"],
+    "join": ["columnar"],
+    "matmul": ["columnar", "dense_array"],
+    "haar": ["columnar", "dense_array"],
+    "bin_hist": ["columnar", "dense_array"],
+    "tfidf": ["columnar", "dense_array", "kv_sparse"],
+    "knn": ["columnar", "dense_array", "kv_sparse"],
+})
+
+text = Island("text", {
+    "tfidf": ["kv_sparse"],
+    "spmm": ["kv_sparse"],
+    "knn": ["kv_sparse"],
+    "count": ["kv_sparse"],
+    "distinct": ["kv_sparse"],
+    "degree": ["kv_sparse"],
+})
+
+stream = Island("stream", {
+    "window_agg": ["stream"],
+    "haar": ["stream"],
+    "to_array": ["stream"],
+    "ingest": ["stream"],
+})
+
+
+def degenerate(engine_name: str) -> Island:
+    """Full power of one engine, zero location transparency (paper §III-B)."""
+    eng = ENGINES[engine_name]
+    return Island(f"degenerate:{engine_name}",
+                  {op: [engine_name] for op in eng.ops})
+
+
+ISLANDS: Dict[str, Island] = {
+    "array": array, "relational": relational, "text": text, "stream": stream,
+}
+for _e in ENGINES:
+    ISLANDS[f"degenerate:{_e}"] = degenerate(_e)
+
+
+def island_of(node: PolyOp) -> Island:
+    return ISLANDS[node.island]

@@ -1,0 +1,134 @@
+"""BigDAWG middleware facade (paper Fig. 3): planner + monitor + executor +
+migrator behind one ``execute()`` entry point with the training/production
+phase protocol of §III-C-3.
+
+  training   — enumerate candidate plans, run (up to ``train_plans`` of) them,
+               record stats, return the best run's result.
+  production — match the query signature in the monitor DB, run the best
+               recorded plan; on signature miss fall back to training; on
+               usage drift, re-train (paper: "rerun the query under the
+               training phase under the current usage") and queue the losers
+               for background exploration.
+  auto       — production if the signature is known, else training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.core.engines import ENGINES
+from repro.core.executor import ExecutionResult, execute_plan
+from repro.core.monitor import Monitor, usage_snapshot
+from repro.core.ops import PolyOp
+from repro.core.planner import Plan, enumerate_plans
+from repro.core.signature import signature
+
+
+def _plan_from_key(plan_key: str) -> Plan:
+    return Plan(tuple((int(u), e) for u, e in
+                      (p.split(":") for p in plan_key.split("|"))))
+
+
+@dataclass
+class CatalogEntry:
+    name: str
+    obj: Any                 # a tables.* container
+    engine: str              # home engine
+
+
+@dataclass
+class Report:
+    result: Any
+    plan_key: str
+    mode: str                # "training" | "production"
+    seconds: float
+    cast_bytes: float
+    sig: str
+    plans_tried: int = 1
+    drifted: bool = False
+
+
+class BigDAWG:
+    def __init__(self, monitor: Optional[Monitor] = None,
+                 train_plans: int = 8, train_repeats: int = 2):
+        self.catalog: Dict[str, CatalogEntry] = {}
+        self.monitor = monitor or Monitor()
+        self.train_plans = train_plans
+        # run each candidate plan this many times during training and record
+        # only the last — first-run jit/compile cost would otherwise bias the
+        # monitor toward never-compiled plans (cold-start bias)
+        self.train_repeats = max(1, train_repeats)
+
+    # -- catalog -----------------------------------------------------------
+    def register(self, name: str, obj, engine: str):
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine}")
+        if ENGINES[engine].kind != obj.kind:
+            from repro.core import cast as castmod
+            obj = castmod.cast(obj, ENGINES[engine].kind)
+        self.catalog[name] = CatalogEntry(name, obj, engine)
+
+    # -- phases --------------------------------------------------------------
+    def _train(self, query: PolyOp, sig: str) -> Report:
+        plans = enumerate_plans(query, self.catalog, max_plans=self.train_plans)
+        best: Optional[ExecutionResult] = None
+        usage = usage_snapshot()
+        for plan in plans:
+            for _ in range(self.train_repeats):
+                res = execute_plan(query, plan, self.catalog)
+            self.monitor.record(sig, plan.key, res.seconds,
+                                cast_bytes=res.cast_bytes, usage=usage)
+            if best is None or res.seconds < best.seconds:
+                best = res
+        return Report(best.value, best.plan.key, "training", best.seconds,
+                      best.cast_bytes, sig, plans_tried=len(plans))
+
+    def _production(self, query: PolyOp, sig: str) -> Report:
+        usage = usage_snapshot()
+        plan_key, stats, drifted = self.monitor.best(sig, usage)
+        if plan_key is None:
+            return self._train(query, sig)
+        if drifted:
+            # usage changed too much since training — re-train now, queue the
+            # alternates for background exploration
+            rep = self._train(query, sig)
+            for pk in self.monitor.known_plans(sig):
+                if pk != rep.plan_key:
+                    self.monitor.queue_background(sig, pk)
+            rep.drifted = True
+            return rep
+        plan = _plan_from_key(plan_key)
+        res = execute_plan(query, plan, self.catalog)
+        self.monitor.record(sig, plan_key, res.seconds,
+                            cast_bytes=res.cast_bytes, usage=usage)
+        return Report(res.value, plan_key, "production", res.seconds,
+                      res.cast_bytes, sig)
+
+    # -- public API ----------------------------------------------------------
+    def execute(self, query: PolyOp, mode: str = "auto") -> Report:
+        sig = signature(query, self.catalog)
+        if mode == "training":
+            return self._train(query, sig)
+        if mode == "production":
+            return self._production(query, sig)
+        if mode == "auto":
+            known, _, _ = self.monitor.best(sig)
+            return self._production(query, sig) if known else \
+                self._train(query, sig)
+        raise ValueError(mode)
+
+    def run_background_queue(self, query_by_sig: Dict[str, PolyOp]):
+        """Re-explore queued alternate plans 'when the system is
+        underutilized' (paper §III-C-3)."""
+        done = 0
+        while self.monitor.background_queue:
+            sig, plan_key = self.monitor.background_queue.pop()
+            if sig not in query_by_sig:
+                continue
+            res = execute_plan(query_by_sig[sig], _plan_from_key(plan_key),
+                               self.catalog)
+            self.monitor.record(sig, plan_key, res.seconds,
+                                cast_bytes=res.cast_bytes)
+            done += 1
+        return done

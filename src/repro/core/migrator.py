@@ -1,0 +1,26 @@
+"""Migrator (paper §III-C / [18]): executes casts between engines and keeps
+account of the bytes moved (the executor charges them to the plan's stats)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import cast as castmod
+from repro.core.engines import ENGINES
+
+
+@dataclass
+class Migrator:
+    bytes_moved: float = 0.0
+    n_casts: int = 0
+
+    def to_engine(self, obj, engine_name: str):
+        eng = ENGINES[engine_name]
+        if obj.kind == eng.kind:
+            return obj
+        self.bytes_moved += obj.nbytes
+        self.n_casts += 1
+        return castmod.cast(obj, eng.kind)
+
+    def reset(self):
+        self.bytes_moved = 0.0
+        self.n_casts = 0

@@ -1,0 +1,111 @@
+"""Performance monitor (paper §III-C / [17]): a history DB keyed by query
+signature, holding per-plan statistics and the system-usage snapshot at
+measurement time.  Production-phase matching compares the current usage
+snapshot against the recorded one; large drift triggers retraining advice
+(paper: "the optimizer may ... recommend that the user rerun the query under
+the training phase under the current usage").
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import time
+from dataclasses import dataclass, field, asdict
+from typing import Dict, Optional
+
+import jax
+
+
+@dataclass
+class PlanStats:
+    mean_seconds: float = 0.0
+    n: int = 0
+    last_seconds: float = 0.0
+    cast_bytes: float = 0.0
+    usage: Dict[str, float] = field(default_factory=dict)
+    extra: Dict[str, float] = field(default_factory=dict)
+
+    def record(self, seconds: float, usage: Dict[str, float],
+               cast_bytes: float = 0.0, extra: Optional[Dict] = None):
+        self.mean_seconds = (self.mean_seconds * self.n + seconds) / (self.n + 1)
+        self.n += 1
+        self.last_seconds = seconds
+        self.cast_bytes = cast_bytes
+        self.usage = dict(usage)
+        if extra:
+            self.extra.update(extra)
+
+
+def usage_snapshot() -> Dict[str, float]:
+    ru = resource.getrusage(resource.RUSAGE_SELF)
+    return {
+        "devices": float(jax.device_count()),
+        "rss_gb": ru.ru_maxrss / 1e6,
+        "time": time.time(),
+    }
+
+
+def usage_drift(a: Dict[str, float], b: Dict[str, float]) -> float:
+    """Relative drift between two snapshots (0 = identical environment)."""
+    d = 0.0
+    for k in ("devices", "rss_gb"):
+        va, vb = a.get(k, 0.0), b.get(k, 0.0)
+        if max(va, vb) > 0:
+            d = max(d, abs(va - vb) / max(va, vb))
+    return d
+
+
+class Monitor:
+    """signature -> {plan_key: PlanStats}; JSON-persistent."""
+
+    DRIFT_THRESHOLD = 0.5
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.db: Dict[str, Dict[str, PlanStats]] = {}
+        self.background_queue: list = []     # plans to re-explore when idle
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- recording ---------------------------------------------------------
+    def record(self, sig: str, plan_key: str, seconds: float,
+               cast_bytes: float = 0.0, extra: Optional[Dict] = None,
+               usage: Optional[Dict[str, float]] = None):
+        entry = self.db.setdefault(sig, {}).setdefault(plan_key, PlanStats())
+        entry.record(seconds, usage or usage_snapshot(), cast_bytes, extra)
+
+    # -- production-phase matching ------------------------------------------
+    def best(self, sig: str, usage: Optional[Dict[str, float]] = None):
+        """Returns (plan_key, stats, drifted).  (None, None, False) if the
+        signature has never been trained."""
+        plans = self.db.get(sig)
+        if not plans:
+            return None, None, False
+        key, stats = min(plans.items(), key=lambda kv: kv[1].mean_seconds)
+        drifted = False
+        if usage is not None and stats.usage:
+            drifted = usage_drift(usage, stats.usage) > self.DRIFT_THRESHOLD
+        return key, stats, drifted
+
+    def known_plans(self, sig: str) -> Dict[str, PlanStats]:
+        return self.db.get(sig, {})
+
+    def queue_background(self, sig: str, plan_key: str):
+        self.background_queue.append((sig, plan_key))
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: Optional[str] = None):
+        path = path or self.path
+        if not path:
+            return
+        blob = {sig: {pk: asdict(st) for pk, st in plans.items()}
+                for sig, plans in self.db.items()}
+        with open(path, "w") as f:
+            json.dump(blob, f, indent=1)
+
+    def load(self, path: str):
+        with open(path) as f:
+            blob = json.load(f)
+        self.db = {sig: {pk: PlanStats(**st) for pk, st in plans.items()}
+                   for sig, plans in blob.items()}

@@ -1,0 +1,129 @@
+"""Query planner (paper §III-C-1): parse the PolyOp DAG into *containers*
+(maximal subtrees executable on one engine) plus the cross-engine *remainder*,
+then enumerate candidate plan trees (engine assignments per container).
+
+Candidate ordering: fewest casts first, then data-home affinity.  The monitor
+re-orders these with measured history in production phase.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core import cast as castmod
+from repro.core.islands import ISLANDS
+from repro.core.engines import ENGINES
+from repro.core.ops import PolyOp, Ref
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Engine assignment per op node, keyed by *post-order position* — stable
+    across structurally-identical query rebuilds (unlike object identity), so
+    monitor-stored plan keys apply to re-issued queries (paper §III-C-3)."""
+    assignment: Tuple[Tuple[int, str], ...]
+
+    @property
+    def key(self) -> str:
+        return "|".join(f"{u}:{e}" for u, e in self.assignment)
+
+    def engine_map(self, query: PolyOp) -> Dict[int, str]:
+        """node uid -> engine, for this specific query instance."""
+        amap = dict(self.assignment)
+        return {n.uid: amap[i] for i, n in enumerate(query.nodes())}
+
+    def describe(self, query: PolyOp) -> str:
+        amap = dict(self.assignment)
+        return " ".join(f"{n.op}@{amap[i]}"
+                        for i, n in enumerate(query.nodes()))
+
+
+def node_candidates(node: PolyOp) -> Sequence[str]:
+    return ISLANDS[node.island].candidates(node.op)
+
+
+@dataclass
+class ContainerInfo:
+    nodes: List[PolyOp] = field(default_factory=list)
+    candidates: Tuple[str, ...] = ()
+
+
+def find_containers(query: PolyOp) -> List[ContainerInfo]:
+    """Greedy bottom-up grouping: merge a node into its child's container when
+    they share a candidate engine; otherwise start a new container (a cast
+    edge — part of the remainder)."""
+    containers: List[ContainerInfo] = []
+    owner: Dict[int, int] = {}            # node uid -> container index
+
+    for node in query.nodes():            # post-order
+        cands = tuple(node_candidates(node))
+        merged = False
+        for inp in node.inputs:
+            if isinstance(inp, PolyOp):
+                ci = owner[inp.uid]
+                shared = tuple(e for e in containers[ci].candidates
+                               if e in cands)
+                if shared and not merged:
+                    containers[ci].nodes.append(node)
+                    containers[ci].candidates = shared
+                    owner[node.uid] = ci
+                    merged = True
+        if not merged:
+            containers.append(ContainerInfo([node], cands))
+            owner[node.uid] = len(containers) - 1
+    return containers
+
+
+def _home_affinity(container: ContainerInfo, engine: str, catalog) -> int:
+    """Number of referenced objects already resident on `engine`."""
+    n = 0
+    for node in container.nodes:
+        for inp in node.inputs:
+            if isinstance(inp, Ref) and catalog is not None \
+                    and inp.name in catalog:
+                if catalog[inp.name].engine == engine:
+                    n += 1
+    return n
+
+
+def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16) -> List[Plan]:
+    """Per-node engine assignment product (capped).  Containers (single-engine
+    runs) emerge from the assignment; keeping the product at node granularity
+    preserves hybrid plans that container-first merging would lose."""
+    nodes = query.nodes()
+    per_node: List[List[str]] = []
+    for n in nodes:
+        cands = list(node_candidates(n))
+        c = ContainerInfo([n], tuple(cands))
+        cands.sort(key=lambda e: -_home_affinity(c, e, catalog))
+        per_node.append(cands)
+
+    plans = []
+    for combo in itertools.product(*per_node):
+        plans.append(Plan(tuple((i, e) for i, e in enumerate(combo))))
+        if len(plans) >= max_plans:
+            break
+
+    # fewest-cast plans first
+    plans.sort(key=lambda p: estimate_casts(query, p, catalog))
+    return plans
+
+
+def estimate_casts(query: PolyOp, plan: Plan, catalog=None) -> float:
+    """Planner-side cost: seconds of cast traffic a plan implies."""
+    amap = plan.engine_map(query)
+    cost = 0.0
+    for node in query.nodes():
+        eng = ENGINES[amap[node.uid]]
+        for inp in node.inputs:
+            if isinstance(inp, PolyOp):
+                src = ENGINES[amap[inp.uid]]
+                if src.kind != eng.kind:
+                    cost += 1e-6  # structural penalty; real bytes unknown pre-run
+            elif catalog is not None and inp.name in catalog:
+                entry = catalog[inp.name]
+                src_kind = ENGINES[entry.engine].kind
+                cost += castmod.cast_cost_seconds(entry.obj, eng.kind) \
+                    if src_kind != eng.kind else 0.0
+    return cost

@@ -1,0 +1,95 @@
+"""Polystore data containers — one native format per engine family.
+
+These mirror the paper's data models: SciDB arrays -> DenseTensor, relational
+rows -> ColumnarTable, Accumulo/D4M associative arrays -> COOMatrix, S-Store
+windows -> StreamBuffer.  ``nbytes``/``describe`` feed the cast cost model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class DenseTensor:
+    """Array-engine native: a dense (possibly padded) tensor.
+
+    ``valid_count`` is container metadata (SciDB-style): count() is O(1) here
+    but a full scan in the columnar engine — the Fig.1 crossover.
+    """
+    data: jnp.ndarray
+    valid_count: int = -1
+    fill: float = 0.0
+
+    def __post_init__(self):
+        if self.valid_count < 0:
+            self.valid_count = int(np.prod(self.data.shape))
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize
+
+    kind = "dense"
+
+
+@dataclass
+class ColumnarTable:
+    """Relational-engine native: named columns + validity mask (lazy deletes)."""
+    columns: Dict[str, jnp.ndarray]
+    valid: jnp.ndarray = None    # (N,) bool
+
+    def __post_init__(self):
+        n = self.nrows
+        if self.valid is None:
+            self.valid = jnp.ones((n,), bool)
+
+    @property
+    def nrows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(c.size * c.dtype.itemsize for c in self.columns.values())
+
+    kind = "columnar"
+
+
+@dataclass
+class COOMatrix:
+    """KV/associative-array native (D4M style): (row, col, val) triples."""
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    vals: jnp.ndarray
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return (self.rows.size * self.rows.dtype.itemsize
+                + self.cols.size * self.cols.dtype.itemsize
+                + self.vals.size * self.vals.dtype.itemsize)
+
+    kind = "coo"
+
+
+@dataclass
+class StreamBuffer:
+    """Stream-engine native: window-major ring buffer of samples."""
+    data: jnp.ndarray            # (n_windows, window_len, ...) newest last
+    t0: int = 0                  # timestamp of the first window
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize
+
+    kind = "stream"
+
+
+FORMATS = {"dense": DenseTensor, "columnar": ColumnarTable, "coo": COOMatrix,
+           "stream": StreamBuffer}

@@ -1,0 +1,83 @@
+"""Tensor plans — BigDAWG's planner/monitor protocol applied to compiled SPMD
+steps (DESIGN.md §2, "second-level integration").
+
+A PlanConfig is an *engine choice* for a (architecture × input-shape × mesh)
+cell: sharding regime, remat policy, accumulation depth, attention layout.
+``default_plan`` is the a-priori candidate (the paper's island preference
+order); ``enumerate_variants`` is the training-phase plan space; the dry-run's
+roofline terms are the stats the monitor records; production picks the plan
+with the lowest dominant roofline term.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig, PlanConfig, ShapeConfig
+from repro.core.monitor import Monitor
+
+# accumulation depth needed to fit 16 GiB/chip activations at train_4k
+# (boundary-activation napkin math in DESIGN.md §5)
+_TRAIN_ACCUM = {
+    "qwen2-72b": 8, "grok-1-314b": 16, "internvl2-26b": 4,
+    "codeqwen1.5-7b": 2, "glm4-9b": 2, "zamba2-7b": 4,
+    "deepseek-v2-lite-16b": 2,
+}
+
+
+def default_plan(cfg: ArchConfig, shape: ShapeConfig) -> PlanConfig:
+    plan = PlanConfig(name="baseline")
+    if shape.mode == "train":
+        plan = plan.with_(accum=_TRAIN_ACCUM.get(cfg.name, 1))
+    if cfg.name == "grok-1-314b":
+        plan = plan.with_(moment_dtype="bfloat16")   # 10 B/param, fits v5e
+    if shape.mode != "train":
+        plan = plan.with_(remat="none")
+    return plan
+
+
+def enumerate_variants(cfg: ArchConfig, shape: ShapeConfig) -> List[PlanConfig]:
+    """Training-phase plan space for hillclimbing (§Perf)."""
+    base = default_plan(cfg, shape)
+    variants = [base]
+    if shape.mode == "train":
+        for a in (1, 2, 4, 8, 16):
+            if a != base.accum and shape.global_batch % a == 0:
+                variants.append(base.with_(name=f"accum{a}", accum=a))
+        variants.append(base.with_(name="no_sp", sp_boundary=False))
+        variants.append(base.with_(name="no_fsdp", fsdp=False))
+        variants.append(base.with_(name="remat_none", remat="none"))
+    if shape.mode == "prefill":
+        for c in (512, 2048, 4096):
+            variants.append(base.with_(name=f"chunk{c}", attn_chunk=c))
+    if shape.mode == "decode":
+        variants.append(base.with_(name="cache_replicated",
+                                   cache_seq_shard=False))
+    if cfg.moe is not None:
+        variants.append(base.with_(name="no_ep", moe_ep=False))
+    variants.append(base.with_(name="no_tp", tp=False))
+    return variants
+
+
+def cell_signature(cfg: ArchConfig, shape: ShapeConfig, mesh_kind: str) -> str:
+    """The monitor key for a compiled-step cell — structure+objects+constants,
+    like the query signatures in core/signature.py."""
+    return f"cell:{cfg.name}|{shape.name}|{mesh_kind}"
+
+
+class TensorPlanSelector:
+    """Production-phase plan pick from recorded roofline stats."""
+
+    def __init__(self, monitor: Monitor):
+        self.monitor = monitor
+
+    def record(self, cfg, shape, mesh_kind, plan: PlanConfig,
+               terms: Dict[str, float]):
+        sig = cell_signature(cfg, shape, mesh_kind)
+        dominant = max(terms["t_compute"], terms["t_memory"],
+                       terms["t_collective"])
+        self.monitor.record(sig, plan.name, dominant, extra=dict(terms))
+
+    def best(self, cfg, shape, mesh_kind):
+        sig = cell_signature(cfg, shape, mesh_kind)
+        key, stats, _ = self.monitor.best(sig)
+        return key, stats

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (mimic_like_dataset, ecg_waveforms,
+                                  patients_table, notes_coo)
+from repro.data.tokens import TokenStream
+from repro.data.loader import ShardedLoader
+
+__all__ = ["mimic_like_dataset", "ecg_waveforms", "patients_table",
+           "notes_coo", "TokenStream", "ShardedLoader"]

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: causal flash attention (forward).
+
+Grid: (batch·heads, q-blocks, kv-blocks) with the kv axis innermost.  Running
+max / denominator / unnormalized accumulator live in VMEM scratch; the output
+block is written once, on the final kv step for its q block.  Causal blocks
+strictly above the diagonal are skipped via ``pl.when`` (no wasted MXU work —
+this is the advantage over the jnp chunked path used for dry-runs, which
+computes then masks).
+
+Block shapes default to (128, head_dim) q-blocks × (512, head_dim) kv-blocks:
+q, k, v, acc blocks together stay under ~1 MiB for head_dim 128 — far inside
+VMEM — while keeping the MXU contraction dim ≥ 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip blocks fully above the diagonal
+    run = True
+    if causal:
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, block_q: int = 128,
+                           block_k: int = 512, interpret: bool = False):
+    """q, k, v: (BH, S, d) — KV already expanded to query heads."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk //= 2
+    grid = (bh, sq // bq, sk // bk)
+    scale = 1.0 / math.sqrt(d)
+    return pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, block_q=bq, block_k=bk,
+                          causal=causal, kv_blocks=sk // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # unnormalized accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: kNN score matrix (test @ trainᵀ) as a tiled MXU matmul.
+
+Tiling: (block_b × block_v) @ (block_v × block_n) with the contraction as the
+innermost grid axis and an f32 VMEM accumulator block; all matmul dims are
+kept at multiples of 128 to map onto the 128×128 MXU.  Top-k runs outside the
+kernel (it is O(B·N) and bandwidth-trivial next to the GEMM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(t_ref, x_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.dot(t_ref[...], x_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+
+def _pick(block, dim):
+    b = min(block, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_n", "block_v", "interpret"))
+def knn_scores_pallas(train: jnp.ndarray, test: jnp.ndarray,
+                      block_b: int = 128, block_n: int = 256,
+                      block_v: int = 512, interpret: bool = False):
+    """train: (N, V); test: (B, V) -> scores (B, N) f32."""
+    n, v = train.shape
+    b = test.shape[0]
+    bb, bn, bv = _pick(block_b, b), _pick(block_n, n), _pick(block_v, v)
+    grid = (b // bb, n // bn, v // bv)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bv), lambda i, j, k: (i, k)),   # test block
+            pl.BlockSpec((bn, bv), lambda i, j, k: (j, k)),   # train block
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(test, train)
+
+
+def knn_pallas(train, test, k, interpret: bool = False):
+    scores = knn_scores_pallas(train, test, interpret=interpret)
+    s, idx = jax.lax.top_k(scores, k)
+    return idx, s

@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
+(this CPU container) the pure-jnp references execute, and the kernels
+themselves are validated against those references in interpret mode by
+tests/test_kernels.py.  Set REPRO_FORCE_PALLAS=interpret to route these
+wrappers through the interpret-mode kernels (slow; used by the kernel tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.haar import haar_pallas
+from repro.kernels.knn import knn_pallas, knn_scores_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_intra_pallas
+
+
+def _mode() -> str:
+    forced = os.environ.get("REPRO_FORCE_PALLAS", "")
+    if forced:
+        return forced                     # "interpret" | "compiled" | "ref"
+    return "compiled" if jax.default_backend() == "tpu" else "ref"
+
+
+def haar(x: jnp.ndarray, levels: int) -> jnp.ndarray:
+    m = _mode()
+    if m == "ref":
+        return ref.haar_ref(x, levels)
+    return haar_pallas(x, levels, interpret=(m == "interpret"))
+
+
+def knn(train: jnp.ndarray, test: jnp.ndarray, k: int):
+    m = _mode()
+    if m == "ref":
+        return ref.knn_ref(train, test, k)
+    return knn_pallas(train, test, k, interpret=(m == "interpret"))
+
+
+def knn_scores(train, test):
+    m = _mode()
+    if m == "ref":
+        return ref.knn_scores_ref(train, test)
+    return knn_scores_pallas(train, test, interpret=(m == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q, k, v: (BH, S, d)."""
+    m = _mode()
+    if m == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=(m == "interpret"))
+
+
+def ssd_intra(x, da, B, C):
+    m = _mode()
+    if m == "ref":
+        return ref.ssd_intra_ref(x, da, B, C)
+    return ssd_intra_pallas(x, da, B, C, interpret=(m == "interpret"))

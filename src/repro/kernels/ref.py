@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU) and the execution path used off-TPU by ``kernels.ops``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def haar_ref(x: jnp.ndarray, levels: int) -> jnp.ndarray:
+    """Multi-level Haar DWT over the last axis: [a_L, d_L, ..., d_1]."""
+    inv = 1.0 / math.sqrt(2.0)
+    details = []
+    a = x
+    for _ in range(levels):
+        e, o = a[..., 0::2], a[..., 1::2]
+        details.append((e - o) * inv)
+        a = (e + o) * inv
+    return jnp.concatenate([a] + details[::-1], axis=-1)
+
+
+def knn_scores_ref(train: jnp.ndarray, test: jnp.ndarray) -> jnp.ndarray:
+    """Dot-product scores.  train: (N, V); test: (B, V) -> (B, N)."""
+    return jnp.einsum("bv,nv->bn", test.astype(jnp.float32),
+                      train.astype(jnp.float32))
+
+
+def knn_ref(train, test, k):
+    scores = knn_scores_ref(train, test)
+    s, idx = jax.lax.top_k(scores, k)
+    return idx, s
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q,k,v: (BH, S, d) -> (BH, S, d), f32 softmax."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    if causal:
+        S = q.shape[1]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def ssd_intra_ref(x, da, B, C):
+    """Intra-chunk SSD (one chunk, batched): the quadratic dual form.
+
+    x: (b, Q, h, p) pre-multiplied by dt; da: (b, Q, h); B, C: (b, Q, g, n).
+    Returns (y (b,Q,h,p), states (b,h,n,p), chunk_decay (b,h)) where states is
+    this chunk's contribution decayed to the chunk end and chunk_decay is
+    exp(sum da).
+    """
+    b, Q, h, p = x.shape
+    g = B.shape[2]
+    hg = h // g
+    daT = da.transpose(0, 2, 1).astype(jnp.float32)       # (b, h, Q)
+    cs = jnp.cumsum(daT, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lm = jnp.exp(jnp.where(mask, diff, -jnp.inf))         # (b, h, Q, Q)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    xf = x.astype(jnp.float32).reshape(b, Q, g, hg, p)
+    G = jnp.einsum("bqgn,bkgn->bgqk", Cf, Bf)
+    M = G.reshape(b, g, 1, Q, Q) * Lm.reshape(b, g, hg, Q, Q)
+    y = jnp.einsum("bghqk,bkghp->bqghp", M, xf).reshape(b, Q, h, p)
+    decay_states = jnp.exp(cs[..., -1:] - cs)             # (b, h, Q)
+    dsg = decay_states.reshape(b, g, hg, Q)
+    states = jnp.einsum("bkgn,bghk,bkghp->bghnp", Bf, dsg, xf)
+    states = states.reshape(b, h, B.shape[-1], p)
+    chunk_decay = jnp.exp(cs[..., -1])                    # (b, h)
+    return y.astype(x.dtype), states, chunk_decay

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk compute.
+
+The quadratic (attention-like) intra-chunk term dominates SSD FLOPs; the
+inter-chunk recurrence is a cheap sequential scan left in jnp.  Grid:
+(batch, head-block).  Head blocks live inside a single B/C group (g_blk = 1),
+so the decay matrix L = exp(segsum(da)) is materialized per head block only:
+(block_h, Q, Q) f32 at Q=128, block_h=32 is 2 MiB of VMEM.  Each grid cell
+produces the chunk output, the end-of-chunk state contribution, and the chunk
+decay in one VMEM residency.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, st_ref, cd_ref, *, q: int):
+    x = x_ref[0].astype(jnp.float32)      # (Q, bh, p)  (pre-multiplied by dt)
+    da = da_ref[0].astype(jnp.float32)    # (Q, bh)
+    B = b_ref[0, :, 0].astype(jnp.float32)   # (Q, n) — this block's group
+    C = c_ref[0, :, 0].astype(jnp.float32)
+
+    daT = da.T                            # (bh, Q)
+    cs = jnp.cumsum(daT, axis=-1)
+    diff = cs[:, :, None] - cs[:, None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    Lm = jnp.where(mask[None], jnp.exp(jnp.where(mask[None], diff, 0.0)), 0.0)
+
+    G = jnp.einsum("qn,kn->qk", C, B)     # (Q, Q)
+    M = G[None] * Lm                      # (bh, Q, Q)
+    y = jnp.einsum("hqk,khp->qhp", M, x)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_states = jnp.exp(cs[:, -1:] - cs)               # (bh, Q)
+    states = jnp.einsum("kn,hk,khp->hnp", B, decay_states, x)
+    st_ref[0] = states.astype(st_ref.dtype)
+    cd_ref[0] = jnp.exp(cs[:, -1]).astype(cd_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssd_intra_pallas(x, da, B, C, block_h: int = 32, interpret: bool = False):
+    """Intra-chunk SSD for one chunk, batched.
+
+    x: (b, Q, h, p) pre-multiplied by dt; da: (b, Q, h); B, C: (b, Q, g, n).
+    Returns (y (b,Q,h,p), states (b,h,n,p), chunk_decay (b,h)).
+    """
+    b, q, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    bh = min(block_h, hg)
+    while hg % bh:                        # largest divisor of hg <= block_h
+        bh -= 1
+    grid = (b, h // bh)
+
+    y, st, cd = pl.pallas_call(
+        functools.partial(_ssd_kernel, q=q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, bh, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, q, bh), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, (j * bh) // hg, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda i, j: (i, 0, (j * bh) // hg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, bh, p), lambda i, j: (i, 0, j, 0)),
+            pl.BlockSpec((1, bh, n, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, q, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, da, B, C)
+    return y, st, cd

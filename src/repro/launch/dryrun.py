@@ -1,0 +1,385 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Placeholder host devices exist ONLY for the dry-run (smoke tests and
+# benchmarks run in their own processes and see 1 device).
+
+"""Multi-pod dry-run: prove every (architecture × input-shape × mesh) cell
+lowers, compiles, fits, and expose its roofline terms — without hardware.
+
+Per cell:
+  memory compile  full-depth program with lax.scan layer stacks (accurate CPU
+                  scheduling) -> memory_analysis() is the fits-proof.
+  cost probes     python-unrolled programs at depths L1/L2 (single-pod only);
+                  totals extrapolate linearly in scan depth.  Needed because
+                  cost_analysis() counts a while body once (DESIGN.md §5).
+                  Training cells probe grad-only steps at the true microbatch
+                  and scale by the accumulation count; the optimizer update is
+                  compiled separately at FULL size (exact, no extrapolation).
+  collectives     parsed from compiled HLO text (post-SPMD, per-device shapes)
+                  with a ring-model multiplier for all-reduce.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k \
+      [--multi-pod] [--plan-name baseline] [--set accum=4 sp_boundary=false]
+      [--out artifacts/...json] [--skip-cost]
+"""
+import argparse
+import dataclasses
+import json
+import math
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, PlanConfig, SHAPES_BY_NAME, get_arch,
+                           shape_applicable)
+from repro.core.tensorplan import default_plan
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.models import api
+from repro.models.partition import plan_scope
+from repro.optim import AdamW
+
+# v5e hardware constants (roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+                "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+                "u64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"= (?P<shapes>.+?) (?P<op>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str):
+    """Per-device collective bytes from post-SPMD HLO.  all-reduce counts 2x
+    (ring reduce-scatter + all-gather); others count their result size."""
+    total = 0.0
+    breakdown = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("shapes")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        factor = 2.0 if op == "all-reduce" else 1.0
+        total += nbytes * factor
+        rec = breakdown.setdefault(op, [0, 0.0])
+        rec[0] += 1
+        rec[1] += nbytes * factor
+    return total, {k: {"count": v[0], "bytes": v[1]}
+                   for k, v in breakdown.items()}
+
+
+def _probe_cfg(cfg, depth_units: int):
+    """Reduced-depth config with `depth_units` scan iterations."""
+    if cfg.family == "hybrid":
+        nl = cfg.attn_period * depth_units + \
+            (cfg.num_layers % cfg.attn_period)
+        return dataclasses.replace(cfg, num_layers=nl)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, num_layers=depth_units,
+                                   encoder_layers=depth_units)
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    return dataclasses.replace(cfg, num_layers=prefix + depth_units)
+
+
+def scan_depth(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_period
+    prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    return cfg.num_layers - prefix
+
+
+def _shardings(mesh, spec_tree):
+    return api.to_shardings(mesh, spec_tree)
+
+
+def _compile_stats(compiled):
+    m = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll, breakdown = parse_collective_bytes(txt)
+    return {
+        "arg_bytes": m.argument_size_in_bytes,
+        "out_bytes": m.output_size_in_bytes,
+        "temp_bytes": m.temp_size_in_bytes,
+        "alias_bytes": m.alias_size_in_bytes,
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": coll,
+        "coll_breakdown": breakdown,
+        "hlo_chars": len(txt),
+    }
+
+
+def _lower_train(cfg, shape, plan, mesh, *, micro_only=False, grad_only=False):
+    """Returns compiled stats for the train step (or grad-only probe)."""
+    opt = AdamW(learning_rate=1e-4, moment_dtype=plan.moment_dtype)
+    with plan_scope(mesh, plan):
+        batch = api.example_batch(cfg, shape, plan)
+        if micro_only:
+            A = plan.accum
+            batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((s.shape[0] // A,) + s.shape[1:],
+                                               s.dtype), batch)
+            plan = plan.with_(accum=1)
+        state_sds = jax.eval_shape(
+            lambda k: api.init_train_state(cfg, plan, k, opt),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        sspec = api.train_state_specs(cfg, plan, state_sds)
+        bspec = api.batch_specs(cfg, plan, batch)
+        sshard = _shardings(mesh, sspec)
+        bshard = _shardings(mesh, bspec)
+
+        if grad_only:
+            loss_fn = api.get_loss_fn(cfg, plan)
+            cdt = jnp.dtype(plan.compute_dtype)
+
+            def grad_step(master, b):
+                return jax.value_and_grad(
+                    lambda m, bb: loss_fn(api.cast_params(m, cdt), bb))(master, b)
+
+            fn = jax.jit(grad_step, in_shardings=(sshard["master"], bshard),
+                         out_shardings=(None, sshard["master"]))
+            lowered = fn.lower(state_sds["master"], batch)
+        else:
+            step = api.make_train_step(cfg, plan, opt)
+            fn = jax.jit(step, in_shardings=(sshard, bshard),
+                         out_shardings=(sshard, None), donate_argnums=(0,))
+            lowered = fn.lower(state_sds, batch)
+        t0 = time.time()
+        compiled = lowered.compile()
+        stats = _compile_stats(compiled)
+        stats["compile_s"] = time.time() - t0
+        return stats
+
+
+def _lower_opt_update(cfg, plan, mesh):
+    """Full-size optimizer update probe (elementwise; exact at full depth)."""
+    opt = AdamW(learning_rate=1e-4, moment_dtype=plan.moment_dtype)
+    with plan_scope(mesh, plan):
+        master_sds = jax.eval_shape(
+            lambda k: api.init_params(
+                cfg, k, plan.with_(param_dtype=plan.master_dtype)),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        opt_sds = jax.eval_shape(opt.init, master_sds)
+        pspec = api.param_specs(cfg, plan, master_sds)
+        pshard = _shardings(mesh, pspec)
+        oshard = {"m": pshard, "v": pshard,
+                  "count": _shardings(mesh, jax.sharding.PartitionSpec())}
+        gshard = pshard
+        fn = jax.jit(opt.update,
+                     in_shardings=(gshard, oshard, pshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(1, 2))
+        lowered = fn.lower(master_sds, opt_sds, master_sds)
+        t0 = time.time()
+        compiled = lowered.compile()
+        stats = _compile_stats(compiled)
+        stats["compile_s"] = time.time() - t0
+        return stats
+
+
+def _lower_serve(cfg, shape, plan, mesh):
+    with plan_scope(mesh, plan):
+        if shape.mode == "decode":
+            cache_sds = api.example_cache(cfg, shape, plan)
+            batch = api.example_batch(cfg, shape, plan)
+            cspec = api.cache_specs(cfg, plan, cache_sds)
+            bspec = api.batch_specs(cfg, plan, batch)
+            pspec_sds = jax.eval_shape(
+                lambda k: api.init_params(cfg, k, plan),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            pspec = api.param_specs(cfg, plan, pspec_sds)
+            step = api.make_decode_step(cfg, shape, plan)
+            fn = jax.jit(step,
+                         in_shardings=(_shardings(mesh, pspec),
+                                       _shardings(mesh, cspec),
+                                       _shardings(mesh, bspec["tokens"]),
+                                       _shardings(mesh, bspec["pos"])),
+                         donate_argnums=(1,))
+            lowered = fn.lower(pspec_sds, cache_sds, batch["tokens"],
+                               batch["pos"])
+        else:                                        # prefill
+            batch = api.example_batch(cfg, shape, plan)
+            pspec_sds = jax.eval_shape(
+                lambda k: api.init_params(cfg, k, plan),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            pspec = api.param_specs(cfg, plan, pspec_sds)
+            bspec = api.batch_specs(cfg, plan, batch)
+            fn = jax.jit(api.make_prefill(cfg, shape, plan),
+                         in_shardings=(_shardings(mesh, pspec),
+                                       _shardings(mesh, bspec)))
+            lowered = fn.lower(pspec_sds, batch)
+        t0 = time.time()
+        compiled = lowered.compile()
+        stats = _compile_stats(compiled)
+        stats["compile_s"] = time.time() - t0
+        return stats
+
+
+def _combine(base, delta, n):
+    """base + n * delta for the cost keys."""
+    out = {}
+    for k in ("flops", "bytes", "coll_bytes"):
+        out[k] = base[k] + n * delta[k]
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             plan: PlanConfig, skip_cost: bool = False) -> dict:
+    cfg = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_kind = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    record = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "plan": dataclasses.asdict(plan), "applicable": ok, "skip_reason": why,
+        "params": api.count_params(cfg),
+        "active_params": api.count_params(cfg, active_only=True),
+    }
+    if not ok:
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ndev = mesh_devices(multi_pod=multi_pod)
+    if shape.mode == "train":
+        # microbatches must still shard over the DP axes
+        dp = 32 if multi_pod else 16
+        max_accum = max(shape.global_batch // dp, 1)
+        if plan.accum > max_accum:
+            plan = plan.with_(accum=max_accum)
+            record["plan"] = dataclasses.asdict(plan)
+
+    # ---- memory compile (the fits-proof) --------------------------------
+    if shape.mode == "train":
+        mem = _lower_train(cfg, shape, plan, mesh)
+    else:
+        mem = _lower_serve(cfg, shape, plan, mesh)
+    record["memory"] = mem
+    hbm = (mem["arg_bytes"] + mem["temp_bytes"] + mem["out_bytes"]
+           - mem["alias_bytes"])
+    record["hbm_bytes_per_device"] = hbm
+    record["fits_16g"] = bool(hbm < 16e9)
+
+    if skip_cost or multi_pod:
+        return record
+
+    # ---- cost probes (single-pod roofline) -------------------------------
+    probe_plan = plan.with_(unroll_inner=True, unroll_layers=True)
+    L = scan_depth(cfg)
+    c1 = _probe_cfg(cfg, 1)
+    c2 = _probe_cfg(cfg, 2)
+    if shape.mode == "train":
+        g1 = _lower_train(c1, shape, probe_plan, mesh, micro_only=True,
+                          grad_only=True)
+        g2 = _lower_train(c2, shape, probe_plan, mesh, micro_only=True,
+                          grad_only=True)
+        opt_cost = _lower_opt_update(cfg, plan, mesh)
+        delta = {k: g2[k] - g1[k] for k in ("flops", "bytes", "coll_bytes")}
+        per_micro = _combine(g1, delta, L - 1)
+        cost = {k: plan.accum * per_micro[k] + opt_cost[k]
+                for k in ("flops", "bytes", "coll_bytes")}
+        record["probes"] = {"g1": g1, "g2": g2, "opt": opt_cost}
+    else:
+        s1 = _lower_serve(c1, shape, probe_plan, mesh)
+        s2 = _lower_serve(c2, shape, probe_plan, mesh)
+        delta = {k: s2[k] - s1[k] for k in ("flops", "bytes", "coll_bytes")}
+        cost = _combine(s1, delta, L - 1)
+        record["probes"] = {"s1": s1, "s2": s2}
+    record["cost"] = cost
+
+    # ---- roofline terms ---------------------------------------------------
+    n_act = record["active_params"]
+    if shape.mode == "train":
+        model_flops = 6.0 * n_act * shape.tokens
+    elif shape.mode == "prefill":
+        model_flops = 2.0 * n_act * shape.tokens
+    else:
+        model_flops = 2.0 * n_act * shape.global_batch
+    mf_dev = model_flops / ndev
+    t_compute = cost["flops"] / PEAK_FLOPS
+    t_memory = cost["bytes"] / HBM_BW
+    t_collective = cost["coll_bytes"] / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_collective, "collective"))
+    record["roofline"] = {
+        "t_compute": t_compute, "t_memory": t_memory,
+        "t_collective": t_collective,
+        "dominant": dominant[1],
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": mf_dev / max(cost["flops"], 1.0),
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / max(
+            t_compute, t_memory, t_collective),
+    }
+    return record
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES_BY_NAME))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--plan-name", default=None)
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="plan overrides: accum=4 sp_boundary=false ...")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    shape = SHAPES_BY_NAME[args.shape]
+    plan = default_plan(cfg, shape)
+    ov = _parse_overrides(args.set)
+    if args.plan_name:
+        ov["name"] = args.plan_name
+    if ov:
+        plan = plan.with_(**ov)
+
+    t0 = time.time()
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod, plan=plan,
+                   skip_cost=args.skip_cost)
+    rec["wall_s"] = time.time() - t0
+
+    blob = json.dumps(rec, indent=1, default=float)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(blob)
+    print(blob)
+    if rec.get("applicable") and "memory" in rec:
+        print(f"\nOK {args.arch} x {args.shape} x "
+              f"{'multipod' if args.multi_pod else 'singlepod'}: "
+              f"hbm/dev={rec['hbm_bytes_per_device']/1e9:.2f} GB "
+              f"fits16G={rec['fits_16g']}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

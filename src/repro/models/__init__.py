@@ -1,0 +1,2 @@
+"""Model zoo: five families (dense/moe transformer, ssm, hybrid, encdec, vlm)
+behind the unified API in ``repro.models.api``."""

@@ -1,0 +1,301 @@
+"""Unified model API across the five architecture families.
+
+Everything downstream (trainer, server, dry-run, tensorplan) talks to models
+exclusively through this module:
+
+  init_params(cfg, key, plan)               -> param pytree
+  get_loss_fn(cfg, plan)                    -> f(params, batch) -> scalar
+  make_train_step(cfg, plan, opt)           -> f(state, batch) -> (state, metrics)
+  make_prefill(cfg, shape, plan)            -> f(params, batch) -> (logits, cache, pos)
+  make_decode_step(cfg, shape, plan)        -> f(params, cache, tokens, pos) -> (tok, cache)
+  example_batch / example_cache / ...       -> ShapeDtypeStruct stand-ins
+  param_specs / cache_specs / batch_specs   -> PartitionSpec pytrees (plan-resolved)
+  count_params(cfg)                         -> analytic N (via eval_shape, no alloc)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, PlanConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer as T, vlm
+from repro.models.partition import current_env, pcon, plan_scope
+from repro.optim.compression import int8_ef_compress, int8_ef_init
+
+# --------------------------------------------------------------------------
+# family dispatch
+# --------------------------------------------------------------------------
+
+F32_SENSITIVE = {"router", "A_log", "dt_bias", "Dskip"}
+
+
+def init_params(cfg: ArchConfig, key, plan: PlanConfig = PlanConfig()):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return T.init_lm(cfg, key, plan)
+    if cfg.family == "ssm":
+        return ssm_lm.init_ssm_lm(cfg, key, plan)
+    if cfg.family == "hybrid":
+        return hybrid.init_hybrid(cfg, key, plan)
+    if cfg.family == "encdec":
+        return encdec.init_encdec(cfg, key, plan)
+    raise ValueError(cfg.family)
+
+
+def cast_params(params, dtype):
+    def one(path, p):
+        name = _leaf_name(path)
+        if name in F32_SENSITIVE or not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        return p.astype(dtype)
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def get_loss_fn(cfg: ArchConfig, plan: PlanConfig):
+    if cfg.family in ("dense", "moe"):
+        return lambda p, b: T.lm_loss(cfg, plan, p, b["tokens"])
+    if cfg.family == "vlm":
+        return lambda p, b: vlm.vlm_loss(cfg, plan, p, b["patch_embeds"],
+                                         b["tokens"])
+    if cfg.family == "ssm":
+        return lambda p, b: ssm_lm.ssm_lm_loss(cfg, plan, p, b["tokens"])
+    if cfg.family == "hybrid":
+        return lambda p, b: hybrid.hybrid_loss(cfg, plan, p, b["tokens"])
+    if cfg.family == "encdec":
+        return lambda p, b: encdec.encdec_loss(cfg, plan, p, b["frames"],
+                                               b["tokens"])
+    raise ValueError(cfg.family)
+
+
+def make_prefill(cfg: ArchConfig, shape: ShapeConfig, plan: PlanConfig):
+    max_len = shape.seq_len
+    if cfg.family in ("dense", "moe"):
+        return lambda p, b: T.lm_prefill(cfg, plan, p, b["tokens"], max_len)
+    if cfg.family == "vlm":
+        return lambda p, b: vlm.vlm_prefill(cfg, plan, p, b["patch_embeds"],
+                                            b["tokens"], max_len)
+    if cfg.family == "ssm":
+        return lambda p, b: ssm_lm.ssm_prefill(cfg, plan, p, b["tokens"])
+    if cfg.family == "hybrid":
+        def f(p, b):
+            e = pcon(p["emb"][b["tokens"]], "dp", None, None)
+            positions = jnp.arange(b["tokens"].shape[1])
+            h, caches = hybrid.hybrid_hidden(cfg, plan, p, e, positions,
+                                             collect_cache=True)
+            logits = jnp.einsum("bd,vd->bv", h[:, -1], p["emb"]).astype(jnp.float32)
+            Bsz, S = b["tokens"].shape
+            cache = hybrid.init_hybrid_cache(cfg, Bsz, max_len, e.dtype)
+            cache["ssm_g"] = caches["groups"][0]
+            cache["conv_g"] = caches["groups"][1].astype(e.dtype)
+            if caches["tail"] is not None:
+                cache["ssm_t"] = caches["tail"][0]
+                cache["conv_t"] = caches["tail"][1].astype(e.dtype)
+            kvs = caches["kv"]
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kvs[0].astype(e.dtype), 0, axis=2)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], kvs[1].astype(e.dtype), 0, axis=2)
+            return logits, cache, jnp.full((Bsz,), S, jnp.int32)
+        return f
+    if cfg.family == "encdec":
+        return lambda p, b: encdec.encdec_prefill(cfg, plan, p, b["frames"],
+                                                  b["tokens"], max_len)
+    raise ValueError(cfg.family)
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeConfig, plan: PlanConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return lambda p, c, t, pos: T.lm_decode_step(cfg, plan, p, c, t, pos)
+    if cfg.family == "ssm":
+        return lambda p, c, t, pos: ssm_lm.ssm_decode_step(cfg, plan, p, c, t, pos)
+    if cfg.family == "hybrid":
+        return lambda p, c, t, pos: hybrid.hybrid_decode_step(cfg, plan, p, c, t, pos)
+    if cfg.family == "encdec":
+        return lambda p, c, t, pos: encdec.encdec_decode_step(cfg, plan, p, c, t, pos)
+    raise ValueError(cfg.family)
+
+
+def example_cache(cfg: ArchConfig, shape: ShapeConfig, plan: PlanConfig,
+                  batch: Optional[int] = None):
+    """ShapeDtypeStruct cache for a decode cell (capacity = shape.seq_len)."""
+    B = batch if batch is not None else shape.global_batch
+    dt = jnp.dtype(plan.param_dtype)
+    if cfg.family in ("dense", "moe", "vlm"):
+        mk = lambda: T.init_cache(cfg, B, shape.seq_len, dt)
+    elif cfg.family == "ssm":
+        mk = lambda: ssm_lm.init_ssm_cache(cfg, B, dt)
+    elif cfg.family == "hybrid":
+        mk = lambda: hybrid.init_hybrid_cache(cfg, B, shape.seq_len, dt)
+    elif cfg.family == "encdec":
+        mk = lambda: encdec.init_encdec_cache(cfg, B, shape.seq_len,
+                                              encdec.DECODE_ENC_LEN, dt)
+    else:
+        raise ValueError(cfg.family)
+    return jax.eval_shape(mk)
+
+
+def example_batch(cfg: ArchConfig, shape: ShapeConfig, plan: PlanConfig):
+    """ShapeDtypeStruct inputs for a cell (weak-type-correct, no alloc)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(plan.param_dtype)
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    if shape.mode == "decode":
+        return {"tokens": tok(B), "pos": tok(B)}
+    if cfg.family == "vlm":
+        Pf = cfg.num_frontend_tokens
+        return {"patch_embeds": jax.ShapeDtypeStruct((B, Pf, cfg.d_model), dt),
+                "tokens": tok(B, S - Pf)}
+    if cfg.family == "encdec":
+        # encoder frames carry the seq_len; decoder prompt: full seq for train,
+        # BOS-only for prefill
+        S_dec = S if shape.mode == "train" else 1
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), dt),
+                "tokens": tok(B, S_dec)}
+    return {"tokens": tok(B, S)}
+
+
+# --------------------------------------------------------------------------
+# partition-spec rules (see models/specs.py for the rule tables)
+# --------------------------------------------------------------------------
+
+from repro.models import specs as _specs
+
+_leaf_name = _specs.leaf_name
+
+
+def param_specs(cfg: ArchConfig, plan: PlanConfig, params_shapes):
+    """PartitionSpec pytree for a param tree (must run under plan_scope)."""
+    def one(path, leaf):
+        rule = _specs.rule_for(_leaf_name(path), leaf.shape, plan.moe_ep)
+        if rule is None:
+            return P()                                  # norms, scalars: replicate
+        return _specs.trailing_spec(leaf.shape, rule)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def cache_specs(cfg: ArchConfig, plan: PlanConfig, cache_shapes):
+    def one(path, leaf):
+        rule = _specs.CACHE_RULES.get(_leaf_name(path))
+        if rule is None:
+            return P()
+        return _specs.trailing_spec(leaf.shape, rule)
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def batch_specs(cfg: ArchConfig, plan: PlanConfig, batch_shapes):
+    def one(path, leaf):
+        fn = _specs.BATCH_RULES.get(_leaf_name(path))
+        if fn is None:
+            return P()
+        from repro.models import partition
+        return partition.spec(leaf.shape, fn(len(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# --------------------------------------------------------------------------
+# train step
+# --------------------------------------------------------------------------
+
+def init_train_state(cfg: ArchConfig, plan: PlanConfig, key, optimizer):
+    mplan = plan.with_(param_dtype=plan.master_dtype)
+    master = init_params(cfg, key, mplan)
+    state = {"master": master, "opt": optimizer.init(master),
+             "step": jnp.zeros((), jnp.int32)}
+    if plan.grad_compression == "int8_ef":
+        state["ef"] = int8_ef_init(master)
+    return state
+
+
+def train_state_specs(cfg: ArchConfig, plan: PlanConfig, state_shapes):
+    ps = param_specs(cfg, plan, state_shapes["master"])
+    out = {"master": ps,
+           "opt": {"m": ps, "v": ps, "count": P()},
+           "step": P()}
+    if "ef" in state_shapes:
+        out["ef"] = ps
+    return out
+
+
+def make_train_step(cfg: ArchConfig, plan: PlanConfig, optimizer):
+    loss_fn = get_loss_fn(cfg, plan)
+    compute_dt = jnp.dtype(plan.compute_dtype)
+
+    def loss_of(master, mb):
+        return loss_fn(cast_params(master, compute_dt), mb)
+
+    def train_step(state, batch):
+        master = state["master"]
+        if plan.accum > 1:
+            A = plan.accum
+            mbs = jax.tree.map(
+                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]), batch)
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), master)
+
+            def body(carry, mb):
+                lacc, gacc = carry
+                l, g = jax.value_and_grad(loss_of)(master, mb)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gacc, g)
+                return (lacc + l, gacc), None
+
+            if plan.unroll_inner:
+                carry = (jnp.float32(0.0), gzero)
+                for i in range(A):
+                    carry, _ = body(carry, jax.tree.map(lambda x: x[i], mbs))
+                loss, grads = carry
+            else:
+                (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), gzero),
+                                                mbs)
+            loss = loss / A
+            grads = jax.tree.map(lambda g: g / A, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(master, batch)
+
+        new_state = dict(state)
+        if plan.grad_compression == "int8_ef":
+            grads, new_state["ef"] = int8_ef_compress(grads, state["ef"])
+        new_master, new_opt, stats = optimizer.update(grads, state["opt"], master)
+        new_state.update(master=new_master, opt=new_opt, step=state["step"] + 1)
+        metrics = {"loss": loss, **stats}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig, plan: PlanConfig):
+    """Decode-mode step: (params, cache, tokens, pos) -> (next_tokens, cache)."""
+    decode = make_decode_step(cfg, shape, plan)
+    return decode
+
+
+# --------------------------------------------------------------------------
+# analytic parameter counts (for MODEL_FLOPS)
+# --------------------------------------------------------------------------
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    import math
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, PlanConfig()),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+    if active_only and cfg.moe is not None:
+        expert_names = {"we1", "we2", "we3"}
+        routed = 0
+        def count_routed(path, leaf):
+            nonlocal routed
+            if _leaf_name(path) in expert_names:
+                routed += math.prod(leaf.shape)
+            return leaf
+        jax.tree_util.tree_map_with_path(count_routed, shapes)
+        frac = cfg.moe.top_k / cfg.moe.num_experts
+        total = total - routed + int(routed * frac)
+    return total

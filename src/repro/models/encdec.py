@@ -1,0 +1,172 @@
+"""Seamless-M4T-style encoder-decoder backbone (audio frontend is a stub:
+the encoder consumes precomputed frame embeddings (B, S, D))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models import layers as L
+from repro.models.partition import pcon
+from repro.models.transformer import padded_vocab, lm_loss_from_hidden
+
+# fixed encoder-context length used by decode-shape cells (see DESIGN.md)
+DECODE_ENC_LEN = 4096
+
+
+def init_encdec(cfg: ArchConfig, key, plan: PlanConfig = PlanConfig()):
+    dtype = jnp.dtype(plan.param_dtype)
+    Vp = padded_vocab(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 5)
+
+    def enc_block(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype),
+                "attn": L.init_attention(k1, cfg, dtype),
+                "mlp": L.init_mlp(k2, D, cfg.d_ff, dtype)}
+
+    def dec_block(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": jnp.ones((D,), dtype), "lnx": jnp.ones((D,), dtype),
+                "ln2": jnp.ones((D,), dtype),
+                "attn": L.init_attention(k1, cfg, dtype),
+                "xattn": L.init_attention(k2, cfg, dtype),
+                "mlp": L.init_mlp(k3, D, cfg.d_ff, dtype)}
+
+    return {
+        "emb": L._dense_init(ks[0], (Vp, D), D, dtype),
+        "enc_blocks": jax.vmap(enc_block)(jax.random.split(ks[1], cfg.encoder_layers)),
+        "dec_blocks": jax.vmap(dec_block)(jax.random.split(ks[2], cfg.num_layers)),
+        "enc_norm": jnp.ones((D,), dtype),
+        "final_norm": jnp.ones((D,), dtype),
+    }
+
+
+def encode(cfg, plan: PlanConfig, params, frames):
+    """frames: (B, S_enc, D) stub embeddings -> encoder hidden."""
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, lp):
+        from repro.models.specs import gather_fsdp
+        x = pcon(x, "dp", "sp", None)
+        lp = gather_fsdp(lp)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h, _ = L.attention_apply(lp["attn"], cfg, h, positions, causal=False,
+                                 chunk=plan.attn_chunk,
+                                 unroll=plan.unroll_inner)
+        x = x + h
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + L.mlp_apply(lp["mlp"], h), None
+
+    if plan.remat == "block":
+        body = jax.remat(body)
+    from repro.models.util import stack_scan
+    x, _ = stack_scan(body, frames, params["enc_blocks"], plan.unroll_layers)
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_hidden(cfg, plan: PlanConfig, params, tokens, enc_out,
+                  collect_cache=False):
+    x = pcon(params["emb"][tokens], "dp", None, None)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        from repro.models.specs import gather_fsdp
+        x = pcon(x, "dp", "sp", None)
+        lp = gather_fsdp(lp)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h, self_kv = L.attention_apply(lp["attn"], cfg, h, positions,
+                                       causal=True, chunk=plan.attn_chunk,
+                                       unroll=plan.unroll_inner)
+        x = x + h
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        h, cross_kv = L.attention_apply(lp["xattn"], cfg, h, None, causal=False,
+                                        chunk=plan.attn_chunk, xkv=enc_out,
+                                        unroll=plan.unroll_inner)
+        x = x + h
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h)
+        return x, ((self_kv, cross_kv) if collect_cache else None)
+
+    if plan.remat == "block":
+        body = jax.remat(body)
+    from repro.models.util import stack_scan
+    x, caches = stack_scan(body, x, params["dec_blocks"], plan.unroll_layers)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), caches
+
+
+def encdec_loss(cfg, plan, params, frames, tokens, aux_coef=0.0):
+    enc_out = encode(cfg, plan, params, frames)
+    hidden, _ = decode_hidden(cfg, plan, params, tokens, enc_out)
+    Bsz, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate([jnp.ones((Bsz, S - 1), jnp.float32),
+                            jnp.zeros((Bsz, 1), jnp.float32)], axis=1)
+    return lm_loss_from_hidden(cfg, plan, params, hidden, targets, mask)
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int,
+                      dtype):
+    Ld, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, KV, hd), dtype),
+        "v": jnp.zeros((Ld, batch, max_len, KV, hd), dtype),
+        "xk": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype),
+        "xv": jnp.zeros((Ld, batch, enc_len, KV, hd), dtype),
+    }
+
+
+def encdec_prefill(cfg, plan, params, frames, bos_tokens, max_len):
+    """Encode frames, run the decoder prompt, build self+cross caches."""
+    enc_out = encode(cfg, plan, params, frames)
+    hidden, caches = decode_hidden(cfg, plan, params, bos_tokens, enc_out,
+                                   collect_cache=True)
+    dt = enc_out.dtype
+    Bsz, Sp = bos_tokens.shape
+    cache = init_encdec_cache(cfg, Bsz, max_len, frames.shape[1], dt)
+    (sk, sv), (xk, xv) = caches[0], caches[1]
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], sk.astype(dt), 0, axis=2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], sv.astype(dt), 0, axis=2)
+    cache["xk"], cache["xv"] = xk.astype(dt), xv.astype(dt)
+    logits = jnp.einsum("bd,vd->bv", hidden[:, -1], params["emb"]).astype(jnp.float32)
+    return logits, cache, jnp.full((Bsz,), Sp, jnp.int32)
+
+
+def encdec_decode_step(cfg: ArchConfig, plan: PlanConfig, params, cache, tokens,
+                       pos):
+    import math
+    x = params["emb"][tokens]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def body(x, inp):
+        from repro.models.specs import gather_fsdp
+        lp, ck, cv, xk, xv = inp
+        lp = gather_fsdp(lp)
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h, ck2, cv2 = L.attention_decode(lp["attn"], cfg, h, ck, cv, pos)
+        x = x + h
+        # cross attention over the fixed encoder cache
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        q = jnp.einsum("bd,dhk->bhk", h, lp["xattn"]["wq"])
+        if cfg.qkv_bias:
+            q = q + lp["xattn"]["bq"]
+        ke = L._expand_kv(xk, H // KV)
+        ve = L._expand_kv(xv, H // KV)
+        s = jnp.einsum("bhk,bshk->bhs", q, ke).astype(jnp.float32) / math.sqrt(hd)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhs,bshk->bhk", w, ve)
+        x = x + jnp.einsum("bhk,hkd->bd", o, lp["xattn"]["wo"])
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(lp["mlp"], h)
+        return x, (ck2, cv2)
+
+    from repro.models.util import stack_scan
+    x, (ck2, cv2) = stack_scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"], cache["xk"],
+                  cache["xv"]), plan.unroll_layers)
+    new_cache = dict(cache, k=ck2, v=cv2)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["emb"]).astype(jnp.float32)
+    logits = pcon(logits, "dp", "tp")
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache

@@ -1,0 +1,224 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block applied
+every ``attn_period`` layers with per-invocation LoRA deltas.
+
+Layout: ``num_layers = n_groups * attn_period + tail``.  Each scan step runs
+``attn_period`` Mamba2 layers then the shared transformer block (weights
+shared across groups, LoRA per group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.partition import pcon
+from repro.models.transformer import padded_vocab, lm_loss_from_hidden
+
+
+def _geometry(cfg: ArchConfig):
+    n_groups = cfg.num_layers // cfg.attn_period
+    tail = cfg.num_layers - n_groups * cfg.attn_period
+    return n_groups, cfg.attn_period, tail
+
+
+def init_hybrid(cfg: ArchConfig, key, plan: PlanConfig = PlanConfig()):
+    dtype = jnp.dtype(plan.param_dtype)
+    Vp = padded_vocab(cfg)
+    G, P, T = _geometry(cfg)
+    D, H, KV, hd, r = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                       cfg.head_dim, cfg.shared_lora_rank)
+    ks = jax.random.split(key, 12)
+
+    def stack_mamba(k, n):
+        return jax.vmap(lambda kk: ssm.init_mamba_block(kk, cfg, dtype))(
+            jax.random.split(k, n))
+
+    params = {
+        "emb": L._dense_init(ks[0], (Vp, D), D, dtype),
+        "final_norm": jnp.ones((D,), dtype),
+        # (G, P, ...) stacked backbone + (T, ...) tail
+        "groups": jax.vmap(lambda k: stack_mamba(k, P))(jax.random.split(ks[1], G)),
+        "shared": {
+            "ln1": jnp.ones((D,), dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "attn": L.init_attention(ks[2], cfg, dtype),
+            "mlp": L.init_mlp(ks[3], D, cfg.d_ff, dtype),
+        },
+        "lora": {
+            "a_q": L._dense_init(ks[4], (G, D, r), D, dtype),
+            "b_q": jnp.zeros((G, r, H, hd), dtype),
+            "a_k": L._dense_init(ks[5], (G, D, r), D, dtype),
+            "b_k": jnp.zeros((G, r, KV, hd), dtype),
+            "a_v": L._dense_init(ks[6], (G, D, r), D, dtype),
+            "b_v": jnp.zeros((G, r, KV, hd), dtype),
+            "a_1": L._dense_init(ks[7], (G, D, r), D, dtype),
+            "b_1": jnp.zeros((G, r, cfg.d_ff), dtype),
+            "a_3": L._dense_init(ks[8], (G, D, r), D, dtype),
+            "b_3": jnp.zeros((G, r, cfg.d_ff), dtype),
+        },
+    }
+    if T:
+        params["tail"] = stack_mamba(ks[9], T)
+    return params
+
+
+def _shared_effective(shared, lora_i):
+    """Apply LoRA deltas to the shared block weights."""
+    attn = dict(shared["attn"])
+    attn["wq"] = attn["wq"] + jnp.einsum("dr,rhk->dhk", lora_i["a_q"], lora_i["b_q"])
+    attn["wk"] = attn["wk"] + jnp.einsum("dr,rhk->dhk", lora_i["a_k"], lora_i["b_k"])
+    attn["wv"] = attn["wv"] + jnp.einsum("dr,rhk->dhk", lora_i["a_v"], lora_i["b_v"])
+    mlp = dict(shared["mlp"])
+    mlp["w1"] = mlp["w1"] + jnp.einsum("dr,rf->df", lora_i["a_1"], lora_i["b_1"])
+    mlp["w3"] = mlp["w3"] + jnp.einsum("dr,rf->df", lora_i["a_3"], lora_i["b_3"])
+    return {"ln1": shared["ln1"], "ln2": shared["ln2"], "attn": attn, "mlp": mlp}
+
+
+def _shared_block_apply(sp, cfg, plan, x, positions):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    h, cache = L.attention_apply(sp["attn"], cfg, h, positions,
+                                 chunk=plan.attn_chunk,
+                                 unroll=plan.unroll_inner)
+    x = x + h
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp_apply(sp["mlp"], h), cache
+
+
+def _inner_scan(body, x, stacked, unroll: bool, n: int):
+    """scan for production; python loop for dry-run cost probes."""
+    if not unroll:
+        return jax.lax.scan(body, x, stacked)
+    ys = []
+    for i in range(n):
+        x, y = body(x, jax.tree.map(lambda a: a[i], stacked))
+        ys.append(y)
+    ys = None if ys and ys[0] is None else jax.tree.map(
+        lambda *a: jnp.stack(a), *ys)
+    return x, ys
+
+
+def hybrid_hidden(cfg, plan: PlanConfig, params, embeds, positions,
+                  collect_cache=False):
+    shared = params["shared"]
+    G, P, T = _geometry(cfg)
+
+    def mamba_body(x, lp):
+        from repro.models.specs import gather_fsdp
+        x = pcon(x, "dp", "sp", None)
+        lp = gather_fsdp(lp)
+        h, state = ssm.mamba_apply(lp, cfg, L.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                   unroll=plan.unroll_inner)
+        return x + h, (state if collect_cache else None)
+
+    def group_body(x, inp):
+        from repro.models.specs import gather_fsdp
+        gp, lora_i = inp
+        x, states = _inner_scan(mamba_body, x, gp, plan.unroll_inner, P)
+        sp = _shared_effective(gather_fsdp(shared), gather_fsdp(lora_i))
+        x, kv = _shared_block_apply(sp, cfg, plan, x, positions)
+        return x, (states, kv if collect_cache else None)
+
+    if plan.remat == "block":
+        group_body = jax.remat(group_body)
+    from repro.models.util import stack_scan
+    x, ys = stack_scan(group_body, embeds, (params["groups"], params["lora"]),
+                       plan.unroll_layers)
+    g_states, kvs = ys if ys is not None else (None, None)
+    t_states = None
+    if "tail" in params:
+        x, t_states = _inner_scan(mamba_body, x, params["tail"],
+                                  plan.unroll_inner, T)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, {"groups": g_states, "tail": t_states, "kv": kvs}
+
+
+def hybrid_loss(cfg, plan, params, tokens, aux_coef=0.0):
+    e = pcon(params["emb"][tokens], "dp", None, None)
+    positions = jnp.arange(tokens.shape[1])
+    hidden, _ = hybrid_hidden(cfg, plan, params, e, positions)
+    Bsz, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate([jnp.ones((Bsz, S - 1), jnp.float32),
+                            jnp.zeros((Bsz, 1), jnp.float32)], axis=1)
+    return lm_loss_from_hidden(cfg, plan, params, hidden, targets, mask)
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    G, P, T = _geometry(cfg)
+    s, c = ssm.init_mamba_state(cfg, batch, dtype)
+    cache = {
+        "ssm_g": jnp.zeros((G, P) + s.shape, s.dtype),
+        "conv_g": jnp.zeros((G, P) + c.shape, c.dtype),
+        "k": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+    if T:
+        cache["ssm_t"] = jnp.zeros((T,) + s.shape, s.dtype)
+        cache["conv_t"] = jnp.zeros((T,) + c.shape, c.dtype)
+    return cache
+
+
+def hybrid_decode_step(cfg: ArchConfig, plan: PlanConfig, params, cache, tokens,
+                       pos):
+    x = params["emb"][tokens]
+    shared = params["shared"]
+
+    def mamba_body(x, inp):
+        from repro.models.specs import gather_fsdp
+        lp, s, c = inp
+        lp = gather_fsdp(lp)
+        h, (s2, c2) = ssm.mamba_step(lp, cfg,
+                                     L.rms_norm(x, lp["ln"], cfg.norm_eps), (s, c))
+        return x + h, (s2, c2)
+
+    def group_body(x, inp):
+        from repro.models.specs import gather_fsdp
+        gp, lora_i, s, c, ck, cv = inp
+        x, (s2, c2) = _inner_scan(mamba_body, x, (gp, s, c),
+                                  plan.unroll_inner, cfg.attn_period)
+        sp = _shared_effective(gather_fsdp(shared), gather_fsdp(lora_i))
+        h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        h, ck2, cv2 = L.attention_decode(sp["attn"], cfg, h, ck, cv, pos,
+                                         use_cp=plan.decode_cp)
+        x = x + h
+        h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_apply(sp["mlp"], h)
+        return x, (s2, c2, ck2, cv2)
+
+    # fori_loop with the caches in the CARRY (in-place updates) — scan ys
+    # threading double-buffers the 500k-token KV cache (see transformer.py)
+    G = jax.tree.leaves(params["groups"])[0].shape[0]
+    mobile = (cache["ssm_g"], cache["conv_g"], cache["k"], cache["v"])
+
+    def one_group(i, x, mob):
+        sg, cg, ck, cv = mob
+        idx = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+        inp = (jax.tree.map(idx, params["groups"]),
+               jax.tree.map(idx, params["lora"]),
+               idx(sg), idx(cg), idx(ck), idx(cv))
+        x, (s2, c2, ck2, cv2) = group_body(x, inp)
+        upd = lambda a, u: jax.lax.dynamic_update_index_in_dim(
+            a, u.astype(a.dtype), i, 0)
+        return x, (upd(sg, s2), upd(cg, c2), upd(ck, ck2), upd(cv, cv2))
+
+    if plan.unroll_layers:
+        for i in range(G):
+            x, mobile = one_group(i, x, mobile)
+    else:
+        x, mobile = jax.lax.fori_loop(
+            0, G, lambda i, c: one_group(i, c[0], c[1]), (x, mobile))
+    s2, c2, ck2, cv2 = mobile
+    new_cache = dict(cache, ssm_g=s2, conv_g=c2, k=ck2, v=cv2)
+    if "tail" in params:
+        G_, P_, T_ = _geometry(cfg)
+        x, (st, ct) = _inner_scan(mamba_body, x,
+                                  (params["tail"], cache["ssm_t"],
+                                   cache["conv_t"]), plan.unroll_inner, T_)
+        new_cache["ssm_t"], new_cache["conv_t"] = st, ct
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["emb"]).astype(jnp.float32)
+    logits = pcon(logits, "dp", "tp")
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, new_cache

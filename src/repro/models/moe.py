@@ -1,0 +1,132 @@
+"""Mixture-of-Experts layer with capacity-factor dispatch and EP sharding.
+
+Routing is *group-limited*: tokens route independently within a group (one
+sequence during train/prefill; the whole batch during decode).  Each expert
+takes its top-C tokens per group (C = ceil(T·k/E·cf)); overflow tokens are
+dropped (standard capacity semantics; they keep the residual path).
+
+Dispatch/combine are expressed WITHOUT scatter ops: the inverse (slot ->
+token) mapping is recovered with one argsort over slots plus
+``take_along_axis`` gathers.  This matters for SPMD: a (G,T,D) scatter-add
+makes the partitioner replicate the full activation and all-reduce it in f32
+(measured 8.6 GB/device/layer on deepseek-v2-lite prefill); the sort+gather
+formulation stays dp-sharded, and the expert<->data resharding lowers to the
+canonical MoE all-to-all pair.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import _dense_init, mlp_apply, init_mlp
+from repro.models.partition import pcon
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    m: MoEConfig = cfg.moe
+    D, E, F = cfg.d_model, m.num_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), D, jnp.float32),
+        "we1": _dense_init(ks[1], (E, D, F), D, dtype),
+        "we3": _dense_init(ks[2], (E, D, F), D, dtype),
+        "we2": _dense_init(ks[3], (E, F, D), F, dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], D, m.d_ff_shared, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(1, min(c, tokens_per_group))
+
+
+def moe_apply(p, cfg: ArchConfig, x, *, group_size: int = 0,
+              unroll: bool = False):
+    """x: (B, S, D) or (B, D) for decode.  Returns (out, aux_loss).
+
+    group_size > 0 chunks the sequence through the dispatch/combine so the
+    (G,E,C,D) buffers are live one chunk at a time (lax.scan; python loop
+    under dry-run cost probes)."""
+    m: MoEConfig = cfg.moe
+    decode = x.ndim == 2
+    if not decode and group_size and x.shape[1] > group_size \
+            and x.shape[1] % group_size == 0:
+        B, S, D = x.shape
+        nc = S // group_size
+        xr = x.reshape(B, nc, group_size, D).transpose(1, 0, 2, 3)
+
+        def body(aux, xc):
+            yc, a = moe_apply(p, cfg, xc, group_size=0)
+            return aux + a, yc
+
+        if unroll:
+            aux, ys = jnp.float32(0.0), []
+            for i in range(nc):
+                aux, yc = body(aux, xr[i])
+                ys.append(yc)
+            y = jnp.stack(ys)
+        else:
+            aux, y = jax.lax.scan(body, jnp.float32(0.0), xr)
+        out = y.transpose(1, 0, 2, 3).reshape(B, S, D)
+        return out, aux / nc
+
+    xg = x[None] if decode else x                       # (G, T, D)
+    G, T, D = xg.shape
+    E, K = m.num_experts, m.top_k
+    C = _capacity(T, m)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)             # (G, T, E)
+    topw, topi = jax.lax.top_k(probs, K)                # (G, T, K)
+    topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+
+    # per-token-per-expert combine weight (0 if expert not in token's top-k)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)            # (G,T,K,E)
+    tok_w = jnp.einsum("gtk,gtke->gte", topw, onehot)              # (G,T,E)
+
+    # each expert picks its top-C tokens in the group by combine weight
+    ex_w, ex_idx = jax.lax.top_k(tok_w.transpose(0, 2, 1), C)      # (G,E,C)
+    xe = jnp.take_along_axis(xg[:, None], ex_idx[..., None], axis=2)  # (G,E,C,D)
+    xe = pcon(xe, None if decode else "dp", "ep", None, None)      # dispatch
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["we1"])
+    gt = jnp.einsum("gecd,edf->gecf", xe, p["we3"])
+    h = jax.nn.silu(gt.astype(jnp.float32)).astype(xe.dtype) * h
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we2"])                 # (G,E,C,D)
+    ye = pcon(ye, None if decode else "dp", None, None, None)      # combine a2a
+
+    # ---- scatter-free combine: argsort inverse mapping -------------------
+    # zero-weight slots point at an out-of-range token id so sorting pushes
+    # them to the end (otherwise top_k tie-slots alias token 0)
+    flat_tok = jnp.where(ex_w > 0, ex_idx, T).reshape(G, E * C)
+    flat_w = ex_w.reshape(G, E * C).astype(jnp.float32)
+    order = jnp.argsort(flat_tok, axis=1)                          # (G, EC)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+    base = jax.vmap(lambda st: jnp.searchsorted(st, jnp.arange(T)))(sorted_tok)
+    pos = jnp.clip(base[..., None] + jnp.arange(K)[None, None], 0, E * C - 1)
+    cand = jnp.take_along_axis(sorted_tok, pos.reshape(G, -1), 1).reshape(G, T, K)
+    valid = (cand == jnp.arange(T)[None, :, None])                 # (G,T,K)
+    slot = jnp.take_along_axis(order, pos.reshape(G, -1), 1).reshape(G, T, K)
+    w = jnp.take_along_axis(flat_w, slot.reshape(G, -1), 1).reshape(G, T, K)
+    w = w * valid
+    yk = jnp.take_along_axis(ye.reshape(G, E * C, D),
+                             slot.reshape(G, T * K)[..., None],
+                             axis=1).reshape(G, T, K, D)
+    out = jnp.sum(yk.astype(jnp.float32) * w[..., None], axis=2)
+    out = pcon(out, None if decode else "dp", None, None).astype(x.dtype)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=1)        # (G, E)
+    frac_probs = jnp.mean(probs, axis=1)                           # (G, E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+
+    if m.num_shared_experts:
+        out = out + mlp_apply(p["shared"], xg).astype(out.dtype)
+    if decode:
+        out = out[0]
+    return out, aux

@@ -1,0 +1,121 @@
+"""Logical-axis partitioning environment.
+
+Model code annotates tensors with *logical* dimension names; this module
+resolves them to mesh axes according to the active ``PlanConfig`` (the
+polystore tensor-plan, i.e. which "engine"/sharding regime executes the step).
+
+Logical names:
+  "dp"    data-parallel axes (("pod","data") on the multi-pod mesh)
+  "fsdp"  parameter sharding over the DP axes (ZeRO-3 style) — plan.fsdp
+  "tp"    tensor-parallel axis ("model")                      — plan.tp
+  "sp"    sequence sharding of remat boundaries over "model"  — plan.sp_boundary
+  "ep"    expert sharding over "model"                        — plan.moe_ep
+  "cache" decode KV-cache seq sharding over "model"           — plan.cache_seq_shard
+  None    replicated
+
+Resolution silently drops an axis whose size does not divide the dimension
+(e.g. kv_heads=2 over a 16-way model axis), exactly like replicating KV heads
+on real deployments.  Outside a ``plan_scope`` every constraint is a no-op, so
+the same model code runs on a bare CPU device.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import PlanConfig
+
+_ENV = threading.local()
+
+
+class PlanEnv:
+    def __init__(self, mesh: Mesh, plan: PlanConfig):
+        self.mesh = mesh
+        self.plan = plan
+        names = mesh.axis_names
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in names) or (names[0],)
+        self.tp_axis = "model" if "model" in names else None
+        self.axis_size = {a: mesh.shape[a] for a in names}
+
+    def resolve(self, name) -> Union[None, str, tuple]:
+        plan = self.plan
+        if name is None:
+            return None
+        if name == "dp":
+            axes = self.dp_axes
+            if not plan.tp and self.tp_axis:
+                axes = axes + (self.tp_axis,)   # tp off: DP absorbs model axis
+            return axes if len(axes) > 1 else axes[0]
+        if name == "fsdp":
+            return self.resolve("dp") if plan.fsdp else None
+        if name == "tp":
+            return self.tp_axis if plan.tp else None
+        if name == "sp":
+            return self.tp_axis if (plan.tp and plan.sp_boundary) else None
+        if name == "ep":
+            return self.tp_axis if (plan.tp and plan.moe_ep) else None
+        if name == "cache":
+            return self.tp_axis if (plan.tp and plan.cache_seq_shard) else None
+        raise ValueError(f"unknown logical axis {name!r}")
+
+    def axes_size(self, resolved) -> int:
+        if resolved is None:
+            return 1
+        if isinstance(resolved, tuple):
+            n = 1
+            for a in resolved:
+                n *= self.axis_size[a]
+            return n
+        return self.axis_size[resolved]
+
+
+def current_env() -> Optional[PlanEnv]:
+    return getattr(_ENV, "env", None)
+
+
+@contextmanager
+def plan_scope(mesh: Optional[Mesh], plan: PlanConfig):
+    prev = getattr(_ENV, "env", None)
+    _ENV.env = PlanEnv(mesh, plan) if mesh is not None else None
+    try:
+        if mesh is not None:
+            with mesh:
+                yield _ENV.env
+        else:
+            yield None
+    finally:
+        _ENV.env = prev
+
+
+def spec(shape: Sequence[int], names: Sequence) -> P:
+    """Resolve logical names against the active env, honoring divisibility."""
+    env = current_env()
+    if env is None:
+        return P()
+    entries = []
+    for dim, name in zip(shape, names):
+        r = env.resolve(name)
+        if r is not None and dim % env.axes_size(r) != 0:
+            r = None  # cannot shard this dim — replicate (e.g. kv_heads < tp)
+        entries.append(r)
+    return P(*entries)
+
+
+def pcon(x, *names):
+    """with_sharding_constraint using logical names; identity w/o a plan env."""
+    env = current_env()
+    if env is None or env.mesh is None:
+        return x
+    s = spec(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(env.mesh, s))
+
+
+def named_sharding(shape: Sequence[int], names: Sequence) -> Optional[NamedSharding]:
+    env = current_env()
+    if env is None:
+        return None
+    return NamedSharding(env.mesh, spec(shape, names))

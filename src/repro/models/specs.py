@@ -1,0 +1,100 @@
+"""Partition-spec rules for params / caches / batches, plus the FSDP gather
+constraint.
+
+``gather_fsdp`` is load-bearing: FSDP shards weights along contraction dims,
+and without an explicit per-layer constraint the SPMD partitioner may choose
+partial-sums + full-size activation all-reduces instead of gathering the
+(much smaller) weights — measured 15.5 GB/layer/device of collectives on
+internlm2 vs ~0.7 GB with the constraint.  Calling gather_fsdp(lp) at the top
+of every layer body pins the all-gather-weights schedule (the standard FSDP
+pattern, and what frameworks like MaxText do via logical axis rules).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import partition
+
+PARAM_RULES = {
+    "emb": ("tp", "fsdp"), "head": ("tp", "fsdp"),
+    "wq": ("fsdp", "tp", None), "wk": ("fsdp", "tp", None),
+    "wv": ("fsdp", "tp", None), "wo": ("tp", None, "fsdp"),
+    "bq": ("tp", None), "bk": (None, None), "bv": (None, None),
+    "w1": ("fsdp", "tp"), "w3": ("fsdp", "tp"), "w2": ("tp", "fsdp"),
+    "router": ("fsdp", None),
+    "wkv_a": ("fsdp", None), "kv_norm": (None,), "wkv_b": (None, "tp", None),
+    "w_z": ("fsdp", "tp"), "w_x": ("fsdp", "tp"),
+    "w_B": ("fsdp", None), "w_C": ("fsdp", None), "w_dt": ("fsdp", None),
+    "conv_w": (None, "tp"), "conv_b": ("tp",),
+    "ssm_norm": ("tp",), "out_proj": ("tp", "fsdp"),
+    "a_q": ("fsdp", None), "a_k": ("fsdp", None), "a_v": ("fsdp", None),
+    "a_1": ("fsdp", None), "a_3": ("fsdp", None),
+    "b_q": (None, "tp", None), "b_k": (None, "tp", None),
+    "b_v": (None, "tp", None), "b_1": (None, "tp"), "b_3": (None, "tp"),
+}
+
+CACHE_RULES = {
+    "k": ("dp", "cache", None, None), "v": ("dp", "cache", None, None),
+    "xk": ("dp", "cache", None, None), "xv": ("dp", "cache", None, None),
+    "c": ("dp", "cache", None), "kr": ("dp", "cache", None),
+    "ssm": ("dp", "tp", None, None), "ssm_g": ("dp", "tp", None, None),
+    "ssm_t": ("dp", "tp", None, None),
+    "conv": ("dp", None, "tp"), "conv_g": ("dp", None, "tp"),
+    "conv_t": ("dp", None, "tp"),
+}
+
+BATCH_RULES = {
+    "tokens": lambda nd: ("dp",) + (None,) * (nd - 1),
+    "pos": lambda nd: ("dp",),
+    "frames": lambda nd: ("dp", None, None),
+    "patch_embeds": lambda nd: ("dp", None, None),
+}
+
+EXPERT_NAMES = {"we1", "we2", "we3"}
+
+
+def leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _expert_rule(name: str, shape, moe_ep: bool):
+    env = partition.current_env()
+    tp_size = env.axes_size(env.resolve("tp")) if env else 1
+    E = shape[-3]
+    ep_ok = moe_ep and tp_size > 1 and E % tp_size == 0
+    if name == "we2":
+        return ("ep", None, "fsdp") if ep_ok else (None, "tp", "fsdp")
+    return ("ep", "fsdp", None) if ep_ok else (None, "fsdp", "tp")
+
+
+def rule_for(name: str, shape, moe_ep: bool = True):
+    if name in EXPERT_NAMES:
+        return _expert_rule(name, shape, moe_ep)
+    return PARAM_RULES.get(name)
+
+
+def trailing_spec(shape, rule) -> P:
+    names = (None,) * (len(shape) - len(rule)) + tuple(rule)
+    return partition.spec(shape, names)
+
+
+def gather_fsdp(tree, moe_ep: bool = True):
+    """Constrain every weight to its spec with the FSDP axes dropped —
+    pinning per-layer all-gather-weights instead of activation all-reduces."""
+    env = partition.current_env()
+    if env is None:
+        return tree
+
+    def one(path, leaf):
+        rule = rule_for(leaf_name(path), leaf.shape, moe_ep)
+        if rule is None or "fsdp" not in rule:
+            return leaf
+        names = (None,) * (leaf.ndim - len(rule)) + tuple(
+            None if n == "fsdp" else n for n in rule)
+        return partition.pcon(leaf, *names)
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,255 @@
+"""Mamba2 (state-space duality) block — chunked SSD scan, pure JAX reference.
+
+The intra-chunk quadratic part is the compute hot-spot; on TPU it is replaced
+by the Pallas kernel in ``repro.kernels.ssd_scan`` (same math, VMEM-tiled).
+Heads are TP-sharded; the inter-chunk recurrence is a ``lax.scan`` with a
+local (per-head-shard) carry, so the whole block needs no collectives until
+the output projection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import _dense_init, rms_norm_gated
+from repro.models.partition import pcon
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv1d
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B, S, Ch); w: (W, Ch); b: (Ch,).  Shift-and-add (W is tiny)."""
+    W = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(W):
+        shift = W - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv1d_step(conv_state, x_new, w, b):
+    """conv_state: (B, W-1, Ch) raw past inputs; x_new: (B, Ch)."""
+    window = jnp.concatenate([conv_state, x_new[:, None]], axis=1)   # (B, W, Ch)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_new.dtype)
+    return y, window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# SSD scan (chunked state-space dual form)
+# --------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) with S[i, j] = sum_{j < k <= i} x[k], -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None,
+                unroll: bool = False):
+    """SSD over chunks.
+
+    x: (b, s, h, p); dt: (b, s, h); A: (h,) negative decay rates;
+    B, C: (b, s, g, n).  Returns (y (b, s, h, p), final_state (b, h, n, p)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))     # dt=0 => identity update
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc, Q = S // chunk, chunk
+
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None])
+    xdt = xdt.reshape(b, nc, Q, g, hg, p)
+    da = (dt.astype(jnp.float32) * A.astype(jnp.float32)).reshape(b, nc, Q, h)
+    da = da.transpose(0, 3, 1, 2)                        # (b, h, nc, Q)
+    Bc = B.astype(jnp.float32).reshape(b, nc, Q, g, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, Q, g, n)
+
+    A_cs = jnp.cumsum(da, axis=-1)                       # (b, h, nc, Q)
+    L = jnp.exp(_segsum(da))                             # (b, h, nc, Q, Q)
+    Lg = L.reshape(b, g, hg, nc, Q, Q)
+
+    # intra-chunk (quadratic, attention-like)
+    G = jnp.einsum("bcqgn,bckgn->bgcqk", Cc, Bc)         # (b, g, nc, Q, Q)
+    M = G[:, :, None] * Lg                               # (b, g, hg, nc, Q, Q)
+    Y_intra = jnp.einsum("bghcqk,bckghp->bcqghp", M, xdt)
+
+    # per-chunk input state contribution
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)        # (b, h, nc, Q)
+    dsg = decay_states.reshape(b, g, hg, nc, Q)
+    states = jnp.einsum("bckgn,bghck,bckghp->bcghnp", Bc, dsg, xdt)  # (b,nc,g,hg,n,p)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(A_cs[..., -1])                 # (b, h, nc)
+    cdg = chunk_decay.reshape(b, g, hg, nc).transpose(3, 0, 1, 2)    # (nc, b, g, hg)
+    states_t = states.transpose(1, 0, 2, 3, 4, 5)        # (nc, b, g, hg, n, p)
+    if initial_state is None:
+        init = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    else:
+        init = initial_state.reshape(b, g, hg, n, p).astype(jnp.float32)
+
+    def step(run, inp):
+        st, dec = inp
+        new = run * dec[..., None, None] + st
+        return new, run                                   # emit state BEFORE chunk
+
+    if unroll:
+        run, prevs = init, []
+        for ci in range(nc):
+            run, prev = step(run, (states_t[ci], cdg[ci]))
+            prevs.append(prev)
+        final, prev_states = run, jnp.stack(prevs)
+    else:
+        final, prev_states = jax.lax.scan(step, init, (states_t, cdg))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)  # (b, nc, g, hg, n, p)
+
+    # inter-chunk output: C_t · (decayed running state)
+    state_decay = jnp.exp(A_cs).reshape(b, g, hg, nc, Q)
+    Y_inter = jnp.einsum("bcqgn,bcghnp,bghcq->bcqghp", Cc, prev_states, state_decay)
+
+    y = (Y_intra + Y_inter).reshape(b, S, h, p)[:, :s]
+    return y.astype(x.dtype), final.reshape(b, h, n, p)
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence.  state: (b,h,n,p); x_t: (b,h,p); dt_t: (b,h);
+    B_t, C_t: (b,g,n)."""
+    b, h, n, p = state.shape
+    g = B_t.shape[1]
+    hg = h // g
+    da = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))   # (b,h)
+    xdt = x_t.astype(jnp.float32) * dt_t.astype(jnp.float32)[..., None]
+    Bh = jnp.repeat(B_t.astype(jnp.float32), hg, axis=1)             # (b,h,n)
+    Ch = jnp.repeat(C_t.astype(jnp.float32), hg, axis=1)
+    new_state = state * da[..., None, None] + jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return new_state, y.astype(x_t.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 block
+# --------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ArchConfig, dtype):
+    m: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    di = m.expand * D
+    H = di // m.head_dim
+    GN = m.n_groups * m.state_dim
+    conv_ch = di + 2 * GN
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "ln": jnp.ones((D,), dtype),
+        "w_z": _dense_init(ks[0], (D, di), D, dtype),
+        "w_x": _dense_init(ks[1], (D, di), D, dtype),
+        "w_B": _dense_init(ks[2], (D, GN), D, dtype),
+        "w_C": _dense_init(ks[3], (D, GN), D, dtype),
+        "w_dt": _dense_init(ks[4], (D, H), D, dtype),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "conv_w": _dense_init(ks[5], (m.conv_width, conv_ch), m.conv_width, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "ssm_norm": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[7], (di, D), di, dtype),
+    }
+
+
+def _split_xbc(xBC, cfg):
+    m = cfg.ssm
+    di = m.expand * cfg.d_model
+    GN = m.n_groups * m.state_dim
+    x = xBC[..., :di]
+    B = xBC[..., di:di + GN]
+    C = xBC[..., di + GN:]
+    return x, B, C
+
+
+def mamba_apply(p, cfg: ArchConfig, x, initial_state=None, unroll=False):
+    """x: (B, S, D).  Returns (out (B,S,D), (ssm_state, conv_tail))."""
+    m: SSMConfig = cfg.ssm
+    Bsz, S, D = x.shape
+    di = m.expand * D
+    H = di // m.head_dim
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xx = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    xB = jnp.einsum("bsd,de->bse", x, p["w_B"])
+    xC = jnp.einsum("bsd,de->bse", x, p["w_C"])
+    xBC = jnp.concatenate([xx, xB, xC], axis=-1)
+    conv_tail = xBC[:, -(m.conv_width - 1):]
+    if initial_state is not None:
+        _, prev_conv = initial_state
+        xBC_in = jnp.concatenate([prev_conv, xBC], axis=1)
+        conv = causal_conv1d(xBC_in, p["conv_w"], p["conv_b"])[:, m.conv_width - 1:]
+    else:
+        conv = causal_conv1d(xBC, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bs, Cs = _split_xbc(conv, cfg)
+    xs = pcon(xs.reshape(Bsz, S, H, m.head_dim), "dp", None, "tp", None)
+    Bs = Bs.reshape(Bsz, S, m.n_groups, m.state_dim)
+    Cs = Cs.reshape(Bsz, S, m.n_groups, m.state_dim)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_init = initial_state[0] if initial_state is not None else None
+    y, fstate = ssd_chunked(xs, dt, A, Bs, Cs, m.chunk, ssm_init, unroll=unroll)
+    y = y + p["Dskip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm_gated(y, z, p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (fstate, conv_tail)
+
+
+def mamba_step(p, cfg: ArchConfig, x, state):
+    """Single-token decode.  x: (B, D); state = (ssm_state, conv_state)."""
+    m: SSMConfig = cfg.ssm
+    Bsz, D = x.shape
+    di = m.expand * D
+    H = di // m.head_dim
+    ssm_state, conv_state = state
+    z = jnp.einsum("bd,de->be", x, p["w_z"])
+    xx = jnp.einsum("bd,de->be", x, p["w_x"])
+    xB = jnp.einsum("bd,de->be", x, p["w_B"])
+    xC = jnp.einsum("bd,de->be", x, p["w_C"])
+    xBC = jnp.concatenate([xx, xB, xC], axis=-1)
+    conv, conv_state = conv1d_step(conv_state, xBC, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xs, Bs, Cs = _split_xbc(conv, cfg)
+    xs = xs.reshape(Bsz, H, m.head_dim)
+    Bs = Bs.reshape(Bsz, m.n_groups, m.state_dim)
+    Cs = Cs.reshape(Bsz, m.n_groups, m.state_dim)
+    dt = jax.nn.softplus(
+        jnp.einsum("bd,dh->bh", x, p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_state, y = ssd_step(ssm_state, xs, dt, A, Bs, Cs)
+    y = y + p["Dskip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, di).astype(x.dtype)
+    y = rms_norm_gated(y, z, p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+    return out, (ssm_state, conv_state)
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    m: SSMConfig = cfg.ssm
+    di = m.expand * cfg.d_model
+    H = di // m.head_dim
+    conv_ch = di + 2 * m.n_groups * m.state_dim
+    return (jnp.zeros((batch, H, m.state_dim, m.head_dim), jnp.float32),
+            jnp.zeros((batch, m.conv_width - 1, conv_ch), dtype))

@@ -1,0 +1,90 @@
+"""Pure-SSM LM (mamba2-370m): stacked Mamba2 blocks, no attention anywhere."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.partition import pcon
+from repro.models.transformer import padded_vocab, lm_loss_from_hidden
+
+
+def init_ssm_lm(cfg: ArchConfig, key, plan: PlanConfig = PlanConfig()):
+    dtype = jnp.dtype(plan.param_dtype)
+    Vp = padded_vocab(cfg)
+    ke, kb = jax.random.split(key)
+    keys = jax.random.split(kb, cfg.num_layers)
+    return {
+        "emb": L._dense_init(ke, (Vp, cfg.d_model), cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": jax.vmap(lambda k: ssm.init_mamba_block(k, cfg, dtype))(keys),
+    }
+
+
+def ssm_hidden(cfg: ArchConfig, plan: PlanConfig, params, embeds,
+               collect_state=False):
+    def body(x, lp):
+        from repro.models.specs import gather_fsdp
+        x = pcon(x, "dp", "sp", None)
+        lp = gather_fsdp(lp)
+        h, state = ssm.mamba_apply(lp, cfg, L.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                   unroll=plan.unroll_inner)
+        return x + h, (state if collect_state else None)
+
+    if plan.remat == "block":
+        body = jax.remat(body)
+    from repro.models.util import stack_scan
+    x, states = stack_scan(body, embeds, params["blocks"], plan.unroll_layers)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), states
+
+
+def ssm_lm_loss(cfg, plan, params, tokens, aux_coef=0.0):
+    e = pcon(params["emb"][tokens], "dp", None, None)
+    hidden, _ = ssm_hidden(cfg, plan, params, e)
+    Bsz, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate([jnp.ones((Bsz, S - 1), jnp.float32),
+                            jnp.zeros((Bsz, 1), jnp.float32)], axis=1)
+    return lm_loss_from_hidden(cfg, plan, params, hidden, targets, mask)
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    """Per-layer (ssm_state, conv_state) stacked over layers."""
+    s, c = ssm.init_mamba_state(cfg, batch, dtype)
+    L_ = cfg.num_layers
+    return {"ssm": jnp.zeros((L_,) + s.shape, s.dtype),
+            "conv": jnp.zeros((L_,) + c.shape, c.dtype)}
+
+
+def ssm_prefill(cfg, plan, params, tokens):
+    e = pcon(params["emb"][tokens], "dp", None, None)
+    hidden, states = ssm_hidden(cfg, plan, params, e, collect_state=True)
+    logits = jnp.einsum("bd,vd->bv", hidden[:, -1],
+                        params["emb"]).astype(jnp.float32)
+    cache = {"ssm": states[0], "conv": states[1].astype(e.dtype)}
+    pos = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+    return logits, cache, pos
+
+
+def ssm_decode_step(cfg: ArchConfig, plan: PlanConfig, params, cache, tokens, pos):
+    """pos is unused (state-space models carry no positional cache)."""
+    x = params["emb"][tokens]
+
+    def body(x, inp):
+        from repro.models.specs import gather_fsdp
+        lp, s, c = inp
+        lp = gather_fsdp(lp)
+        h, (s2, c2) = ssm.mamba_step(lp, cfg, L.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                     (s, c))
+        return x + h, (s2, c2)
+
+    from repro.models.util import stack_scan
+    x, (s2, c2) = stack_scan(body, x, (params["blocks"], cache["ssm"],
+                                       cache["conv"]), plan.unroll_layers)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x, params["emb"]).astype(jnp.float32)
+    logits = pcon(logits, "dp", "tp")
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, {"ssm": s2, "conv": c2}

@@ -1,0 +1,353 @@
+"""Decoder-only transformer LM (dense / GQA / MLA / MoE variants).
+
+Layers are stacked (leading dim L) and iterated with ``lax.scan`` — measured
+on this container an 80-layer unrolled compile takes 286 s vs 3.3 s scanned,
+and the roofline harness compensates for scan's body-counted-once cost
+accounting with a single-layer probe (see launch/dryrun.py).
+
+The loss is vocab-parallel: logits are sharded on the (padded) vocab dim over
+the TP axis and computed in sequence chunks under remat, so the full
+(B, S, V) logits tensor never materializes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.partition import pcon
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def _dtype(plan: PlanConfig):
+    return jnp.dtype(plan.param_dtype)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, dtype, *, use_moe: bool, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": (L.init_mla(k1, cfg, dtype) if cfg.mla is not None
+                 else L.init_attention(k1, cfg, dtype)),
+    }
+    if use_moe:
+        p["moe"] = M.init_moe(k2, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def _stack_init(init_fn, key, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm(cfg: ArchConfig, key, plan: PlanConfig = PlanConfig()):
+    dtype = _dtype(plan)
+    Vp = padded_vocab(cfg)
+    ke, kb, kp, kh = jax.random.split(key, 4)
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_main = cfg.num_layers - n_prefix
+    params = {
+        "emb": L._dense_init(ke, (Vp, cfg.d_model), cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": _stack_init(
+            lambda k: init_block(k, cfg, dtype, use_moe=cfg.moe is not None,
+                                 d_ff=cfg.d_ff), kb, n_main),
+    }
+    if n_prefix:
+        params["prefix_blocks"] = _stack_init(
+            lambda k: init_block(k, cfg, dtype, use_moe=False,
+                                 d_ff=cfg.moe.d_ff_dense), kp, n_prefix)
+    if not cfg.tie_embeddings:
+        params["head"] = L._dense_init(kh, (Vp, cfg.d_model), cfg.d_model, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def block_apply(p, cfg: ArchConfig, x, positions, *, chunk, use_moe,
+                unroll=False, moe_group=0, sp_residual=False):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        h, cache = L.mla_apply(p["attn"], cfg, h, positions, chunk=chunk,
+                               unroll=unroll)
+    else:
+        h, cache = L.attention_apply(p["attn"], cfg, h, positions, chunk=chunk,
+                                     unroll=unroll)
+    x = x + h
+    if sp_residual:
+        x = pcon(x, "dp", "sp", None)   # force reduce-scatter of the partial
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        h, aux = M.moe_apply(p["moe"], cfg, h, group_size=moe_group,
+                             unroll=unroll)
+    else:
+        h, aux = L.mlp_apply(p["mlp"], h), jnp.float32(0.0)
+    x = x + h
+    if sp_residual:
+        x = pcon(x, "dp", "sp", None)
+    return x, cache, aux
+
+
+def _scan_stack(cfg, plan: PlanConfig, blocks, x, positions, *, use_moe,
+                collect_cache: bool):
+    def body(x, lp):
+        from repro.models.specs import gather_fsdp
+        x = pcon(x, "dp", "sp", None)
+        lp = gather_fsdp(lp, plan.moe_ep)   # FSDP: gather weights, per layer
+        x, cache, aux = block_apply(lp, cfg, x, positions,
+                                    chunk=plan.attn_chunk, use_moe=use_moe,
+                                    unroll=plan.unroll_inner,
+                                    moe_group=plan.moe_group_size,
+                                    sp_residual=plan.sp_residual)
+        return x, (cache if collect_cache else None, aux)
+
+    if plan.remat == "block":
+        body = jax.remat(body)
+    from repro.models.util import stack_scan
+    x, ys = stack_scan(body, x, blocks, plan.unroll_layers)
+    caches, auxs = ys if ys is not None else (None, jnp.zeros((1,)))
+    return x, caches, jnp.sum(auxs)
+
+
+def lm_hidden(cfg: ArchConfig, plan: PlanConfig, params, embeds, positions,
+              collect_cache=False):
+    """embeds: (B, S, D) -> final hidden (B, S, D), caches, aux loss."""
+    x = embeds
+    caches = {}
+    aux = jnp.float32(0.0)
+    if "prefix_blocks" in params:
+        x, c, a = _scan_stack(cfg, plan, params["prefix_blocks"], x, positions,
+                              use_moe=False, collect_cache=collect_cache)
+        caches["prefix"] = c
+        aux += a
+    x, c, a = _scan_stack(cfg, plan, params["blocks"], x, positions,
+                          use_moe=cfg.moe is not None,
+                          collect_cache=collect_cache)
+    caches["main"] = c
+    aux += a
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches, aux
+
+
+def embed_tokens(cfg: ArchConfig, params, tokens):
+    e = params["emb"][tokens]
+    return pcon(e, "dp", None, None)
+
+
+def unembed(cfg: ArchConfig, params, x):
+    head = params["emb"] if "head" not in params else params["head"]
+    head = pcon(head, "tp", None)           # gather FSDP dim before contraction
+    logits = jnp.einsum("...d,vd->...v", x, head).astype(jnp.float32)
+    return logits
+
+
+# --------------------------------------------------------------------------
+# loss (vocab-parallel, sequence-chunked)
+# --------------------------------------------------------------------------
+
+def lm_loss_from_hidden(cfg: ArchConfig, plan: PlanConfig, params, hidden,
+                        targets, mask):
+    """hidden: (B, S, D); targets/mask: (B, S).  Mean NLL over mask."""
+    B, S, D = hidden.shape
+    Vp = padded_vocab(cfg)
+    head = params["emb"] if "head" not in params else params["head"]
+    head = pcon(head, "tp", None)           # gather FSDP dim before contraction
+    chunk = min(plan.loss_chunk, S)
+    if S % chunk:
+        chunk = S
+    nc = S // chunk
+
+    def chunk_loss(args):
+        xc, tc, mc = args
+        logits = jnp.einsum("bsd,vd->bsv", xc, head).astype(jnp.float32)
+        logits = pcon(logits, "dp", None, "tp")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, Vp, dtype=jnp.float32)
+        tgt = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum((lse - tgt) * mc)
+
+    if nc == 1:
+        total = jax.remat(chunk_loss)((hidden, targets, mask.astype(jnp.float32)))
+    else:
+        xs = (hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3),
+              targets.reshape(B, nc, chunk).transpose(1, 0, 2),
+              mask.astype(jnp.float32).reshape(B, nc, chunk).transpose(1, 0, 2))
+        if plan.unroll_inner:
+            total = sum(jax.remat(chunk_loss)(jax.tree.map(lambda a: a[i], xs))
+                        for i in range(nc))
+        else:
+            total, _ = jax.lax.scan(
+                lambda c, a: (c + jax.remat(chunk_loss)(a), None),
+                jnp.float32(0.0), xs)
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lm_loss(cfg: ArchConfig, plan: PlanConfig, params, tokens,
+            extra_embeds: Optional[jnp.ndarray] = None, aux_coef=0.01):
+    """Next-token loss.  tokens: (B, S_text).  extra_embeds: (B, P, D) prepended
+    (VLM patches); loss applies to text positions only."""
+    e = embed_tokens(cfg, params, tokens)
+    if extra_embeds is not None:
+        e = jnp.concatenate([extra_embeds.astype(e.dtype), e], axis=1)
+    Bsz, S, _ = e.shape
+    positions = jnp.arange(S)
+    hidden, _, aux = lm_hidden(cfg, plan, params, e, positions)
+    P = 0 if extra_embeds is None else extra_embeds.shape[1]
+    hid_text = hidden[:, P:, :]
+    targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((Bsz, tokens.shape[1] - 1), jnp.float32),
+         jnp.zeros((Bsz, 1), jnp.float32)], axis=1)
+    loss = lm_loss_from_hidden(cfg, plan, params, hid_text, targets, mask)
+    return loss + aux_coef * aux
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    """Decode KV cache pytree (dense and MLA layouts)."""
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_main = cfg.num_layers - n_prefix
+    def dense_cache(n):
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+    def mla_cache(n):
+        m = cfg.mla
+        return {
+            "c": jnp.zeros((n, batch, max_len, m.kv_lora_rank), dtype),
+            "kr": jnp.zeros((n, batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    mk = mla_cache if cfg.mla is not None else dense_cache
+    cache = {"main": mk(n_main)}
+    if n_prefix:
+        cache["prefix"] = mk(n_prefix)
+    return cache
+
+
+def block_decode(p, cfg: ArchConfig, x, cache_slices, pos, *, use_moe,
+                 use_cp=False):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        h, c0, c1 = L.mla_decode(p["attn"], cfg, h, cache_slices["c"],
+                                 cache_slices["kr"], pos)
+        new_cache = {"c": c0, "kr": c1}
+    else:
+        h, c0, c1 = L.attention_decode(p["attn"], cfg, h, cache_slices["k"],
+                                       cache_slices["v"], pos, use_cp=use_cp)
+        new_cache = {"k": c0, "v": c1}
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if use_moe:
+        h, _ = M.moe_apply(p["moe"], cfg, h)
+    else:
+        h = L.mlp_apply(p["mlp"], h)
+    return x + h, new_cache
+
+
+def _decode_stack(cfg, plan, blocks, cache, x, pos, *, use_moe):
+    """fori_loop with the cache in the CARRY and in-place dynamic updates —
+    scan's xs->ys cache threading double-buffers the (huge) cache on the CPU
+    scheduler, while a while-loop carry aliases in place."""
+    from repro.models.specs import gather_fsdp
+    from repro.models.util import stack_scan
+    L = jax.tree.leaves(blocks)[0].shape[0]
+
+    def one_layer(i, x, cache):
+        lp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            blocks)
+        cs = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            cache)
+        lp = gather_fsdp(lp, plan.moe_ep)
+        x, new_cs = block_decode(lp, cfg, x, cs, pos, use_moe=use_moe,
+                                 use_cp=plan.decode_cp)
+        cache = jax.tree.map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                a, u.astype(a.dtype), i, 0), cache, new_cs)
+        return x, cache
+
+    if plan.unroll_layers:
+        for i in range(L):
+            x, cache = one_layer(i, x, cache)
+        return x, cache
+    x, cache = jax.lax.fori_loop(
+        0, L, lambda i, c: one_layer(i, c[0], c[1]), (x, cache))
+    return x, cache
+
+
+def lm_decode_step(cfg: ArchConfig, plan: PlanConfig, params, cache, tokens, pos):
+    """One decode step.  tokens: (B,) int32; pos: (B,) write positions.
+
+    Returns (next_tokens (B,), new_cache)."""
+    x = params["emb"][tokens]
+    new_cache = {}
+    if "prefix_blocks" in params:
+        x, c = _decode_stack(cfg, plan, params["prefix_blocks"], cache["prefix"],
+                             x, pos, use_moe=False)
+        new_cache["prefix"] = c
+    x, c = _decode_stack(cfg, plan, params["blocks"], cache["main"], x, pos,
+                         use_moe=cfg.moe is not None)
+    new_cache["main"] = c
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)                     # (B, Vp)
+    logits = pcon(logits, "dp", "tp")
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, new_cache
+
+
+def lm_prefill(cfg: ArchConfig, plan: PlanConfig, params, tokens, max_len,
+               extra_embeds=None, cache_dtype=None):
+    """Run the prompt, build a decode cache of capacity max_len.
+
+    Returns (last_logits (B, Vp), cache, next_pos (B,))."""
+    e = embed_tokens(cfg, params, tokens)
+    if extra_embeds is not None:
+        e = jnp.concatenate([extra_embeds.astype(e.dtype), e], axis=1)
+    Bsz, S, _ = e.shape
+    positions = jnp.arange(S)
+    hidden, caches, _ = lm_hidden(cfg, plan, params, e, positions,
+                                  collect_cache=True)
+    cdt = cache_dtype or e.dtype
+    cache = init_cache(cfg, Bsz, max_len, cdt)
+
+    def fill(dst, src_pair, names):
+        for name, src in zip(names, src_pair):
+            # src: (L, B, S, ...) -> write into (L, B, max_len, ...)
+            dst[name] = jax.lax.dynamic_update_slice_in_dim(
+                dst[name], src.astype(cdt), 0, axis=2)
+        return dst
+
+    names = ("c", "kr") if cfg.mla is not None else ("k", "v")
+    if "prefix" in cache and caches.get("prefix") is not None:
+        cache["prefix"] = fill(cache["prefix"], caches["prefix"], names)
+    cache["main"] = fill(cache["main"], caches["main"], names)
+    for grp in cache.values():
+        for k in grp:
+            grp[k] = pcon(grp[k], None, "dp", "cache", None) if grp[k].ndim == 4 \
+                else pcon(grp[k], None, "dp", "cache", None, None)
+    last = hidden[:, -1, :]
+    logits = unembed(cfg, params, last)
+    next_pos = jnp.full((Bsz,), S, jnp.int32)
+    return logits, cache, next_pos

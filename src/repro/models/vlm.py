@@ -1,0 +1,29 @@
+"""InternVL2-style VLM: vision frontend STUB + decoder LM backbone.
+
+``input_specs()`` provides precomputed patch embeddings (B, P, D) — the
+InternViT tower is out of scope per the assignment.  Patches are prepended to
+the token embeddings; loss applies to text positions only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models import transformer as T
+
+
+init_vlm = T.init_lm
+
+
+def vlm_loss(cfg: ArchConfig, plan: PlanConfig, params, patch_embeds, tokens,
+             aux_coef=0.0):
+    return T.lm_loss(cfg, plan, params, tokens, extra_embeds=patch_embeds,
+                     aux_coef=aux_coef)
+
+
+def vlm_prefill(cfg, plan, params, patch_embeds, tokens, max_len):
+    return T.lm_prefill(cfg, plan, params, tokens, max_len,
+                        extra_embeds=patch_embeds)
+
+
+vlm_decode_step = T.lm_decode_step

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule, constant_schedule
+from repro.optim.compression import int8_ef_compress, int8_ef_init
+
+__all__ = ["AdamW", "cosine_schedule", "constant_schedule",
+           "int8_ef_compress", "int8_ef_init"]

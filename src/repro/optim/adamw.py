@@ -1,0 +1,70 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and configurable
+moment dtype (bf16 moments for memory-bound giants like grok-1)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+@dataclass(frozen=True)
+class AdamW:
+    learning_rate: Union[float, Callable[[jnp.ndarray], jnp.ndarray]] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params):
+        mdt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, stats). grads/params: f32 trees."""
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9)) \
+            if self.clip_norm else jnp.float32(1.0)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        lr = self._lr(count)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step = (m32 / c1) / (jnp.sqrt(v32 / c2) + self.eps)
+            p2 = p.astype(jnp.float32) - lr * (step + self.weight_decay
+                                               * p.astype(jnp.float32))
+            return p2.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}, \
+            {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,44 @@
+"""Int8 error-feedback gradient compression.
+
+In an SPMD/jit program the DP gradient reduction is XLA-inserted, so the
+compression is applied at the microbatch-accumulation boundary — the exact
+point a hand-rolled collective would compress before its reduce-scatter.  The
+residual (quantization error) is carried in the train state and re-added the
+next step (error feedback), which keeps SGD convergence (tested in
+tests/test_optim.py).  The 4x wire-size reduction is credited in the roofline
+collective term when the plan enables it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_ef_compress(grads, ef_state):
+    """Quantize grads to int8 with error feedback.
+
+    Returns (dequantized grads as would arrive post-reduce, new ef_state)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, s = _quant(g)
+        dq = _dequant(q, s)
+        return dq, g - dq
+
+    out = jax.tree.map(one, grads, ef_state)
+    dq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    return dq, ef

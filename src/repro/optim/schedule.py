@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda count: jnp.float32(lr)
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def f(count):
+        c = count.astype(jnp.float32)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(c < warmup_steps, warm, cos)
+    return f

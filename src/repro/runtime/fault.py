@@ -1,0 +1,55 @@
+"""Fault-tolerance primitives: failure injection + straggler detection.
+
+On a real cluster the failure signal is a missing heartbeat from a worker;
+here ``FailureInjector`` raises at configured steps so the restart path is
+exercised end-to-end in tests.  ``StragglerDetector`` watches step times — on
+detection the trainer notifies the monitor (the BigDAWG drift path: the plan
+that was optimal under training-time conditions is re-evaluated).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Set
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    fail_at_steps: Set[int] = field(default_factory=set)
+    _fired: Set[int] = field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class StragglerDetector:
+    """Welford running stats over step times; z-score threshold flags
+    stragglers (slow steps) for plan re-selection / replacement."""
+    z_threshold: float = 3.0
+    warmup: int = 5
+    n: int = 0
+    mean: float = 0.0
+    m2: float = 0.0
+    flagged: List[int] = field(default_factory=list)
+    on_straggler: Optional[Callable[[int, float], None]] = None
+
+    def observe(self, step: int, seconds: float) -> bool:
+        if self.n >= self.warmup:
+            std = math.sqrt(self.m2 / max(self.n - 1, 1))
+            if std > 0 and (seconds - self.mean) / std > self.z_threshold:
+                self.flagged.append(step)
+                if self.on_straggler:
+                    self.on_straggler(step, seconds)
+                return True              # straggler: exclude from stats
+        self.n += 1
+        d = seconds - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (seconds - self.mean)
+        return False

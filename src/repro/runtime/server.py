@@ -1,0 +1,127 @@
+"""Batched serving loop with continuous slot management.
+
+A fixed-capacity decode batch over a shared KV cache: incoming requests are
+prefilled one at a time into free slots (each prefill writes its cache rows),
+decode steps advance ALL active slots together, and finished slots (EOS or
+max-tokens) are released.  This is the standard continuous-batching serving
+shape (vLLM-style) restricted to slot granularity — the polystore planner
+picks the decode plan (tensorplan), and the monitor records per-step times.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                   # (len,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class BatchServer:
+    def __init__(self, *, slots: int, max_len: int, prefill_fn, decode_fn,
+                 params, init_cache_fn, eos_id: Optional[int] = None):
+        """prefill_fn(params, tokens(1,L)) -> (logits(1,V), cache_rows, pos)
+        decode_fn(params, cache, tokens(B,), pos(B,)) -> (next(B,), cache)."""
+        self.slots = slots
+        self.max_len = max_len
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.params = params
+        self.cache = init_cache_fn(slots, max_len)
+        self.eos_id = eos_id
+        self.active: Dict[int, Request] = {}     # slot -> request
+        self.pos = np.zeros((slots,), np.int32)
+        self.tokens = np.zeros((slots,), np.int32)
+        self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0,
+                      "decode_seconds": 0.0}
+
+    # -- slot management -----------------------------------------------------
+    def _free_slots(self):
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def _write_rows(self, cache_rows, slot: int, plen: int):
+        """Scatter one request's prefilled cache rows into the batch cache.
+
+        Generic across cache families: the batch axis of each leaf is located
+        by matching (slots vs 1) dims; a following seq axis, if shorter in the
+        source, is zero-padded to capacity."""
+        def place(dst, src):
+            b_axis = None
+            for ax in range(dst.ndim):
+                if dst.shape[ax] == self.slots and src.shape[ax] == 1:
+                    b_axis = ax
+                    break
+            if b_axis is None:           # state-style leaf without seq dim
+                return dst
+            start = [0] * dst.ndim
+            start[b_axis] = slot
+            src_pad = src
+            # seq axis, if present, is b_axis+1 with src length plen
+            if (b_axis + 1 < dst.ndim
+                    and src.shape[b_axis + 1] != dst.shape[b_axis + 1]):
+                pad = dst.shape[b_axis + 1] - src.shape[b_axis + 1]
+                widths = [(0, 0)] * dst.ndim
+                widths[b_axis + 1] = (0, pad)
+                src_pad = jnp.pad(src, widths)
+            return jax.lax.dynamic_update_slice(dst, src_pad.astype(dst.dtype),
+                                                start)
+        self.cache = jax.tree.map(place, self.cache, cache_rows)
+
+    def submit(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        tok = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache_rows, pos = self.prefill_fn(self.params, tok)
+        self._write_rows(cache_rows, slot, len(req.prompt))
+        first = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(first)
+        self.tokens[slot] = first
+        self.pos[slot] = len(req.prompt)
+        self.active[slot] = req
+        self.stats["prefills"] += 1
+        return True
+
+    # -- decode ----------------------------------------------------------------
+    def step(self):
+        if not self.active:
+            return
+        t0 = time.perf_counter()
+        nxt, self.cache = self.decode_fn(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        self.stats["decode_seconds"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self.pos[slot] += 1
+            self.tokens[slot] = tok
+            self.stats["tokens_out"] += 1
+            if ((self.eos_id is not None and tok == self.eos_id)
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or self.pos[slot] >= self.max_len - 1):
+                req.done = True
+                del self.active[slot]
+
+    def run(self, requests: List[Request], max_steps: int = 10000):
+        pending = list(requests)
+        steps = 0
+        while (pending or self.active) and steps < max_steps:
+            while pending and self._free_slots():
+                self.submit(pending.pop(0))
+            self.step()
+            steps += 1
+        return requests

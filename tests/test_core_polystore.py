@@ -1,0 +1,258 @@
+"""Core polystore middleware tests: islands, shims, casts, signatures,
+planner, monitor phases, executor correctness — incl. hypothesis properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BigDAWG, COOMatrix, ColumnarTable, DenseTensor,
+                        ENGINES, Monitor, array, relational, text,
+                        enumerate_plans, execute_plan, signature,
+                        signature_text, degenerate)
+from repro.core import cast as castmod
+from repro.core.shims import validate, shim_table
+from repro.core.monitor import usage_drift
+
+
+# ---------------------------------------------------------------------------
+# shims / islands
+# ---------------------------------------------------------------------------
+
+def test_every_island_op_has_a_shim():
+    validate()
+    tbl = shim_table()
+    assert ("array", "matmul", "dense_array") in tbl
+    assert ("relational", "count", "columnar") in tbl
+
+
+def test_degenerate_island_full_engine_power():
+    isl = degenerate("kv_sparse")
+    assert set(isl.ops) == set(ENGINES["kv_sparse"].ops)
+    for op, engines in isl.ops.items():
+        assert engines == ("kv_sparse",)
+
+
+# ---------------------------------------------------------------------------
+# casts (hypothesis round-trips)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+def test_cast_dense_columnar_roundtrip(n, t, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, t)).astype(np.float32)
+    d = DenseTensor(jnp.asarray(a))
+    back = castmod.cast(castmod.cast(d, "columnar"), "dense")
+    np.testing.assert_allclose(np.asarray(back.data), a, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(2, 12), st.integers(0, 2 ** 31 - 1))
+def test_cast_dense_coo_roundtrip(n, t, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, t)).astype(np.float32)
+    a[rng.random((n, t)) < 0.5] = 0.0          # sparse-ish
+    d = DenseTensor(jnp.asarray(a))
+    back = castmod.cast(castmod.cast(d, "coo"), "dense")
+    np.testing.assert_allclose(np.asarray(back.data), a, rtol=1e-6)
+
+
+def test_two_hop_cast_through_dense():
+    m = COOMatrix(jnp.asarray([0, 1]), jnp.asarray([1, 0]),
+                  jnp.asarray([2.0, 3.0]), (2, 2))
+    t = castmod.cast(m, "columnar")     # direct
+    s = castmod.cast(castmod.cast(m, "dense"), "columnar")
+    assert t.kind == s.kind == "columnar"
+
+
+# ---------------------------------------------------------------------------
+# engines agree on logical answers (the polystore invariant)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 40), st.integers(0, 2 ** 31 - 1))
+def test_count_agrees_across_engines(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 5, size=(n,)).astype(np.float32)   # no zeros
+    d = DenseTensor(jnp.asarray(a))
+    col = castmod.cast(d, "columnar")
+    c_dense = int(ENGINES["dense_array"].run("count", {}, d).data)
+    c_col = int(ENGINES["columnar"].run("count", {}, col).data)
+    assert c_dense == c_col == n
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 60), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+def test_distinct_agrees_across_engines(n, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, k + 1, size=(n,)).astype(np.float32)
+    d = DenseTensor(jnp.asarray(a))
+    col = castmod.cast(d, "columnar")
+    want = len(np.unique(a))
+    assert int(ENGINES["dense_array"].run("distinct", {}, d).data) == want
+    assert int(ENGINES["columnar"].run("distinct", {}, col).data) == want
+
+
+def test_matmul_agrees_dense_vs_columnar():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(8, 6)).astype(np.float32)
+    b = rng.normal(size=(6, 5)).astype(np.float32)
+    da, db = DenseTensor(jnp.asarray(a)), DenseTensor(jnp.asarray(b))
+    out_d = ENGINES["dense_array"].run("matmul", {}, da, db)
+    ca, cb = castmod.cast(da, "columnar"), castmod.cast(db, "columnar")
+    out_c = ENGINES["columnar"].run("matmul", {}, ca, cb)
+    dense_c = castmod.cast(out_c, "dense")
+    np.testing.assert_allclose(np.asarray(dense_c.data), a @ b, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_tfidf_agrees_dense_vs_kv():
+    rng = np.random.default_rng(1)
+    tf = (rng.random((6, 10)) < 0.4) * rng.integers(1, 4, (6, 10))
+    tf = tf.astype(np.float32)
+    d = DenseTensor(jnp.asarray(tf))
+    coo = castmod.cast(d, "coo")
+    out_d = np.asarray(ENGINES["dense_array"].run("tfidf", {}, d).data)
+    out_kv = np.asarray(castmod.cast(
+        ENGINES["kv_sparse"].run("tfidf", {}, coo), "dense").data)
+    np.testing.assert_allclose(out_d, out_kv, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+def test_signature_stable_across_rebuilds():
+    q1 = array.matmul(relational.select("A", column="value", lo=0.5), "B")
+    q2 = array.matmul(relational.select("A", column="value", lo=0.5), "B")
+    assert signature(q1) == signature(q2)
+
+
+def test_signature_bins_constants():
+    # nearly identical constants share a signature (paper: constants binned)
+    a = array.scale(array.matmul("A", "B"), factor=1000.0)
+    b = array.scale(array.matmul("A", "B"), factor=1040.0)
+    c = array.scale(array.matmul("A", "B"), factor=2000.0)
+    assert signature(a) == signature(b)
+    assert signature(a) != signature(c)
+
+
+def test_signature_sensitive_to_structure_and_objects():
+    q1 = array.matmul("A", "B")
+    q2 = array.matmul("B", "A")
+    q3 = array.count("A")
+    assert len({signature(q1), signature(q2), signature(q3)}) == 3
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def _small_bd():
+    bd = BigDAWG()
+    rng = np.random.default_rng(0)
+    bd.register("A", DenseTensor(jnp.asarray(
+        rng.normal(size=(16, 16)).astype(np.float32))), engine="dense_array")
+    bd.register("B", DenseTensor(jnp.asarray(
+        rng.normal(size=(16, 8)).astype(np.float32))), engine="dense_array")
+    return bd
+
+
+def test_planner_enumerates_hybrid_plans():
+    bd = _small_bd()
+    q = array.matmul(relational.select("A", column="value", lo=-1.0), "B")
+    plans = enumerate_plans(q, bd.catalog)
+    descs = {p.describe(q) for p in plans}
+    assert "select@columnar matmul@dense_array" in descs
+    assert "select@columnar matmul@columnar" in descs
+
+
+def test_plan_keys_apply_to_rebuilt_queries():
+    bd = _small_bd()
+    mk = lambda: array.matmul(relational.select("A", column="value", lo=-1.0), "B")
+    plans = enumerate_plans(mk(), bd.catalog)
+    # a plan enumerated from one instance must execute a fresh instance
+    res = execute_plan(mk(), plans[0], bd.catalog)
+    assert res.value.data.shape == (16, 8)
+
+
+# ---------------------------------------------------------------------------
+# monitor: training/production phases + drift
+# ---------------------------------------------------------------------------
+
+def test_training_then_production(tmp_path):
+    bd = _small_bd()
+    q = array.matmul(relational.select("A", column="value", lo=-0.5), "B")
+    rep1 = bd.execute(q, mode="training")
+    assert rep1.mode == "training" and rep1.plans_tried >= 2
+    rep2 = bd.execute(q, mode="auto")
+    assert rep2.mode == "production"
+    assert rep2.plan_key == rep1.plan_key
+    # persistence round-trip
+    p = tmp_path / "monitor.json"
+    bd.monitor.save(str(p))
+    m2 = Monitor(str(p))
+    key, stats, _ = m2.best(rep1.sig)
+    assert key == rep1.plan_key and stats.n >= 1
+
+
+def test_production_falls_back_to_training_on_unknown_signature():
+    bd = _small_bd()
+    q = array.count("A")
+    rep = bd.execute(q, mode="production")
+    assert rep.mode == "training"          # signature miss -> train (paper)
+
+
+def test_drift_triggers_retraining():
+    bd = _small_bd()
+    q = array.matmul("A", "B")
+    rep1 = bd.execute(q, mode="training")
+    # corrupt the recorded usage to look like a very different system
+    for stats in bd.monitor.db[rep1.sig].values():
+        stats.usage = {"devices": 4096.0, "rss_gb": 10 * stats.usage.get(
+            "rss_gb", 1.0) + 100.0, "time": 0.0}
+    rep2 = bd.execute(q, mode="production")
+    assert rep2.drifted
+    assert bd.monitor.background_queue     # losers queued for re-exploration
+
+
+def test_background_queue_execution():
+    bd = _small_bd()
+    q = array.matmul("A", "B")
+    rep = bd.execute(q, mode="training")
+    for stats in bd.monitor.db[rep.sig].values():
+        stats.usage = {"devices": 4096.0, "rss_gb": 999.0, "time": 0.0}
+    bd.execute(q, mode="production")
+    n = bd.run_background_queue({rep.sig: q})
+    assert n >= 1
+
+
+def test_usage_drift_metric():
+    assert usage_drift({"devices": 1, "rss_gb": 1}, {"devices": 1, "rss_gb": 1}) == 0
+    assert usage_drift({"devices": 1, "rss_gb": 1}, {"devices": 2, "rss_gb": 1}) >= 0.5
+
+
+# ---------------------------------------------------------------------------
+# executor correctness vs direct jnp
+# ---------------------------------------------------------------------------
+
+def test_executor_matches_numpy_reference():
+    bd = _small_bd()
+    q = array.matmul(relational.select("A", column="value", lo=-0.25, hi=0.75),
+                     "B")
+    rep = bd.execute(q, mode="training")
+    A = np.asarray(bd.catalog["A"].obj.data)
+    B = np.asarray(bd.catalog["B"].obj.data)
+    sel = np.where((A >= -0.25) & (A <= 0.75), A, 0.0)
+    np.testing.assert_allclose(np.asarray(rep.result.data), sel @ B,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_executor_counts_cast_bytes():
+    bd = _small_bd()
+    q = array.matmul(relational.select("A", column="value", lo=-1.0), "B")
+    plans = enumerate_plans(q, bd.catalog)
+    hybrid = next(p for p in plans
+                  if p.describe(q) == "select@columnar matmul@dense_array")
+    res = execute_plan(q, hybrid, bd.catalog)
+    assert res.cast_bytes > 0 and res.n_casts >= 2

@@ -1,0 +1,106 @@
+"""Multi-device correctness tests, run in subprocesses with
+--xla_force_host_platform_device_count so the main pytest process keeps its
+single-device view (smoke tests must see 1 device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(n, code):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n}")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert p.returncode == 0, p.stdout + p.stderr
+    return p.stdout
+
+
+def test_cp_decode_matches_naive_on_8_devices():
+    out = run_devices(8, """
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_arch, PlanConfig, ShapeConfig
+        from repro.models import api
+        from repro.models.partition import plan_scope
+
+        cfg = get_arch("internlm2-1.8b").smoke()
+        plan = PlanConfig(param_dtype="float32", compute_dtype="float32",
+                          attn_chunk=8, remat="none")
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        shape = ShapeConfig("d", "decode", 32, 4)
+        params = api.init_params(cfg, jax.random.PRNGKey(0), plan)
+        tok = jnp.array([3, 5, 7, 9], jnp.int32)
+        pos = jnp.array([9, 17, 4, 30], jnp.int32)
+
+        def run(decode_cp):
+            p2 = plan.with_(decode_cp=decode_cp)
+            with plan_scope(mesh, p2):
+                cache = jax.tree.map(
+                    lambda s: jnp.zeros(s.shape, s.dtype),
+                    api.example_cache(cfg, shape, p2))
+                # fill the cache with deterministic values
+                cache = jax.tree.map(
+                    lambda c: (jnp.arange(c.size, dtype=jnp.float32)
+                               .reshape(c.shape) % 7 - 3) / 10 if
+                    jnp.issubdtype(c.dtype, jnp.floating) else c, cache)
+                step = jax.jit(api.make_decode_step(cfg, shape, p2))
+                nt, nc = step(params, cache, tok, pos)
+                return np.asarray(nt), jax.tree.map(np.asarray, nc)
+
+        t0, c0 = run(False)
+        t1, c1 = run(True)
+        np.testing.assert_array_equal(t0, t1)
+        for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1)):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+        print("CP_DECODE_OK")
+    """)
+    assert "CP_DECODE_OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_devices(8, """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_arch, PlanConfig
+        from repro.models import api
+        from repro.models.partition import plan_scope
+        from repro.optim import AdamW
+
+        cfg = get_arch("internlm2-1.8b").smoke()
+        plan = PlanConfig(param_dtype="float32", compute_dtype="float32",
+                          master_dtype="float32", attn_chunk=8, loss_chunk=8,
+                          remat="none")
+        opt = AdamW(learning_rate=1e-3)
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16),
+                                              0, cfg.vocab_size)}
+        # single device
+        state0 = api.init_train_state(cfg, plan, jax.random.PRNGKey(0), opt)
+        s1, m1 = jax.jit(api.make_train_step(cfg, plan, opt))(state0, batch)
+        # 8-device mesh (dp=2, tp=4)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with plan_scope(mesh, plan):
+            state0b = api.init_train_state(cfg, plan, jax.random.PRNGKey(0), opt)
+            sspec = api.train_state_specs(cfg, plan,
+                                          jax.eval_shape(lambda: state0b))
+            sshard = api.to_shardings(mesh, sspec)
+            state0b = jax.tree.map(jax.device_put, state0b,
+                                   sshard)
+            step = jax.jit(api.make_train_step(cfg, plan, opt),
+                           in_shardings=(sshard, None),
+                           out_shardings=(sshard, None))
+            s2, m2 = step(state0b, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-4)
+        for a, b in zip(jax.tree.leaves(s1["master"]),
+                        jax.tree.leaves(s2["master"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-4)
+        print("SHARDED_TRAIN_OK")
+    """)
+    assert "SHARDED_TRAIN_OK" in out

@@ -1,0 +1,73 @@
+"""Dry-run machinery unit tests (no 512-device init needed)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch, shape_applicable
+from repro.launch.dryrun import (parse_collective_bytes, _probe_cfg,
+                                 scan_depth)
+
+
+HLO = """
+  %ag = bf16[16,512]{1,0} all-gather(bf16[16,32]{1,0} %p0), dimensions={1}
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %x), to_apply=%add
+  %rs.1 = f32[2,64]{1,0} reduce-scatter(f32[2,1024]{1,0} %y), dimensions={1}
+  %a2a = (bf16[4,4]{1,0}) all-to-all(bf16[4,4]{1,0} %z)
+  %cp = u32[10]{0} collective-permute(u32[10]{0} %w)
+  %ars = f32[8,128]{1,0} all-reduce-start(f32[8,128]{1,0} %x2)
+  %ard = f32[8,128]{1,0} all-reduce-done(f32[8,128]{1,0} %ars)
+  %normal = f32[999]{0} add(f32[999]{0} %a, f32[999]{0} %b)
+"""
+
+
+def test_parse_collective_bytes():
+    total, breakdown = parse_collective_bytes(HLO)
+    assert breakdown["all-gather"]["count"] == 1
+    # all-gather result: 16*512*2 (the bf16 operand in the line also counts
+    # toward the moved payload estimate)
+    assert breakdown["all-gather"]["bytes"] >= 16 * 512 * 2
+    # all-reduce counts 2x (ring), and -start counts once, -done is ignored
+    assert breakdown["all-reduce"]["count"] == 2
+    assert breakdown["collective-permute"]["count"] == 1
+    assert breakdown["all-to-all"]["count"] == 1
+    assert total == sum(v["bytes"] for v in breakdown.values())
+
+
+def test_parse_ignores_non_collectives():
+    total, breakdown = parse_collective_bytes("%x = f32[10]{0} add(%a, %b)")
+    assert total == 0 and breakdown == {}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_probe_cfgs_shrink_depth(name):
+    cfg = get_arch(name)
+    c1, c2 = _probe_cfg(cfg, 1), _probe_cfg(cfg, 2)
+    assert c1.num_layers < c2.num_layers <= cfg.num_layers
+    assert scan_depth(cfg) >= 2
+    # probe geometry consistent with the scan-depth accounting
+    if cfg.family == "hybrid":
+        assert c1.num_layers % cfg.attn_period == \
+            cfg.num_layers % cfg.attn_period
+    if cfg.family == "encdec":
+        assert c1.encoder_layers == 1 and c2.encoder_layers == 2
+
+
+def test_cell_grid_is_40():
+    cells = [(a.name, s.name) for a in ARCHS.values() for s in SHAPES]
+    assert len(cells) == 40
+    skips = [1 for a in ARCHS.values() for s in SHAPES
+             if not shape_applicable(a, s)[0]]
+    assert sum(skips) == 8          # long_500k for the 8 full-attention archs
+
+
+def test_default_plans():
+    from repro.core.tensorplan import default_plan, enumerate_variants
+    cfg = get_arch("qwen2-72b")
+    tr = next(s for s in SHAPES if s.name == "train_4k")
+    p = default_plan(cfg, tr)
+    assert p.accum == 8 and p.remat == "block"
+    de = next(s for s in SHAPES if s.name == "decode_32k")
+    assert default_plan(cfg, de).remat == "none"
+    assert default_plan(get_arch("grok-1-314b"), tr).moment_dtype == "bfloat16"
+    vs = enumerate_variants(cfg, tr)
+    assert len({v.name for v in vs}) == len(vs) >= 5

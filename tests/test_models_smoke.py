@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode step
+on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, PlanConfig, ShapeConfig
+from repro.models import api
+from repro.optim import AdamW
+
+SMOKE_PLAN = PlanConfig(param_dtype="float32", compute_dtype="float32",
+                        master_dtype="float32", attn_chunk=8, loss_chunk=8,
+                        remat="none")
+B, S = 2, 16
+
+
+def smoke_batch(cfg, mode="train"):
+    key = jax.random.PRNGKey(0)
+    if mode == "decode":
+        return {"tokens": jnp.zeros((B,), jnp.int32),
+                "pos": jnp.full((B,), 3, jnp.int32)}
+    if cfg.family == "vlm":
+        Pf = cfg.num_frontend_tokens
+        return {"patch_embeds": jax.random.normal(key, (B, Pf, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, S - Pf), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        s_dec = S if mode == "train" else 1
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, s_dec), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    return {}
+
+
+def get_params(cfg, params_cache):
+    if cfg.name not in params_cache:
+        params_cache[cfg.name] = api.init_params(
+            cfg, jax.random.PRNGKey(1), SMOKE_PLAN)
+    return params_cache[cfg.name]
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_loss_finite(name, params_cache):
+    cfg = get_arch(name).smoke()
+    params = get_params(cfg, params_cache)
+    loss_fn = api.get_loss_fn(cfg, SMOKE_PLAN)
+    loss = jax.jit(loss_fn)(params, smoke_batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{name}: loss not finite"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step(name, params_cache):
+    cfg = get_arch(name).smoke()
+    opt = AdamW(learning_rate=1e-3)
+    state = api.init_train_state(cfg, SMOKE_PLAN, jax.random.PRNGKey(2), opt)
+    step = jax.jit(api.make_train_step(cfg, SMOKE_PLAN, opt))
+    batch = smoke_batch(cfg)
+    state2, m1 = step(state, batch)
+    state3, m2 = step(state2, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"]), \
+        f"{name}: loss did not go down on repeated batch"
+    assert int(state3["step"]) == 2
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode(name, params_cache):
+    cfg = get_arch(name).smoke()
+    params = get_params(cfg, params_cache)
+    shape = ShapeConfig("smoke_decode", "decode", 32, B)
+    prefill = api.make_prefill(cfg, shape, SMOKE_PLAN)
+    batch = smoke_batch(cfg, mode="prefill")
+    logits, cache, pos = jax.jit(prefill)(params, batch)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    decode = api.make_decode_step(cfg, shape, SMOKE_PLAN)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok2, cache2 = jax.jit(decode)(params, cache, tok, pos)
+    assert tok2.shape == (B,)
+    assert tok2.dtype == jnp.int32
+    # caches must keep their structure
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_accum_matches_single(name, params_cache):
+    """Gradient accumulation must match the single-batch step (property)."""
+    cfg = get_arch(name).smoke()
+    opt = AdamW(learning_rate=1e-2, clip_norm=0.0)
+    key = jax.random.PRNGKey(3)
+    state = api.init_train_state(cfg, SMOKE_PLAN, key, opt)
+    batch = smoke_batch(cfg)
+    s1, m1 = jax.jit(api.make_train_step(cfg, SMOKE_PLAN, opt))(state, batch)
+    plan2 = SMOKE_PLAN.with_(accum=2)
+    s2, m2 = jax.jit(api.make_train_step(cfg, plan2, opt))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-4)
+    l1 = jax.tree.leaves(s1["master"])
+    l2 = jax.tree.leaves(s2["master"])
+    for a, b in zip(l1, l2):
+        # adam's first step ~ sign(g)*lr wherever |g| >> eps; accumulation
+        # reorders f32 sums, so allow ~2% of one lr step in absolute terms
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=3e-3, atol=1e-3)
+
+
+def test_count_params_sane():
+    n = api.count_params(get_arch("qwen2-72b"))
+    assert 70e9 < n < 82e9, f"qwen2-72b param count {n/1e9:.1f}B out of range"
+    n2 = api.count_params(get_arch("grok-1-314b"))
+    assert 280e9 < n2 < 340e9, f"grok-1 param count {n2/1e9:.1f}B out of range"
+    na = api.count_params(get_arch("grok-1-314b"), active_only=True)
+    assert na < n2 * 0.4

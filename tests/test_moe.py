@@ -1,0 +1,90 @@
+"""MoE layer properties: chunked dispatch equivalence, capacity semantics,
+combine correctness against a dense reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import moe as M
+
+
+def _setup(seed=0, B=2, S=16):
+    cfg = get_arch("deepseek-v2-lite-16b").smoke()
+    p = M.init_moe(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                          (B, S, cfg.d_model), jnp.float32)
+    return cfg, p, x
+
+
+def test_chunked_equals_unchunked():
+    # capacity is per-group, so exact equivalence requires no drops
+    cfg, p, x = _setup(S=16)
+    m = dataclasses.replace(cfg.moe, capacity_factor=100.0)
+    cfg = dataclasses.replace(cfg, moe=m)
+    y0, a0 = M.moe_apply(p, cfg, x, group_size=0)
+    y1, a1 = M.moe_apply(p, cfg, x, group_size=8)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_unroll_equals_scan():
+    cfg, p, x = _setup(S=16)
+    y0, _ = M.moe_apply(p, cfg, x, group_size=8, unroll=False)
+    y1, _ = M.moe_apply(p, cfg, x, group_size=8, unroll=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-5,
+                               atol=2e-6)
+
+
+def test_combine_matches_dense_reference():
+    """With capacity >= T (no drops), MoE == explicit per-token expert sum."""
+    cfg, p, x = _setup(S=8)
+    m = dataclasses.replace(cfg.moe, capacity_factor=100.0)  # no drops
+    cfg = dataclasses.replace(cfg, moe=m)
+    y, _ = M.moe_apply(p, cfg, x)
+
+    # dense reference
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    logits = jnp.einsum("btd,de->bte", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = jax.lax.top_k(probs, K)
+    topw = topw / topw.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(E):
+        h = jnp.einsum("btd,df->btf", x, p["we1"][e])
+        g = jnp.einsum("btd,df->btf", x, p["we3"][e])
+        ye = jnp.einsum("btf,fd->btd", jax.nn.silu(g) * h, p["we2"][e])
+        w = jnp.where(topi == e, topw, 0.0).sum(-1)
+        ref = ref + ye * w[..., None]
+    if cfg.moe.num_shared_experts:
+        from repro.models.layers import mlp_apply
+        ref = ref + mlp_apply(p["shared"], x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-3,
+                               atol=2e-4)
+
+
+def test_capacity_drops_overflow():
+    """With capacity 1 per expert, most tokens are dropped (output ~ shared
+    path only) but nothing crashes and aux stays finite."""
+    cfg, p, x = _setup(S=16)
+    m = dataclasses.replace(cfg.moe, capacity_factor=1e-9)
+    cfg2 = dataclasses.replace(cfg, moe=m)
+    y, aux = M.moe_apply(p, cfg2, x)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.isfinite(float(aux))
+
+
+def test_decode_path_matches_train_path():
+    cfg, p, x = _setup(S=4)
+    y_seq, _ = M.moe_apply(p, cfg, x)              # (B,S,D) grouped per seq
+    # decode treats the batch as one group; compare against a (B*S)-token
+    # "decode" call on the flattened tokens with ample capacity
+    m = dataclasses.replace(cfg.moe, capacity_factor=100.0)
+    cfg2 = dataclasses.replace(cfg, moe=m)
+    y_seq2, _ = M.moe_apply(p, cfg2, x)
+    y_dec, _ = M.moe_apply(p, cfg2, x.reshape(-1, x.shape[-1]))
+    np.testing.assert_allclose(np.asarray(y_dec),
+                               np.asarray(y_seq2).reshape(-1, x.shape[-1]),
+                               rtol=2e-3, atol=2e-4)

@@ -1,0 +1,69 @@
+"""End-to-end behaviour tests for the paper's system: a full polystore
+session — register heterogeneous data, train, production, drift — plus the
+paper's flagship analytic pipeline asserting plan-answer agreement."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BigDAWG, DenseTensor, array, relational,
+                        execute_plan)
+from repro.core.planner import Plan
+from repro.data import mimic_like_dataset
+
+
+@pytest.fixture(scope="module")
+def session():
+    ds = mimic_like_dataset(n_patients=64, n_samples=1024)
+    bd = BigDAWG(train_plans=36)
+    bd.register("waves", ds["waveforms"], engine="dense_array")
+    bd.register("patients", ds["patients"], engine="columnar")
+    bd.register("notes", ds["notes"], engine="kv_sparse")
+    return bd, ds
+
+
+def _analytic_query():
+    coeffs = array.haar("waves", levels=4)
+    hist = array.bin_hist(coeffs, nbins=16, levels=4)
+    return array.tfidf(hist)
+
+
+def test_full_polystore_session(session):
+    bd, ds = session
+    q = _analytic_query()
+    rep1 = bd.execute(q)                      # auto -> training
+    assert rep1.mode == "training" and rep1.plans_tried > 1
+    rep2 = bd.execute(q)                      # auto -> production
+    assert rep2.mode == "production"
+    assert rep2.plan_key == rep1.plan_key
+    assert rep2.result.kind == "dense"        # array island delivers dense
+    got = np.asarray(rep2.result.data)
+    assert got.shape[0] == 64 and np.all(np.isfinite(got))
+    # rows are l2-normalized tf-idf vectors
+    norms = np.linalg.norm(got, axis=1)
+    np.testing.assert_allclose(norms[norms > 0], 1.0, rtol=1e-4)
+
+
+def test_plans_agree_on_answers(session):
+    """Location transparency: every engine placement gives the same answer."""
+    bd, _ = session
+    q = _analytic_query()
+    dense_only = Plan(((0, "dense_array"), (1, "dense_array"),
+                       (2, "dense_array")))
+    columnar_only = Plan(((0, "columnar"), (1, "columnar"), (2, "columnar")))
+    r_d = execute_plan(q, dense_only, bd.catalog)
+    r_c = execute_plan(q, columnar_only, bd.catalog)
+    d = np.asarray(r_d.value.data)
+    from repro.core import cast as castmod
+    c = np.asarray(castmod.cast(r_c.value, "dense").data)
+    np.testing.assert_allclose(d, c, rtol=1e-3, atol=1e-4)
+
+
+def test_cross_island_query_correct(session):
+    bd, ds = session
+    q = array.matmul(relational.select("waves", column="value", lo=0.0),
+                     array.transpose("waves"))
+    rep = bd.execute(q, mode="training")
+    W = np.asarray(ds["waveforms"].data)
+    want = np.where(W >= 0.0, W, 0.0) @ W.T
+    np.testing.assert_allclose(np.asarray(rep.result.data), want,
+                               rtol=1e-3, atol=1e-2)
