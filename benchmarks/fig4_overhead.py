@@ -12,6 +12,8 @@ may be a larger percentage for queries of shorter duration").
 """
 from __future__ import annotations
 
+import sys
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -21,11 +23,12 @@ from benchmarks.common import bench, row
 scidb = degenerate("dense_array")
 
 
-def main():
+def main(fast: bool = False):
+    fast = fast or "--fast" in sys.argv
     print("# fig4: name,us_per_call,derived", flush=True)
     bd = BigDAWG()
     rng = np.random.default_rng(0)
-    for n in (64, 256, 1024, 2048):
+    for n in ((64, 128) if fast else (64, 256, 1024, 2048)):
         name = f"W{n}"
         w = DenseTensor(jnp.asarray(rng.normal(size=(n, n)).astype(np.float32)))
         bd.register(name, w, engine="dense_array")

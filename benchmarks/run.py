@@ -4,6 +4,7 @@
   matmul   dense vs join-aggregate matrix multiply  (paper §II anecdote)
   fig4     middleware overhead                      (paper Fig. 4)
   fig5     hybrid medical analytic                  (paper Fig. 5, §IV-B)
+  planner  truncated-product vs container-DP planner scaling
   roofline dry-run roofline table (requires sweep artifacts)
 
 Prints ``name,us_per_call,derived`` CSV rows.
@@ -16,12 +17,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig1_engine_crossover, fig4_overhead,
-                            fig5_polystore_analytic, matmul_engines, roofline)
+                            fig5_polystore_analytic, fig_planner_scaling,
+                            matmul_engines, roofline)
     sections = [
         ("fig1", fig1_engine_crossover.main),
         ("matmul", matmul_engines.main),
         ("fig4", fig4_overhead.main),
         ("fig5", fig5_polystore_analytic.main),
+        ("planner", fig_planner_scaling.main),
         ("roofline", roofline.main),
     ]
     failed = []

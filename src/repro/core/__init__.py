@@ -5,16 +5,21 @@ from repro.core.ops import PolyOp, Ref
 from repro.core.engines import ENGINES, Engine
 from repro.core.islands import ISLANDS, array, relational, text, stream, degenerate
 from repro.core.signature import signature, signature_text
-from repro.core.planner import Plan, enumerate_plans, find_containers
+from repro.core.costmodel import CostModel, default_calibration_path
+from repro.core.planner import (Plan, enumerate_plans, find_containers,
+                                plan_containers, plan_cost, dp_plans,
+                                exhaustive_plans, estimate_sizes)
 from repro.core.monitor import Monitor, usage_snapshot
-from repro.core.executor import execute_plan, ExecutionResult
+from repro.core.executor import execute_plan, ExecutionResult, topo_levels
 from repro.core.middleware import BigDAWG, Report
 
 __all__ = [
     "DenseTensor", "ColumnarTable", "COOMatrix", "StreamBuffer",
     "PolyOp", "Ref", "ENGINES", "Engine", "ISLANDS",
     "array", "relational", "text", "stream", "degenerate",
-    "signature", "signature_text", "Plan", "enumerate_plans",
-    "find_containers", "Monitor", "usage_snapshot", "execute_plan",
-    "ExecutionResult", "BigDAWG", "Report",
+    "signature", "signature_text", "CostModel", "default_calibration_path",
+    "Plan", "enumerate_plans", "find_containers", "plan_containers",
+    "plan_cost", "dp_plans", "exhaustive_plans", "estimate_sizes",
+    "Monitor", "usage_snapshot", "execute_plan", "ExecutionResult",
+    "topo_levels", "BigDAWG", "Report",
 ]

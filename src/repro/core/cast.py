@@ -128,8 +128,5 @@ def cast(obj, dst_kind: str):
         return _CASTS[("dense", dst_kind)](mid)
 
 
-def cast_cost_seconds(obj, dst_kind: str) -> float:
-    """Planner-side cast cost estimate: bytes over the interconnect."""
-    if obj.kind == dst_kind:
-        return 0.0
-    return obj.nbytes / ICI_BYTES_PER_S
+# planner-side cast cost estimates moved to costmodel.CostModel.cast_seconds
+# (calibrated bytes/s per (src, dst) pair, with a measured-default fallback)

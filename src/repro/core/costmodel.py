@@ -1,0 +1,234 @@
+"""Calibrated planner cost model (paper §III-C): predicted seconds for
+engine ops and casts, learned from two sources —
+
+  1. a one-shot *microbenchmark calibration* pass (``CostModel.calibrate``)
+     that measures per-engine per-op throughput (elements/s) and per-cast-pair
+     bandwidth (bytes/s) on small containers, and
+  2. *monitor history*: every measured execution feeds per-node op timings and
+     per-cast transfer timings back via ``observe_op`` / ``observe_cast``.
+
+The model is persisted as JSON alongside the monitor DB (atomic write), so a
+calibration pass survives restarts and production processes start with
+realistic throughputs instead of structural placeholders.  All predictions
+degrade gracefully: an unobserved (engine, op) pair falls back to the engine's
+measured mean, then to a per-kind default.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.ioutil import atomic_json_dump
+
+# a-priori throughput guesses per engine *kind* (elements/s on one host core);
+# only used before any calibration/history exists.  Relative order encodes the
+# engines' real strengths (dense MXU-shaped ops beat triple-scan layouts).
+_DEFAULT_ELEMS_PER_S = {
+    "dense": 5e8,
+    "columnar": 1e8,
+    "coo": 1.5e8,
+    "stream": 3e8,
+}
+_DEFAULT_CAST_BYTES_PER_S = 2e8     # host-side format conversion, not ICI
+# fixed per-dispatch overhead (python + jax dispatch), seconds
+_OP_OVERHEAD_S = 5e-5
+_CAST_OVERHEAD_S = 1e-4
+
+
+@dataclass
+class _Mean:
+    """Running mean with sample count (JSON-serializable)."""
+    mean: float = 0.0
+    n: int = 0
+
+    def update(self, v: float):
+        self.mean = (self.mean * self.n + v) / (self.n + 1)
+        self.n += 1
+
+
+def container_elems(obj) -> float:
+    """LOGICAL element count of a tables.* container — the throughput unit.
+
+    Columnar/COO count rows/nnz, not physical cells: the planner predicts
+    from dense-equivalent sizes (it cannot know per-engine layouts of
+    intermediates), so observed rates must use the same unit or row-store
+    throughput gets inflated by the triples blow-up factor."""
+    kind = getattr(obj, "kind", None)
+    if kind == "dense":
+        return float(obj.data.size)
+    if kind == "columnar":
+        return float(obj.nrows)
+    if kind == "coo":
+        return float(obj.nnz)
+    if kind == "stream":
+        return float(obj.data.size)
+    return float(getattr(obj, "nbytes", 4)) / 4.0
+
+
+def default_calibration_path(monitor_path: Optional[str]) -> Optional[str]:
+    """Calibration file that rides alongside a monitor DB path."""
+    if not monitor_path:
+        return None
+    root, _ = os.path.splitext(monitor_path)
+    return root + ".calib.json"
+
+
+class CostModel:
+    """Predicts op and cast seconds from calibrated/learned throughputs."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        # engine -> op -> elements/s
+        self.op_rate: Dict[str, Dict[str, _Mean]] = {}
+        # "src>dst" (kinds) -> bytes/s
+        self.cast_rate: Dict[str, _Mean] = {}
+        self.calibrated = False
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- prediction ----------------------------------------------------------
+    def op_seconds(self, engine: str, op: str, elems: float) -> float:
+        """Predicted seconds for `op` on `engine` over `elems` input elements."""
+        from repro.core.engines import ENGINES
+        rate = None
+        per_op = self.op_rate.get(engine)
+        if per_op:
+            m = per_op.get(op)
+            if m and m.n:
+                rate = m.mean
+            else:                       # engine-level mean over observed ops
+                obs = [x.mean for x in per_op.values() if x.n]
+                if obs:
+                    rate = sum(obs) / len(obs)
+        if rate is None:
+            kind = ENGINES[engine].kind if engine in ENGINES else "dense"
+            rate = _DEFAULT_ELEMS_PER_S.get(kind, 1e8)
+        return _OP_OVERHEAD_S + max(elems, 1.0) / max(rate, 1.0)
+
+    def cast_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
+        """Predicted seconds to move/convert `nbytes` between data models."""
+        if src_kind == dst_kind:
+            return 0.0
+        m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
+        bw = m.mean if (m and m.n) else _DEFAULT_CAST_BYTES_PER_S
+        return _CAST_OVERHEAD_S + max(nbytes, 1.0) / max(bw, 1.0)
+
+    # -- learning ------------------------------------------------------------
+    def observe_op(self, engine: str, op: str, elems: float, seconds: float):
+        if seconds <= 0 or elems <= 0:
+            return
+        self.op_rate.setdefault(engine, {}).setdefault(op, _Mean()) \
+            .update(elems / seconds)
+
+    def observe_cast(self, src_kind: str, dst_kind: str, nbytes: float,
+                     seconds: float):
+        if seconds <= 0 or nbytes <= 0:
+            return
+        self.cast_rate.setdefault(f"{src_kind}>{dst_kind}", _Mean()) \
+            .update(nbytes / seconds)
+
+    def observe_execution(self, result):
+        """Fold one measured ExecutionResult (sequential run) into the model."""
+        for engine, op, elems, seconds in getattr(result, "node_obs", ()):
+            self.observe_op(engine, op, elems, seconds)
+        for src, dst, nbytes, seconds in getattr(result, "cast_obs", ()):
+            self.observe_cast(src, dst, nbytes, seconds)
+
+    # -- calibration ---------------------------------------------------------
+    def calibrate(self, n: int = 128, repeats: int = 2):
+        """One-shot microbenchmark: time a representative op per engine and
+        every registered cast pair on an (n, n) container."""
+        import numpy as np
+        import jax
+        import jax.numpy as jnp
+        from repro.core import cast as castmod
+        from repro.core.engines import ENGINES
+        from repro.core.tables import DenseTensor
+
+        rng = np.random.default_rng(0)
+        base = DenseTensor(jnp.asarray(
+            rng.normal(size=(n, n)).astype(np.float32)))
+        jax.block_until_ready(base.data)
+
+        # cast bandwidth per registered (src, dst) pair
+        homed = {"dense": base}
+        for (src, dst) in list(castmod._CASTS):
+            try:
+                if src not in homed:
+                    homed[src] = castmod.cast(base, src)
+                obj = homed[src]
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    out = castmod.cast(obj, dst)
+                    jax.block_until_ready(jax.tree.leaves(out.__dict__))
+                    dt = time.perf_counter() - t0
+                self.observe_cast(src, dst, obj.nbytes, dt)
+            except Exception:
+                continue            # pair not reachable from a dense sample
+
+        # per-engine op throughput: cheap scans, the binary matmul (the
+        # planner's dominant op), and the layout-sensitive transforms whose
+        # cross-engine cost spread is widest (haar's ORDER BY + restructure in
+        # a row store vs a strided slice in the array store)
+        hb = {"nbins": 8, "levels": 2}
+        probe = {
+            "dense_array": [("count", {}), ("distinct", {}), ("tfidf", {}),
+                            ("select", {"lo": 0.0}), ("matmul", {}),
+                            ("haar", {"levels": 2}), ("bin_hist", dict(hb))],
+            "columnar": [("count", {}), ("distinct", {"column": "value"}),
+                         ("tfidf", {}),
+                         ("select", {"column": "value", "lo": 0.0}),
+                         ("matmul", {}),
+                         ("haar", {"levels": 2}), ("bin_hist", dict(hb))],
+            "kv_sparse": [("count", {}), ("distinct", {}), ("tfidf", {})],
+            "stream": [("window_agg", {"fn": "mean"}), ("to_array", {}),
+                       ("haar", {"levels": 2})],
+        }
+        for ename, ops in probe.items():
+            eng = ENGINES[ename]
+            try:
+                inp = homed.get(eng.kind) or castmod.cast(base, eng.kind)
+            except Exception:
+                continue
+            for op, attrs in ops:
+                if not eng.supports(op):
+                    continue
+                args = (inp, inp) if op == "matmul" else (inp,)
+                try:
+                    for _ in range(repeats):
+                        t0 = time.perf_counter()
+                        out = eng.run(op, attrs, *args)
+                        jax.block_until_ready(jax.tree.leaves(out.__dict__))
+                        dt = time.perf_counter() - t0
+                    elems = sum(container_elems(a) for a in args)
+                    self.observe_op(ename, op, elems, dt)
+                except Exception:
+                    continue
+        self.calibrated = True
+        self.save()
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: Optional[str] = None):
+        path = path or self.path
+        if not path:
+            return
+        blob = {
+            "calibrated": self.calibrated,
+            "op_rate": {e: {op: [m.mean, m.n] for op, m in ops.items()}
+                        for e, ops in self.op_rate.items()},
+            "cast_rate": {k: [m.mean, m.n] for k, m in self.cast_rate.items()},
+        }
+        atomic_json_dump(path, blob)
+
+    def load(self, path: str):
+        with open(path) as f:
+            blob = json.load(f)
+        self.calibrated = bool(blob.get("calibrated", False))
+        self.op_rate = {e: {op: _Mean(mean=m, n=cnt)
+                            for op, (m, cnt) in ops.items()}
+                        for e, ops in blob.get("op_rate", {}).items()}
+        self.cast_rate = {k: _Mean(mean=m, n=cnt)
+                          for k, (m, cnt) in blob.get("cast_rate", {}).items()}

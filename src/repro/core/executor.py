@@ -1,15 +1,26 @@
 """Executor (paper §III-C / [19]): runs a plan tree — resolves refs against
 the catalog, migrates inputs to each node's engine via the migrator, invokes
 the shim (engine op), and collects wall time + cast statistics for the
-monitor."""
+monitor.
+
+Two dispatch modes:
+
+  sequential (default) — blocks after every node, yielding honest per-node
+      timings; these feed the calibrated cost model (training phase).
+  concurrent — groups the DAG into topological levels and dispatches every
+      node in a level without blocking (JAX async dispatch overlaps their
+      device work), with a single block at each level boundary.  Used by the
+      production phase, where per-node attribution is not needed.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict
+from typing import Any, Dict, List, Tuple
 
 import jax
 
+from repro.core.costmodel import container_elems
 from repro.core.engines import ENGINES
 from repro.core.migrator import Migrator
 from repro.core.ops import PolyOp, Ref
@@ -28,6 +39,11 @@ class ExecutionResult:
     n_casts: int
     plan: Plan
     per_node_seconds: Dict[int, float] = field(default_factory=dict)
+    # measured (engine, op, input_elems, seconds) per node — sequential only
+    node_obs: List[Tuple[str, str, float, float]] = field(default_factory=list)
+    # measured (src_kind, dst_kind, bytes, seconds) per cast
+    cast_obs: List[Tuple[str, str, float, float]] = field(default_factory=list)
+    levels: int = 0                     # topological depth actually dispatched
 
 
 def _block(x):
@@ -38,40 +54,88 @@ def _block(x):
     return x
 
 
-def execute_plan(query: PolyOp, plan: Plan, catalog) -> ExecutionResult:
-    amap = plan.engine_map(query)
-    migrator = Migrator()
-    values: Dict[int, Any] = {}
-    per_node: Dict[int, float] = {}
-    t0 = time.perf_counter()
-
-    for node in query.nodes():                  # post-order
-        eng = ENGINES[amap[node.uid]]
-        args = []
+def topo_levels(query: PolyOp) -> List[List[PolyOp]]:
+    """Nodes grouped by topological depth; everything within a level is
+    mutually independent and can be dispatched together."""
+    depth: Dict[int, int] = {}
+    levels: List[List[PolyOp]] = []
+    for node in query.nodes():              # post-order: inputs first
+        if node.uid in depth:               # shared subtree: already placed
+            continue
+        d = 0
         for inp in node.inputs:
-            if isinstance(inp, Ref):
-                obj = catalog[inp.name].obj
-            else:
-                obj = values[inp.uid]
-            args.append(migrator.to_engine(obj, eng.name))
-        tn = time.perf_counter()
-        out = eng.run(node.op, node.attrs, *args)
-        _block(out)
-        per_node[node.uid] = time.perf_counter() - tn
-        values[node.uid] = out
+            if isinstance(inp, PolyOp):
+                d = max(d, depth[inp.uid] + 1)
+        depth[node.uid] = d
+        while len(levels) <= d:
+            levels.append([])
+        levels[d].append(node)
+    return levels
 
-    # deliver in the root island's data model (location transparency: the
-    # caller sees the island model regardless of which engine produced it)
-    result = values[query.uid]
+
+def _gather_args(node: PolyOp, eng, catalog, values, migrator):
+    args = []
+    for inp in node.inputs:
+        if isinstance(inp, Ref):
+            obj = catalog[inp.name].obj
+        else:
+            obj = values[inp.uid]
+        args.append(migrator.to_engine(obj, eng.name))
+    return args
+
+
+def _deliver(query: PolyOp, result):
+    """Deliver in the root island's data model (location transparency: the
+    caller sees the island model regardless of which engine produced it)."""
     if query.island in ISLAND_KIND:
         want = ISLAND_KIND[query.island]
-    else:                                        # degenerate:<engine>
+    else:                                    # degenerate:<engine>
         want = ENGINES[query.island.split(":", 1)[1]].kind
     if getattr(result, "kind", want) != want:
         from repro.core import cast as castmod
         result = castmod.cast(result, want)
         _block(result)
+    return result
 
+
+def execute_plan(query: PolyOp, plan: Plan, catalog,
+                 concurrent: bool = False) -> ExecutionResult:
+    amap = plan.engine_map(query)
+    migrator = Migrator()
+    values: Dict[int, Any] = {}
+    per_node: Dict[int, float] = {}
+    node_obs: List[Tuple[str, str, float, float]] = []
+    t0 = time.perf_counter()
+    n_levels = 0
+
+    if concurrent:
+        lvls = topo_levels(query)
+        n_levels = len(lvls)
+        for level in lvls:
+            outs = []
+            for node in level:              # dispatch whole level, no blocking
+                eng = ENGINES[amap[node.uid]]
+                args = _gather_args(node, eng, catalog, values, migrator)
+                out = eng.run(node.op, node.attrs, *args)
+                values[node.uid] = out
+                outs.append(out)
+            for out in outs:                # one block at the level boundary
+                _block(out)
+    else:
+        for node in query.nodes():          # post-order
+            eng = ENGINES[amap[node.uid]]
+            args = _gather_args(node, eng, catalog, values, migrator)
+            elems = sum(container_elems(a) for a in args)
+            tn = time.perf_counter()
+            out = eng.run(node.op, node.attrs, *args)
+            _block(out)
+            dt = time.perf_counter() - tn
+            per_node[node.uid] = dt
+            node_obs.append((eng.name, node.op, elems, dt))
+            values[node.uid] = out
+
+    result = _deliver(query, values[query.uid])
     total = time.perf_counter() - t0
     return ExecutionResult(result, total, migrator.bytes_moved,
-                           migrator.n_casts, plan, per_node)
+                           migrator.n_casts, plan, per_node, node_obs,
+                           list(migrator.events), n_levels)

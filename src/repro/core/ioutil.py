@@ -1,0 +1,21 @@
+"""Small shared I/O helpers for the middleware's persistent state."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def atomic_json_dump(path: str, blob) -> None:
+    """Write JSON via a same-directory temp file + ``os.replace`` so a crash
+    mid-dump can never truncate the target (monitor DB, calibration file)."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

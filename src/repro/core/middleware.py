@@ -2,21 +2,24 @@
 migrator behind one ``execute()`` entry point with the training/production
 phase protocol of §III-C-3.
 
-  training   — enumerate candidate plans, run (up to ``train_plans`` of) them,
-               record stats, return the best run's result.
-  production — match the query signature in the monitor DB, run the best
-               recorded plan; on signature miss fall back to training; on
-               usage drift, re-train (paper: "rerun the query under the
-               training phase under the current usage") and queue the losers
-               for background exploration.
+  training   — enumerate candidate plans via the cost-model DP, run (up to
+               ``train_plans`` of) them sequentially (per-node timings feed
+               the calibrated cost model), record stats, return the best
+               run's result, and cache the winning Plan by signature.
+  production — serve from the signature-keyed plan cache (no re-enumeration,
+               no plan-key parsing), dispatching DAG levels concurrently; on
+               signature miss fall back to training; on usage drift, re-train
+               (paper: "rerun the query under the training phase under the
+               current usage") and queue the losers for background
+               exploration.
   auto       — production if the signature is known, else training.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
+from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
 from repro.core.executor import ExecutionResult, execute_plan
 from repro.core.monitor import Monitor, usage_snapshot
@@ -47,11 +50,14 @@ class Report:
     sig: str
     plans_tried: int = 1
     drifted: bool = False
+    cache_hit: bool = False  # plan came from the signature-keyed plan cache
 
 
 class BigDAWG:
     def __init__(self, monitor: Optional[Monitor] = None,
-                 train_plans: int = 8, train_repeats: int = 2):
+                 train_plans: int = 8, train_repeats: int = 2,
+                 cost_model: Optional[CostModel] = None,
+                 calibrate: bool = False):
         self.catalog: Dict[str, CatalogEntry] = {}
         self.monitor = monitor or Monitor()
         self.train_plans = train_plans
@@ -59,6 +65,14 @@ class BigDAWG:
         # only the last — first-run jit/compile cost would otherwise bias the
         # monitor toward never-compiled plans (cold-start bias)
         self.train_repeats = max(1, train_repeats)
+        # cost model persists alongside the monitor DB when the latter has one
+        self.cost_model = cost_model or CostModel(
+            default_calibration_path(self.monitor.path))
+        if calibrate and not self.cost_model.calibrated:
+            self.cost_model.calibrate()
+        # signature -> winning Plan: production requests skip re-enumeration
+        # and plan-key parsing entirely
+        self.plan_cache: Dict[str, Plan] = {}
 
     # -- catalog -----------------------------------------------------------
     def register(self, name: str, obj, engine: str):
@@ -71,16 +85,27 @@ class BigDAWG:
 
     # -- phases --------------------------------------------------------------
     def _train(self, query: PolyOp, sig: str) -> Report:
-        plans = enumerate_plans(query, self.catalog, max_plans=self.train_plans)
+        plans = enumerate_plans(query, self.catalog,
+                                max_plans=self.train_plans,
+                                cost_model=self.cost_model)
         best: Optional[ExecutionResult] = None
         usage = usage_snapshot()
         for plan in plans:
+            # sequential warm-up runs: kill cold-start jit bias AND feed
+            # honest per-node timings to the cost model (sequential only)
             for _ in range(self.train_repeats):
                 res = execute_plan(query, plan, self.catalog)
+            self.cost_model.observe_execution(res)
+            # the RECORDED measurement uses concurrent dispatch — the same
+            # mode production executes in, so every seconds value a
+            # Monitor.best() comparison sees is from one dispatch mode
+            res = execute_plan(query, plan, self.catalog, concurrent=True)
             self.monitor.record(sig, plan.key, res.seconds,
                                 cast_bytes=res.cast_bytes, usage=usage)
             if best is None or res.seconds < best.seconds:
                 best = res
+        self.plan_cache[sig] = best.plan
+        self.cost_model.save()
         return Report(best.value, best.plan.key, "training", best.seconds,
                       best.cast_bytes, sig, plans_tried=len(plans))
 
@@ -92,18 +117,22 @@ class BigDAWG:
         if drifted:
             # usage changed too much since training — re-train now, queue the
             # alternates for background exploration
+            self.plan_cache.pop(sig, None)
             rep = self._train(query, sig)
             for pk in self.monitor.known_plans(sig):
                 if pk != rep.plan_key:
                     self.monitor.queue_background(sig, pk)
             rep.drifted = True
             return rep
-        plan = _plan_from_key(plan_key)
-        res = execute_plan(query, plan, self.catalog)
+        cached = self.plan_cache.get(sig)
+        hit = cached is not None and cached.key == plan_key
+        plan = cached if hit else _plan_from_key(plan_key)
+        self.plan_cache[sig] = plan
+        res = execute_plan(query, plan, self.catalog, concurrent=True)
         self.monitor.record(sig, plan_key, res.seconds,
                             cast_bytes=res.cast_bytes, usage=usage)
         return Report(res.value, plan_key, "production", res.seconds,
-                      res.cast_bytes, sig)
+                      res.cast_bytes, sig, cache_hit=hit)
 
     # -- public API ----------------------------------------------------------
     def execute(self, query: PolyOp, mode: str = "auto") -> Report:
@@ -126,8 +155,12 @@ class BigDAWG:
             sig, plan_key = self.monitor.background_queue.pop()
             if sig not in query_by_sig:
                 continue
+            # concurrent, like production: exploration exists to challenge the
+            # incumbent's production-mode mean, so its seconds must be
+            # measured under the same dispatch mode or the comparison is
+            # structurally biased toward whichever plan won training
             res = execute_plan(query_by_sig[sig], _plan_from_key(plan_key),
-                               self.catalog)
+                               self.catalog, concurrent=True)
             self.monitor.record(sig, plan_key, res.seconds,
                                 cast_bytes=res.cast_bytes)
             done += 1

@@ -1,8 +1,12 @@
-"""Migrator (paper §III-C / [18]): executes casts between engines and keeps
-account of the bytes moved (the executor charges them to the plan's stats)."""
+"""Migrator (paper §III-C / [18]): executes casts between engines, keeps
+account of the bytes moved (the executor charges them to the plan's stats),
+and times every transfer so the calibrated cost model can learn real cast
+bandwidth per (src, dst) data-model pair."""
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
+from typing import List, Tuple
 
 from repro.core import cast as castmod
 from repro.core.engines import ENGINES
@@ -12,15 +16,23 @@ from repro.core.engines import ENGINES
 class Migrator:
     bytes_moved: float = 0.0
     n_casts: int = 0
+    # (src_kind, dst_kind, bytes, seconds) per executed cast
+    events: List[Tuple[str, str, float, float]] = field(default_factory=list)
 
     def to_engine(self, obj, engine_name: str):
         eng = ENGINES[engine_name]
         if obj.kind == eng.kind:
             return obj
-        self.bytes_moved += obj.nbytes
+        nbytes = obj.nbytes
+        self.bytes_moved += nbytes
         self.n_casts += 1
-        return castmod.cast(obj, eng.kind)
+        t0 = time.perf_counter()
+        out = castmod.cast(obj, eng.kind)
+        self.events.append((obj.kind, eng.kind, float(nbytes),
+                            time.perf_counter() - t0))
+        return out
 
     def reset(self):
         self.bytes_moved = 0.0
         self.n_casts = 0
+        self.events.clear()

@@ -16,6 +16,8 @@ from typing import Dict, Optional
 
 import jax
 
+from repro.core.ioutil import atomic_json_dump
+
 
 @dataclass
 class PlanStats:
@@ -29,9 +31,11 @@ class PlanStats:
     def record(self, seconds: float, usage: Dict[str, float],
                cast_bytes: float = 0.0, extra: Optional[Dict] = None):
         self.mean_seconds = (self.mean_seconds * self.n + seconds) / (self.n + 1)
+        # running mean, like mean_seconds — a single light run must not
+        # overwrite the history (cast traffic can vary with catalog state)
+        self.cast_bytes = (self.cast_bytes * self.n + cast_bytes) / (self.n + 1)
         self.n += 1
         self.last_seconds = seconds
-        self.cast_bytes = cast_bytes
         self.usage = dict(usage)
         if extra:
             self.extra.update(extra)
@@ -101,8 +105,7 @@ class Monitor:
             return
         blob = {sig: {pk: asdict(st) for pk, st in plans.items()}
                 for sig, plans in self.db.items()}
-        with open(path, "w") as f:
-            json.dump(blob, f, indent=1)
+        atomic_json_dump(path, blob)
 
     def load(self, path: str):
         with open(path) as f:

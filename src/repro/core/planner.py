@@ -1,20 +1,40 @@
-"""Query planner (paper §III-C-1): parse the PolyOp DAG into *containers*
-(maximal subtrees executable on one engine) plus the cross-engine *remainder*,
-then enumerate candidate plan trees (engine assignments per container).
+"""Query planner (paper §III-C-1): collapse the PolyOp DAG into *containers*
+(maximal runs executable on one engine) plus the cross-engine *remainder*,
+then run a k-best dynamic program over the cast edges with a calibrated cost
+model (predicted op seconds + predicted cast seconds from estimated container
+sizes).
 
-Candidate ordering: fewest casts first, then data-home affinity.  The monitor
-re-orders these with measured history in production phase.
+The DP considers the FULL container-assignment space — unlike the seed's
+``itertools.product`` prefix, which was biased toward the first node's
+candidates and truncated anything past 16 combos.  Containers are formed
+*losslessly* (nodes merge only when their candidate engine sets are equal), so
+every hybrid plan a node-granularity product could express at container
+boundaries survives; splitting an equal-candidate run across engines is the
+one shape dropped, and it always pays an extra cast for zero coverage gain.
+The monitor still re-orders the survivors with measured history in production
+phase (paper §III-C-3).
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core import cast as castmod
+from repro.core.costmodel import CostModel, container_elems
 from repro.core.islands import ISLANDS
 from repro.core.engines import ENGINES
 from repro.core.ops import PolyOp, Ref
+
+_DEFAULT_COST_MODEL: Optional[CostModel] = None
+
+
+def default_cost_model() -> CostModel:
+    """Process-wide fallback model (uncalibrated defaults) for callers that
+    plan outside a BigDAWG instance."""
+    global _DEFAULT_COST_MODEL
+    if _DEFAULT_COST_MODEL is None:
+        _DEFAULT_COST_MODEL = CostModel()
+    return _DEFAULT_COST_MODEL
 
 
 @dataclass(frozen=True)
@@ -52,7 +72,8 @@ class ContainerInfo:
 def find_containers(query: PolyOp) -> List[ContainerInfo]:
     """Greedy bottom-up grouping: merge a node into its child's container when
     they share a candidate engine; otherwise start a new container (a cast
-    edge — part of the remainder)."""
+    edge — part of the remainder).  Used for remainder analysis; the planner's
+    DP uses the lossless ``plan_containers`` grouping instead."""
     containers: List[ContainerInfo] = []
     owner: Dict[int, int] = {}            # node uid -> container index
 
@@ -75,43 +96,310 @@ def find_containers(query: PolyOp) -> List[ContainerInfo]:
     return containers
 
 
-def _home_affinity(container: ContainerInfo, engine: str, catalog) -> int:
-    """Number of referenced objects already resident on `engine`."""
-    n = 0
-    for node in container.nodes:
+# ---------------------------------------------------------------------------
+# size estimation — predicted output bytes per node, from catalog shapes
+# ---------------------------------------------------------------------------
+
+_SCALAR_OPS = {"count", "distinct"}
+
+
+def _ref_size(ref: Ref, catalog) -> Tuple[float, Optional[Tuple[int, ...]]]:
+    """(logical bytes, shape) of a catalog object.  LOGICAL: 4 bytes per
+    container_elems unit, the same unit op rates are observed in — a columnar
+    home's 3x physical triples blow-up must not inflate predicted op work
+    (cast costs use physical nbytes separately)."""
+    if catalog is not None and ref.name in catalog:
+        obj = catalog[ref.name].obj
+        data = getattr(obj, "data", None)
+        shape = tuple(data.shape) if data is not None else \
+            tuple(getattr(obj, "shape", ()) or ()) or None
+        return 4.0 * container_elems(obj), shape
+    return 4096.0, None                   # unknown object: assume a small page
+
+
+def estimate_sizes(query: PolyOp, catalog=None) -> Dict[int, float]:
+    """uid -> predicted output bytes, propagated bottom-up with per-op rules
+    (shape-aware where the catalog gives real shapes)."""
+    nbytes: Dict[int, float] = {}
+    shapes: Dict[int, Optional[Tuple[int, ...]]] = {}
+
+    for node in query.nodes():            # post-order: inputs already done
+        ins: List[Tuple[float, Optional[Tuple[int, ...]]]] = []
+        for inp in node.inputs:
+            if isinstance(inp, Ref):
+                ins.append(_ref_size(inp, catalog))
+            else:
+                ins.append((nbytes[inp.uid], shapes.get(inp.uid)))
+        in_bytes = [b for b, _ in ins] or [4096.0]
+        out_b, out_s = max(in_bytes), (ins[0][1] if ins else None)
+
+        op = node.op
+        if op in _SCALAR_OPS:
+            out_b, out_s = 8.0, ()
+        elif op == "matmul" and len(ins) == 2:
+            s1, s2 = ins[0][1], ins[1][1]
+            if s1 and s2 and len(s1) == 2 and len(s2) == 2:
+                out_s = (s1[0], s2[1])
+                out_b = 4.0 * s1[0] * s2[1]
+        elif op in ("spmm",) and len(ins) == 2:
+            out_b, out_s = ins[1][0], ins[1][1]
+        elif op == "transpose":
+            if out_s and len(out_s) == 2:
+                out_s = (out_s[1], out_s[0])
+        elif op == "knn":
+            out_b, out_s = 4.0 * node.attrs.get("k", 8), None
+        elif op == "window_agg":
+            s = ins[0][1]
+            out_b = 4.0 * s[0] if s else in_bytes[0] / 16.0
+            out_s = (s[0],) if s else None
+        elif op == "bin_hist":
+            s = ins[0][1]
+            width = node.attrs.get("nbins", 16) * (node.attrs.get("levels", 1) + 1)
+            if s:
+                out_s = (s[0], width)
+                out_b = 4.0 * s[0] * width
+        elif op == "project":
+            out_b = in_bytes[0] * 0.5
+        # select/haar/tfidf/scale/add/join/groupby_sum/ingest/to_array:
+        # output ~ input size (the max-input default)
+
+        nbytes[node.uid] = max(out_b, 4.0)
+        shapes[node.uid] = out_s
+    return nbytes
+
+
+def _work_elems(node: PolyOp, sizes: Dict[int, float], catalog) -> float:
+    """INPUT elements an op must touch, in float32 units — the same unit the
+    executor and calibration observe rates in (elems of the args, before the
+    op runs), so predicted seconds = elems / learned_rate is dimensionally
+    honest."""
+    total = 0.0
+    for inp in node.inputs:
+        if isinstance(inp, Ref):
+            total += _ref_size(inp, catalog)[0]
+        else:
+            total += sizes[inp.uid]
+    return total / 4.0
+
+
+# ---------------------------------------------------------------------------
+# lossless planning containers + cast-edge DP
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanContainer:
+    """A maximal run of nodes with *identical* candidate sets (lossless:
+    container-level assignment spans the same plan space as node-level at
+    every cast boundary)."""
+    positions: List[int]                       # post-order indices
+    nodes: List[PolyOp]
+    candidates: Tuple[str, ...]
+    children: List[Tuple[int, float]] = field(default_factory=list)
+    # (child container index, predicted bytes over that cast edge)
+
+
+def plan_containers(query: PolyOp, catalog=None,
+                    sizes: Optional[Dict[int, float]] = None
+                    ) -> List[PlanContainer]:
+    """Containers over the query's TREE UNFOLDING: ownership is tracked per
+    post-order *occurrence*, not per node uid, so shared subtrees (which the
+    executor and ``plan_cost`` both account once per occurrence) contract to
+    a tree of containers — no cycles, no double-visited children.  The owner
+    of position ``p`` is the container whose ``positions`` include ``p``."""
+    sizes = sizes if sizes is not None else estimate_sizes(query, catalog)
+    containers: List[PlanContainer] = []
+    owner_by_pos: Dict[int, int] = {}
+    counter = itertools.count()
+
+    def visit(node: PolyOp) -> int:
+        child_pos = [(visit(i), i) for i in node.inputs
+                     if isinstance(i, PolyOp)]
+        pos = next(counter)                    # == post-order walk position
+        cands = tuple(node_candidates(node))
+        ci_own = None
+        edges: List[Tuple[int, float]] = []
+        for p, inp in child_pos:
+            ci = owner_by_pos[p]
+            if ci_own is None and containers[ci].candidates == cands:
+                containers[ci].positions.append(pos)
+                containers[ci].nodes.append(node)
+                ci_own = ci
+            else:
+                edges.append((ci, sizes[inp.uid]))
+        if ci_own is None:
+            containers.append(PlanContainer([pos], [node], cands))
+            ci_own = len(containers) - 1
+        owner_by_pos[pos] = ci_own
+        containers[ci_own].children.extend(
+            (d, b) for d, b in edges if d != ci_own)
+        return pos
+
+    visit(query)
+    return containers
+
+
+def _intra_cost(c: PlanContainer, engine: str, sizes, catalog,
+                cm: CostModel) -> float:
+    """Op seconds for the container's nodes on `engine`, plus casts pulling
+    catalog refs homed on a different data model."""
+    kind = ENGINES[engine].kind
+    cost = 0.0
+    for node in c.nodes:
+        cost += cm.op_seconds(engine, node.op, _work_elems(node, sizes, catalog))
         for inp in node.inputs:
             if isinstance(inp, Ref) and catalog is not None \
                     and inp.name in catalog:
-                if catalog[inp.name].engine == engine:
-                    n += 1
-    return n
+                entry = catalog[inp.name]
+                src_kind = ENGINES[entry.engine].kind
+                cost += cm.cast_seconds(src_kind, kind, entry.obj.nbytes)
+    return cost
 
 
-def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16) -> List[Plan]:
-    """Per-node engine assignment product (capped).  Containers (single-engine
-    runs) emerge from the assignment; keeping the product at node granularity
-    preserves hybrid plans that container-first merging would lose."""
+def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
+             cost_model: Optional[CostModel] = None) -> List[Tuple[float, Plan]]:
+    """Exact k-best DP over the container tree: for every container and engine
+    choice, combine the k cheapest child subplans through the cast edge cost.
+    Covers the full container-assignment product (no truncation bias)."""
+    cm = cost_model or default_cost_model()
+    sizes = estimate_sizes(query, catalog)
+    containers = plan_containers(query, catalog, sizes=sizes)
+    k = max(1, max_plans)
+
+    pos_owner: Dict[int, int] = {}
+    for ci, c in enumerate(containers):
+        for p in c.positions:
+            pos_owner[p] = ci
+    n_pos = len(query.nodes())
+    root_ci = pos_owner[n_pos - 1]
+
+    # merging a node into an *earlier* child's container can leave edges to
+    # higher-indexed containers, so process the container tree bottom-up
+    # explicitly rather than by list index
+    order: List[int] = []
+    seen_ci = set()
+
+    def _order(ci: int):
+        if ci in seen_ci:
+            return
+        seen_ci.add(ci)
+        for di, _ in containers[ci].children:
+            _order(di)
+        order.append(ci)
+
+    _order(root_ci)
+
+    # kbest[ci] = sorted [(cost, {container_idx: engine})], child-closed
+    kbest: Dict[int, List[Tuple[float, Dict[int, str]]]] = {}
+    for ci in order:                           # children precede parents
+        c = containers[ci]
+        options: List[Tuple[float, Dict[int, str]]] = []
+        for e in c.candidates:
+            kind = ENGINES[e].kind
+            combos = [(_intra_cost(c, e, sizes, catalog, cm), {ci: e})]
+            for (di, edge_bytes) in c.children:
+                merged: List[Tuple[float, Dict[int, str]]] = []
+                for cc, asg in combos:
+                    for cd, asg_d in kbest[di]:
+                        f = asg_d[di]
+                        cast = cm.cast_seconds(ENGINES[f].kind, kind,
+                                               edge_bytes)
+                        merged.append((cc + cd + cast, {**asg, **asg_d}))
+                merged.sort(key=lambda t: t[0])
+                combos = merged[:k]
+            options.extend(combos)
+        # keep the top-k PER ENGINE (not a global cut): a parent's cast term
+        # depends on this container's engine, so truncating away every plan
+        # that ends on some engine could hide the global optimum behind an
+        # expensive cast.  Per-engine fronts make the root's k-front exact.
+        options.sort(key=lambda t: t[0])
+        kbest[ci] = options
+
+    # Execution collapses all occurrences of a shared node to ONE engine
+    # (Plan.engine_map is uid-keyed, last occurrence wins), so on DAGs with
+    # shared subtrees the per-occurrence DP is a candidate generator: collapse
+    # each assignment to uid-consistent engines and re-cost under the executed
+    # semantics.  For trees this whole step is the identity.
     nodes = query.nodes()
-    per_node: List[List[str]] = []
-    for n in nodes:
-        cands = list(node_candidates(n))
-        c = ContainerInfo([n], tuple(cands))
-        cands.sort(key=lambda e: -_home_affinity(c, e, catalog))
-        per_node.append(cands)
-
-    plans = []
-    for combo in itertools.product(*per_node):
-        plans.append(Plan(tuple((i, e) for i, e in enumerate(combo))))
-        if len(plans) >= max_plans:
-            break
-
-    # fewest-cast plans first
-    plans.sort(key=lambda p: estimate_casts(query, p, catalog))
-    return plans
+    has_shared = len({n.uid for n in nodes}) != len(nodes)
+    out: List[Tuple[float, Plan]] = []
+    seen = set()
+    for cost, asg in kbest[root_ci]:
+        plan = Plan(tuple((p, asg[pos_owner[p]]) for p in range(n_pos)))
+        if has_shared:
+            amap = plan.engine_map(query)
+            plan = Plan(tuple((p, amap[nodes[p].uid]) for p in range(n_pos)))
+            cost = plan_cost(query, plan, catalog, cm, sizes=sizes)
+        if plan.key not in seen:
+            seen.add(plan.key)
+            out.append((cost, plan))
+    out.sort(key=lambda t: t[0])
+    return out[:k]
 
 
-def estimate_casts(query: PolyOp, plan: Plan, catalog=None) -> float:
-    """Planner-side cost: seconds of cast traffic a plan implies."""
+def exhaustive_plans(query: PolyOp, catalog=None,
+                     cost_model: Optional[CostModel] = None
+                     ) -> List[Tuple[float, Plan]]:
+    """Brute-force reference over the container assignment product, costed
+    with the same model — the DP must agree with this on small DAGs."""
+    cm = cost_model or default_cost_model()
+    sizes = estimate_sizes(query, catalog)
+    containers = plan_containers(query, catalog, sizes=sizes)
+    pos_owner = {p: ci for ci, c in enumerate(containers) for p in c.positions}
+    nodes = query.nodes()
+    out, seen = [], set()
+    for combo in itertools.product(*(c.candidates for c in containers)):
+        plan = Plan(tuple((p, combo[pos_owner[p]])
+                          for p in range(len(nodes))))
+        amap = plan.engine_map(query)            # collapse shared nodes, as
+        plan = Plan(tuple((p, amap[nodes[p].uid])  # execution will
+                          for p in range(len(nodes))))
+        if plan.key in seen:
+            continue
+        seen.add(plan.key)
+        out.append((plan_cost(query, plan, catalog, cm, sizes=sizes), plan))
+    out.sort(key=lambda t: t[0])
+    return out
+
+
+def plan_cost(query: PolyOp, plan: Plan, catalog=None,
+              cost_model: Optional[CostModel] = None,
+              sizes: Optional[Dict[int, float]] = None) -> float:
+    """Predicted seconds for an arbitrary assignment: per-node op seconds plus
+    cast seconds on every model-crossing edge (node-node and ref-node).
+    ``sizes`` (from ``estimate_sizes``) is plan-independent — pass it in when
+    costing many plans of one query."""
+    cm = cost_model or default_cost_model()
+    sizes = sizes if sizes is not None else estimate_sizes(query, catalog)
+    amap = plan.engine_map(query)
+    cost = 0.0
+    for node in query.nodes():
+        eng = ENGINES[amap[node.uid]]
+        cost += cm.op_seconds(eng.name, node.op,
+                              _work_elems(node, sizes, catalog))
+        for inp in node.inputs:
+            if isinstance(inp, PolyOp):
+                src = ENGINES[amap[inp.uid]]
+                cost += cm.cast_seconds(src.kind, eng.kind, sizes[inp.uid])
+            elif catalog is not None and inp.name in catalog:
+                entry = catalog[inp.name]
+                src_kind = ENGINES[entry.engine].kind
+                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes)
+    return cost
+
+
+def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16,
+                    cost_model: Optional[CostModel] = None) -> List[Plan]:
+    """Top-``max_plans`` candidate plans by predicted cost, from the k-best
+    container DP (full assignment space, cheapest first)."""
+    return [p for _, p in dp_plans(query, catalog, max_plans, cost_model)]
+
+
+def estimate_casts(query: PolyOp, plan: Plan, catalog=None,
+                   cost_model: Optional[CostModel] = None) -> float:
+    """Planner-side cast cost: predicted seconds of cast traffic a plan
+    implies (model-crossing edges only, sized from the catalog)."""
+    cm = cost_model or default_cost_model()
+    sizes = estimate_sizes(query, catalog)
     amap = plan.engine_map(query)
     cost = 0.0
     for node in query.nodes():
@@ -119,11 +407,9 @@ def estimate_casts(query: PolyOp, plan: Plan, catalog=None) -> float:
         for inp in node.inputs:
             if isinstance(inp, PolyOp):
                 src = ENGINES[amap[inp.uid]]
-                if src.kind != eng.kind:
-                    cost += 1e-6  # structural penalty; real bytes unknown pre-run
+                cost += cm.cast_seconds(src.kind, eng.kind, sizes[inp.uid])
             elif catalog is not None and inp.name in catalog:
                 entry = catalog[inp.name]
                 src_kind = ENGINES[entry.engine].kind
-                cost += castmod.cast_cost_seconds(entry.obj, eng.kind) \
-                    if src_kind != eng.kind else 0.0
+                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes)
     return cost

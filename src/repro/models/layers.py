@@ -265,13 +265,29 @@ def _decode_attend_cp(cfg, q, cache_k, cache_v, pos):
         o = jax.lax.psum(o.astype(jnp.float32), tp)
         return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(P(dp_entry, None, None), P(dp_entry, tp, None, None),
                   P(dp_entry, tp, None, None), P(dp_entry)),
         out_specs=P(dp_entry, None, None),
-        check_vma=False,
     )(q, cache_k, cache_v, pos)
+
+
+def _shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """shard_map across JAX versions: top-level ``jax.shard_map`` with
+    ``check_vma`` on current releases, ``jax.experimental.shard_map`` with
+    ``check_rep`` on 0.4.x."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:     # top-level shard_map that still takes check_rep
+            return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+    from jax.experimental.shard_map import shard_map as esm
+    return esm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 # --------------------------------------------------------------------------

@@ -1,11 +1,17 @@
-"""Batched serving loop with continuous slot management.
+"""Serving loops.
 
-A fixed-capacity decode batch over a shared KV cache: incoming requests are
+``BatchServer`` — batched LM decode with continuous slot management: a
+fixed-capacity decode batch over a shared KV cache: incoming requests are
 prefilled one at a time into free slots (each prefill writes its cache rows),
 decode steps advance ALL active slots together, and finished slots (EOS or
 max-tokens) are released.  This is the standard continuous-batching serving
 shape (vLLM-style) restricted to slot granularity — the polystore planner
 picks the decode plan (tensorplan), and the monitor records per-step times.
+
+``QueryServer`` — polystore query serving through the middleware's
+signature-keyed plan cache: the first request for a signature pays the
+training phase (plan enumeration + measured trials), every later request
+executes the cached plan with concurrent DAG dispatch and no re-enumeration.
 """
 from __future__ import annotations
 
@@ -125,3 +131,37 @@ class BatchServer:
             self.step()
             steps += 1
         return requests
+
+
+class QueryServer:
+    """Production-facing polystore front end over a ``BigDAWG`` instance.
+
+    Serving path: signature -> plan cache -> concurrent plan execution.  Only
+    a cache/monitor miss (a never-seen signature) falls back to the training
+    phase, so steady-state traffic never re-enumerates plans.
+    """
+
+    def __init__(self, bigdawg):
+        self.bd = bigdawg
+        self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
+                      "seconds": 0.0}
+
+    def warm(self, queries) -> int:
+        """Admission/warmup: train every query shape once so production
+        traffic starts on cached plans."""
+        n = 0
+        for q in queries:
+            self.bd.execute(q, mode="training")
+            n += 1
+        return n
+
+    def submit(self, query):
+        t0 = time.perf_counter()
+        rep = self.bd.execute(query, mode="auto")
+        self.stats["requests"] += 1
+        self.stats["seconds"] += time.perf_counter() - t0
+        if rep.mode == "training":
+            self.stats["trainings"] += 1
+        if rep.cache_hit:
+            self.stats["cache_hits"] += 1
+        return rep

@@ -3,6 +3,10 @@ planner, monitor phases, executor correctness — incl. hypothesis properties.""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# property tests need hypothesis (in requirements.txt; CI installs it) — a
+# bare environment must still collect the suite cleanly
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BigDAWG, COOMatrix, ColumnarTable, DenseTensor,

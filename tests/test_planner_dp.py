@@ -1,0 +1,307 @@
+"""Planner DP + calibrated cost model + plan cache + concurrent executor.
+
+Covers the §III-C planner rebuild: the container DP must agree with
+exhaustive enumeration, the calibrated cost model must rank plans in measured
+order where the gap is structural, production must serve from the plan cache
+without re-enumeration, and concurrent level dispatch must preserve answers.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BigDAWG, CostModel, DenseTensor, Monitor, array,
+                        relational, dp_plans, enumerate_plans,
+                        exhaustive_plans, execute_plan, plan_containers,
+                        plan_cost, estimate_sizes, topo_levels)
+from repro.core.monitor import PlanStats
+from repro.core.planner import Plan
+from repro.runtime import QueryServer
+
+
+@pytest.fixture(scope="module")
+def cm():
+    model = CostModel()
+    model.calibrate(n=64)
+    return model
+
+
+def _bd(cm=None, n=32, t=64):
+    bd = BigDAWG(cost_model=cm)
+    rng = np.random.default_rng(0)
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(n, t)).astype(np.float32))), engine="dense_array")
+    return bd
+
+
+def _analytic():
+    s = relational.select("waves", column="value", lo=0.0)
+    h = array.haar(s, levels=2)
+    b = array.bin_hist(h, nbins=8, levels=2)
+    return array.tfidf(b)
+
+
+def _wide():                                  # 10-node tree, 648-plan space
+    def branch():
+        return _analytic()
+    return array.matmul(branch(), array.transpose(branch()))
+
+
+# ---------------------------------------------------------------------------
+# DP vs exhaustive enumeration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk", [
+    lambda: array.matmul(relational.select("waves", column="value", lo=-1.0),
+                         "waves"),
+    _analytic,
+    _wide,
+])
+def test_dp_agrees_with_exhaustive(mk, cm):
+    bd = _bd(cm)
+    q = mk()
+    k = 8
+    dp = dp_plans(q, bd.catalog, max_plans=k, cost_model=cm)
+    ex = exhaustive_plans(q, bd.catalog, cost_model=cm)
+    assert dp[0][1].key == ex[0][1].key                 # same optimum
+    np.testing.assert_allclose(dp[0][0], ex[0][0], rtol=1e-9)
+    # the whole k-best front matches (costs, up to ties)
+    np.testing.assert_allclose([c for c, _ in dp],
+                               [c for c, _ in ex[:len(dp)]], rtol=1e-9)
+
+
+def test_dp_handles_diamond_merge():
+    """A node that merges into an early container while depending on a later
+    one (select and matmul share candidates; tfidf sits between them) must
+    plan via topological order, not container-list order.  Uses the default
+    (deterministic) cost model so the assertion is machine-independent."""
+    bd = _bd(n=16, t=16)
+    model = CostModel()
+    a = array.select("waves", lo=0.0)
+    q = array.matmul(a, array.tfidf(a))
+    dp = dp_plans(q, bd.catalog, max_plans=8, cost_model=model)
+    ex = exhaustive_plans(q, bd.catalog, cost_model=model)
+    assert dp[0][1].key == ex[0][1].key
+    np.testing.assert_allclose(dp[0][0], ex[0][0], rtol=1e-9)
+    # after collapsing shared occurrences the DP front is a subset of the
+    # exhaustive space; every candidate must exist there at the same cost
+    ex_cost = {p.key: c for c, p in ex}
+    for cost, plan in dp:
+        np.testing.assert_allclose(cost, ex_cost[plan.key], rtol=1e-9)
+
+
+def test_dp_shared_input_costs_match_plan_cost(cm):
+    """Shared subtrees: DP candidates must carry the cost execution will see
+    (plan_cost collapses each shared node to one engine, like the executor);
+    optimum equality is asserted under the deterministic default model."""
+    bd = _bd(cm, n=16, t=16)
+    h = array.tfidf("waves")
+    q = array.matmul(h, array.scale(h, factor=2.0))
+    for cost, plan in dp_plans(q, bd.catalog, max_plans=8, cost_model=cm):
+        np.testing.assert_allclose(cost, plan_cost(q, plan, bd.catalog, cm),
+                                   rtol=1e-9)
+    model = CostModel()
+    ex = exhaustive_plans(q, bd.catalog, cost_model=model)
+    dp = dp_plans(q, bd.catalog, max_plans=8, cost_model=model)
+    assert dp[0][1].key == ex[0][1].key
+
+
+def test_dp_sees_past_truncated_prefix(cm):
+    """The full space, not the first-16 product prefix: the DP optimum on a
+    wide DAG must be found even when the space dwarfs any truncation cap."""
+    bd = _bd(cm)
+    q = _wide()
+    space = 1
+    for c in plan_containers(q, bd.catalog):
+        space *= len(c.candidates)
+    assert space > 16 * 4                                # way past the old cap
+    dp = dp_plans(q, bd.catalog, max_plans=4, cost_model=cm)
+    ex = exhaustive_plans(q, bd.catalog, cost_model=cm)
+    assert dp[0][1].key == ex[0][1].key
+
+
+def test_dp_exact_under_adversarial_rates():
+    """Per-engine k-best fronts: even when every cheap subplan ends on one
+    engine and the global optimum needs a different child engine to dodge a
+    brutal cast, the DP must still find it (global-cut truncation regression)."""
+    model = CostModel()
+    for op in ("haar", "bin_hist", "tfidf", "select", "matmul", "transpose"):
+        model.observe_op("columnar", op, 1e6, 0.001)      # columnar looks fast
+        model.observe_op("dense_array", op, 1e6, 0.01)
+    model.observe_cast("columnar", "dense", 1e3, 1.0)     # 1e3 B/s cast
+    bd = _bd()
+    q = _wide()
+    for k in (1, 2, 3, 8):
+        dp = dp_plans(q, bd.catalog, max_plans=k, cost_model=model)
+        ex = exhaustive_plans(q, bd.catalog, cost_model=model)
+        assert dp[0][1].key == ex[0][1].key
+        np.testing.assert_allclose([c for c, _ in dp],
+                                   [c for c, _ in ex[:len(dp)]], rtol=1e-9)
+
+
+def test_dp_cost_equals_plan_cost(cm):
+    """DP internal accounting must match the standalone plan costing."""
+    bd = _bd(cm)
+    q = _analytic()
+    for cost, plan in dp_plans(q, bd.catalog, max_plans=6, cost_model=cm):
+        np.testing.assert_allclose(cost, plan_cost(q, plan, bd.catalog, cm),
+                                   rtol=1e-9)
+
+
+def test_enumerate_keeps_hybrid_plans():
+    bd = _bd()
+    q = array.matmul(relational.select("waves", column="value", lo=-1.0),
+                     "waves")
+    descs = {p.describe(q) for p in enumerate_plans(q, bd.catalog)}
+    assert "select@columnar matmul@dense_array" in descs
+    assert "select@columnar matmul@columnar" in descs
+
+
+def test_estimate_sizes_shape_aware():
+    bd = _bd(n=32, t=64)
+    q = array.matmul("waves", array.transpose("waves"))
+    sizes = estimate_sizes(q, bd.catalog)
+    # matmul (32,64) @ (64,32) -> (32,32) floats
+    assert sizes[q.uid] == 4.0 * 32 * 32
+    assert sizes[q.nodes()[0].uid] == 4.0 * 64 * 32      # transpose
+
+
+# ---------------------------------------------------------------------------
+# calibrated cost ordering vs measured execution
+# ---------------------------------------------------------------------------
+
+def test_calibrated_order_matches_measured(cm):
+    """Where the structural gap is wide (matmul on MXU layout vs the
+    join-aggregate formulation), predicted ordering = measured ordering."""
+    bd = _bd(cm, n=48, t=48)
+    q = array.matmul("waves", "waves")
+    dense = Plan(((0, "dense_array"),))
+    col = Plan(((0, "columnar"),))
+    pred_d = plan_cost(q, dense, bd.catalog, cm)
+    pred_c = plan_cost(q, col, bd.catalog, cm)
+    assert pred_d < pred_c
+
+    def measured(p):
+        execute_plan(q, p, bd.catalog)                   # warm
+        return min(execute_plan(q, p, bd.catalog).seconds for _ in range(3))
+
+    assert measured(dense) < measured(col)
+
+
+def test_observation_updates_model():
+    model = CostModel()
+    before = model.op_seconds("dense_array", "matmul", 1e6)
+    model.observe_op("dense_array", "matmul", 1e6, 0.5)  # much slower engine
+    after = model.op_seconds("dense_array", "matmul", 1e6)
+    assert after > before
+    model.observe_cast("dense", "coo", 1e6, 0.25)
+    assert model.cast_seconds("dense", "coo", 1e6) == pytest.approx(
+        0.25, rel=0.1)
+    assert model.cast_seconds("dense", "dense", 1e6) == 0.0
+
+
+def test_cost_model_roundtrip(tmp_path):
+    model = CostModel()
+    model.observe_op("columnar", "haar", 1e5, 0.01)
+    model.observe_cast("dense", "columnar", 1e6, 0.002)
+    p = tmp_path / "m.calib.json"
+    model.save(str(p))
+    m2 = CostModel(str(p))
+    assert m2.op_seconds("columnar", "haar", 1e5) == pytest.approx(
+        model.op_seconds("columnar", "haar", 1e5))
+    assert m2.cast_seconds("dense", "columnar", 1e6) == pytest.approx(
+        model.cast_seconds("dense", "columnar", 1e6))
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hit_skips_enumeration(monkeypatch):
+    bd = _bd()
+    q = _analytic()
+    rep1 = bd.execute(q, mode="training")
+    assert rep1.sig in bd.plan_cache
+
+    import repro.core.middleware as mw
+
+    def boom(*a, **kw):
+        raise AssertionError("production re-enumerated plans")
+
+    monkeypatch.setattr(mw, "enumerate_plans", boom)
+    rep2 = bd.execute(_analytic(), mode="auto")          # rebuilt query
+    assert rep2.mode == "production"
+    assert rep2.cache_hit
+    assert rep2.plan_key == rep1.plan_key
+
+
+def test_drift_invalidates_plan_cache():
+    bd = _bd(n=32, t=32)
+    q = array.matmul("waves", "waves")
+    rep1 = bd.execute(q, mode="training")
+    for stats in bd.monitor.db[rep1.sig].values():
+        stats.usage = {"devices": 4096.0, "rss_gb": 999.0, "time": 0.0}
+    rep2 = bd.execute(q, mode="production")
+    assert rep2.drifted and not rep2.cache_hit           # retrained, recached
+    rep3 = bd.execute(q, mode="production")
+    assert rep3.cache_hit
+
+
+def test_query_server_serves_through_cache():
+    bd = _bd()
+    srv = QueryServer(bd)
+    srv.warm([_analytic()])
+    for _ in range(3):
+        rep = srv.submit(_analytic())
+        assert rep.mode == "production"
+    assert srv.stats["requests"] == 3
+    assert srv.stats["trainings"] == 0       # warm once, never re-train
+    # measured re-ranking may legitimately switch the monitor's best plan
+    # between submits (one miss per switch, re-cached immediately), but the
+    # first post-warm submit always hits
+    assert srv.stats["cache_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# concurrent executor
+# ---------------------------------------------------------------------------
+
+def test_topo_levels_group_independent_nodes():
+    q = _wide()
+    lvls = topo_levels(q)
+    assert len(lvls) >= 4
+    assert len(lvls[0]) == 2                 # the two selects are independent
+
+
+def test_concurrent_matches_sequential():
+    bd = _bd()
+    q = _wide()
+    plan = enumerate_plans(q, bd.catalog, max_plans=1)[0]
+    seq = execute_plan(q, plan, bd.catalog, concurrent=False)
+    conc = execute_plan(q, plan, bd.catalog, concurrent=True)
+    assert conc.levels >= 4
+    np.testing.assert_allclose(np.asarray(seq.value.data),
+                               np.asarray(conc.value.data),
+                               rtol=1e-5, atol=1e-6)
+    assert seq.node_obs and not conc.node_obs            # obs = sequential only
+
+
+# ---------------------------------------------------------------------------
+# monitor satellites: atomic save + cast_bytes running mean
+# ---------------------------------------------------------------------------
+
+def test_monitor_save_atomic(tmp_path):
+    p = tmp_path / "monitor.json"
+    m = Monitor(str(p))
+    m.record("sig", "0:dense_array", 0.1, cast_bytes=100.0)
+    m.save()
+    assert not list(tmp_path.glob("*.tmp"))              # no droppings
+    m2 = Monitor(str(p))
+    key, stats, _ = m2.best("sig")
+    assert key == "0:dense_array" and stats.n == 1
+
+
+def test_cast_bytes_running_mean():
+    st = PlanStats()
+    st.record(0.1, {}, cast_bytes=100.0)
+    st.record(0.1, {}, cast_bytes=0.0)                   # light rerun
+    assert st.cast_bytes == pytest.approx(50.0)          # mean, not overwrite

@@ -93,8 +93,8 @@ def test_elastic_restore_reshards(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     state = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, state, blocking=True)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("data",))
     sh = {"w": jax.sharding.NamedSharding(
         mesh, jax.sharding.PartitionSpec("data", None))}
     restored, _ = mgr.restore(jax.eval_shape(lambda: state), shardings=sh)
