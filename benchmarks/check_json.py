@@ -1,0 +1,67 @@
+"""Validate a benchmark's JSON output against its required keys — the CI
+smoke gate for the fig_*.py scripts (see docs/BENCHMARKS.md).
+
+Usage:
+    python benchmarks/check_json.py FILE --require key [key ...]
+    python benchmarks/check_json.py FILE --per-entry key [key ...]
+
+``--require`` checks top-level keys; ``--per-entry`` checks that every value
+of the top-level object carries the given keys (for reports keyed by test
+case, like fig_planner_scaling's per-DAG entries).  Exits non-zero, naming
+every missing key, if the schema does not hold — so a benchmark that
+silently stops emitting a field fails the build instead of rotting.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("file")
+    ap.add_argument("--require", nargs="+", default=[],
+                    help="top-level keys that must be present")
+    ap.add_argument("--per-entry", nargs="+", default=[],
+                    help="keys every top-level entry must carry")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.file) as f:
+            blob = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"check_json: {args.file}: unreadable JSON: {exc}",
+              file=sys.stderr)
+        return 1
+    if not isinstance(blob, dict):
+        print(f"check_json: {args.file}: top level is not an object",
+              file=sys.stderr)
+        return 1
+
+    problems = []
+    for key in args.require:
+        if key not in blob:
+            problems.append(f"missing top-level key {key!r}")
+    if args.per_entry:
+        if not blob:
+            problems.append("no entries to check --per-entry keys against")
+        for name, entry in blob.items():
+            if not isinstance(entry, dict):
+                problems.append(f"entry {name!r} is not an object")
+                continue
+            for key in args.per_entry:
+                if key not in entry:
+                    problems.append(f"entry {name!r} missing key {key!r}")
+
+    if problems:
+        for p in problems:
+            print(f"check_json: {args.file}: {p}", file=sys.stderr)
+        return 1
+    print(f"check_json: {args.file}: ok "
+          f"({len(blob)} top-level keys)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

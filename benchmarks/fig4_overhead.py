@@ -3,8 +3,11 @@ invocation.
 
 As in the paper, these are single-engine queries issued through the
 *degenerate island* (full engine power, no location transparency), so the
-difference is pure middleware cost: signature computation, monitor lookup /
-recording, plan materialization and result delivery.
+difference is pure middleware cost on the production path: signature
+computation, monitor lookup + recording, a signature-keyed plan-cache hit
+(no plan enumeration or key parsing), concurrent topological-level dispatch,
+the predicted/measured divergence check of the online re-planner, and result
+delivery in the island's data model.
 
 Claim reproduced: overhead is a small percentage for long queries and only a
 large share for very short ones ("There is a minimum overhead incurred which

@@ -11,7 +11,8 @@ from repro.core.planner import (Plan, enumerate_plans, find_containers,
                                 exhaustive_plans, estimate_sizes)
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.executor import execute_plan, ExecutionResult, topo_levels
-from repro.core.middleware import BigDAWG, Report
+from repro.core.middleware import (BigDAWG, CachedPlan, Report,
+                                   default_plan_cache_path)
 
 __all__ = [
     "DenseTensor", "ColumnarTable", "COOMatrix", "StreamBuffer",
@@ -21,5 +22,6 @@ __all__ = [
     "Plan", "enumerate_plans", "find_containers", "plan_containers",
     "plan_cost", "dp_plans", "exhaustive_plans", "estimate_sizes",
     "Monitor", "usage_snapshot", "execute_plan", "ExecutionResult",
-    "topo_levels", "BigDAWG", "Report",
+    "topo_levels", "BigDAWG", "CachedPlan", "Report",
+    "default_plan_cache_path",
 ]

@@ -117,16 +117,37 @@ def can_cast(src_kind: str, dst_kind: str) -> bool:
     return src_kind == dst_kind or (src_kind, dst_kind) in _CASTS
 
 
-def cast(obj, dst_kind: str):
+def cast_step(obj, dst_kind: str):
+    """One registered conversion hop (no routing, no fallback)."""
     if obj.kind == dst_kind:
         return obj
-    try:
-        return _CASTS[(obj.kind, dst_kind)](obj)
-    except KeyError:
-        # two-hop through dense
-        mid = _CASTS[(obj.kind, "dense")](obj)
-        return _CASTS[("dense", dst_kind)](mid)
+    return _CASTS[(obj.kind, dst_kind)](obj)
 
 
-# planner-side cast cost estimates moved to costmodel.CostModel.cast_seconds
-# (calibrated bytes/s per (src, dst) pair, with a measured-default fallback)
+def cast_path(src_kind: str, dst_kind: str, nbytes: float = 0.0,
+              cost_model=None) -> list:
+    """Hop sequence (kind names, inclusive of endpoints) for a cast.
+
+    With a cost model: the cheapest route over the calibrated per-pair
+    bandwidths (``CostModel.cast_route``) — possibly multi-hop even when a
+    direct pair exists, if the direct pair has been measured slow.  Without
+    one: the direct registered pair, else the legacy two-hop through dense."""
+    if src_kind == dst_kind:
+        return [src_kind]
+    if cost_model is not None:
+        return cost_model.cast_route(src_kind, dst_kind, nbytes)[1]
+    if (src_kind, dst_kind) in _CASTS:
+        return [src_kind, dst_kind]
+    return [src_kind, "dense", dst_kind]
+
+
+def cast(obj, dst_kind: str, cost_model=None):
+    for k in cast_path(obj.kind, dst_kind, getattr(obj, "nbytes", 0.0),
+                       cost_model)[1:]:
+        obj = cast_step(obj, k)
+    return obj
+
+
+# planner-side cast cost estimates live in costmodel.CostModel.cast_seconds /
+# cast_route (calibrated bytes/s per (src, dst) pair, shortest-path routed,
+# with a measured-default fallback)

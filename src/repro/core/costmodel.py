@@ -7,21 +7,46 @@ engine ops and casts, learned from two sources —
   2. *monitor history*: every measured execution feeds per-node op timings and
      per-cast transfer timings back via ``observe_op`` / ``observe_cast``.
 
-The model is persisted as JSON alongside the monitor DB (atomic write), so a
-calibration pass survives restarts and production processes start with
-realistic throughputs instead of structural placeholders.  All predictions
-degrade gracefully: an unobserved (engine, op) pair falls back to the engine's
-measured mean, then to a per-kind default.
+Cast predictions route *multi-hop*: ``cast_route`` searches the registered
+cast graph for the cheapest path under the calibrated per-pair bandwidths, so
+e.g. coo->dense->columnar wins over a direct coo->columnar pair that has been
+measured slow.  Multi-hop routes are only trusted when every edge on them has
+been observed — optimistic defaults never beat a real measurement.
+
+Persistence: the model is saved as JSON *beside the monitor DB*
+(``default_calibration_path`` maps ``monitor.json`` -> ``monitor.calib.json``)
+through ``ioutil.atomic_json_dump`` — a same-directory temp file moved into
+place with ``os.replace``, so a crash mid-save can never truncate the file.
+The blob stores each running mean with its sample count::
+
+    {"calibrated": true,
+     "op_rate":   {"dense_array": {"matmul": [5.2e8, 3]}},   # elems/s, n
+     "cast_rate": {"dense>columnar": [1.8e8, 2]}}            # bytes/s, n
+
+Worked example (everything round-trips through one file)::
+
+    >>> cm = CostModel("/tmp/demo.calib.json")
+    >>> cm.observe_op("dense_array", "matmul", elems=1e6, seconds=0.002)
+    >>> cm.observe_cast("dense", "coo", nbytes=4e6, seconds=0.01)
+    >>> cm.save()                              # atomic write
+    >>> cm2 = CostModel("/tmp/demo.calib.json")    # fresh process: warm start
+    >>> round(cm2.op_seconds("dense_array", "matmul", 1e6), 4)
+    0.0021
+    >>> cm2.cast_route("dense", "coo", 4e6)[1]     # calibrated direct route
+    ['dense', 'coo']
+
+All predictions degrade gracefully: an unobserved (engine, op) pair falls
+back to the engine's measured mean, then to a per-kind default.
 """
 from __future__ import annotations
 
-import json
+import itertools
 import os
 import time
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.ioutil import atomic_json_dump
+from repro.core.ioutil import atomic_json_dump, load_json
 
 # a-priori throughput guesses per engine *kind* (elements/s on one host core);
 # only used before any calibration/history exists.  Relative order encodes the
@@ -68,6 +93,68 @@ def container_elems(obj) -> float:
     return float(getattr(obj, "nbytes", 4)) / 4.0
 
 
+def observed_nbytes(obj) -> float:
+    """Measured LOGICAL output bytes of a container — the size-feedback unit
+    the executor reports and ``Monitor`` stores per signature.
+
+    Logical = the data an op semantically produced, not its physical layout:
+    a dense select keeps its padded shape but only ``valid_count`` live cells,
+    a columnar select masks rows without compacting, a COO result carries
+    ``nnz`` triples.  This is what downstream cast volume and data-dependent
+    op output (select/join/distinct) actually scale with — the quantity the
+    planner's shape rules can only guess at.
+
+    The unit is the valid-aware refinement of ``container_elems`` (4 bytes per
+    dense-EQUIVALENT element): columnar counts valid rows, not cells, because
+    a (i, j, value) triple table's rows ARE the dense equivalent's cells —
+    index/coordinate columns are layout overhead the planner deliberately
+    excludes (see ``_ref_size``), and op rates were learned in this unit."""
+    kind = getattr(obj, "kind", None)
+    if kind == "dense":
+        n = obj.valid_count if obj.valid_count >= 0 else obj.data.size
+        return 4.0 * float(n)
+    if kind == "columnar":
+        import numpy as np
+        return 4.0 * float(np.asarray(obj.valid).sum())
+    if kind == "coo":
+        return 4.0 * float(obj.nnz)
+    if kind == "stream":
+        return 4.0 * float(obj.data.size)
+    return float(getattr(obj, "nbytes", 4.0))
+
+
+def _registered_cast_edges() -> Tuple[Tuple[str, str], ...]:
+    """Edges of the executable cast graph (lazy: cast.py imports tables)."""
+    from repro.core.cast import _CASTS
+    return tuple(sorted(_CASTS))
+
+
+def _simple_paths(src: str, dst: str,
+                  edges: Tuple[Tuple[str, str], ...]) -> List[List[str]]:
+    """All simple paths src -> dst over the registered cast edges (the kind
+    graph has four nodes, so exhaustive DFS is trivially cheap)."""
+    out_edges: Dict[str, List[str]] = {}
+    for a, b in edges:
+        out_edges.setdefault(a, []).append(b)
+    paths: List[List[str]] = []
+
+    def dfs(node: str, path: List[str]):
+        if node == dst:
+            paths.append(list(path))
+            return
+        for nxt in out_edges.get(node, ()):
+            if nxt not in path:
+                path.append(nxt)
+                dfs(nxt, path)
+                path.pop()
+
+    dfs(src, [src])
+    return paths
+
+
+_PATHS_CACHE: Dict[Tuple[str, str, Tuple], List[List[str]]] = {}
+
+
 def default_calibration_path(monitor_path: Optional[str]) -> Optional[str]:
     """Calibration file that rides alongside a monitor DB path."""
     if not monitor_path:
@@ -108,13 +195,60 @@ class CostModel:
             rate = _DEFAULT_ELEMS_PER_S.get(kind, 1e8)
         return _OP_OVERHEAD_S + max(elems, 1.0) / max(rate, 1.0)
 
-    def cast_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
-        """Predicted seconds to move/convert `nbytes` between data models."""
-        if src_kind == dst_kind:
-            return 0.0
+    def _edge_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
+        """One hop: overhead + bytes over the (observed or default) bandwidth."""
         m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
         bw = m.mean if (m and m.n) else _DEFAULT_CAST_BYTES_PER_S
         return _CAST_OVERHEAD_S + max(nbytes, 1.0) / max(bw, 1.0)
+
+    def _edge_observed(self, src_kind: str, dst_kind: str) -> bool:
+        m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
+        return bool(m and m.n)
+
+    def cast_route(self, src_kind: str, dst_kind: str,
+                   nbytes: float) -> Tuple[float, List[str]]:
+        """(predicted seconds, hop path) of the cheapest cast route.
+
+        Candidate routes are the direct registered pair plus every multi-hop
+        simple path whose edges have ALL been observed — an uncalibrated
+        default bandwidth must never make a detour look cheaper than a
+        measured direct conversion.  When nothing on the graph is calibrated
+        the shortest registered path (defaults) is used, and an unregistered,
+        unreachable pair falls back to a direct-default estimate."""
+        if src_kind == dst_kind:
+            return 0.0, [src_kind]
+        edges = _registered_cast_edges()
+        ck = (src_kind, dst_kind, edges)
+        paths = _PATHS_CACHE.get(ck)
+        if paths is None:
+            paths = _PATHS_CACHE[ck] = _simple_paths(src_kind, dst_kind, edges)
+        best: Optional[Tuple[float, List[str]]] = None
+        for path in paths:
+            hops = list(itertools.pairwise(path))
+            if len(hops) > 1 and not all(self._edge_observed(a, b)
+                                         for a, b in hops):
+                continue
+            cost = sum(self._edge_seconds(a, b, nbytes) for a, b in hops)
+            if best is None or cost < best[0]:
+                best = (cost, path)
+        if best is not None:
+            return best
+        if paths:                       # registered routes, none fully observed:
+            # cheapest under whatever mix of observed/default edge rates we
+            # have — a partially-observed slow edge still steers away
+            costed = [(sum(self._edge_seconds(a, b, nbytes)
+                           for a, b in itertools.pairwise(p)), p)
+                      for p in paths]
+            return min(costed, key=lambda t: t[0])
+        return (self._edge_seconds(src_kind, dst_kind, nbytes),
+                [src_kind, dst_kind])
+
+    def cast_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
+        """Predicted seconds to move/convert `nbytes` between data models
+        (cheapest route over the cast graph, possibly multi-hop)."""
+        if src_kind == dst_kind:
+            return 0.0
+        return self.cast_route(src_kind, dst_kind, nbytes)[0]
 
     # -- learning ------------------------------------------------------------
     def observe_op(self, engine: str, op: str, elems: float, seconds: float):
@@ -224,8 +358,7 @@ class CostModel:
         atomic_json_dump(path, blob)
 
     def load(self, path: str):
-        with open(path) as f:
-            blob = json.load(f)
+        blob = load_json(path)
         self.calibrated = bool(blob.get("calibrated", False))
         self.op_rate = {e: {op: _Mean(mean=m, n=cnt)
                             for op, (m, cnt) in ops.items()}

@@ -11,16 +11,23 @@ Two dispatch modes:
       node in a level without blocking (JAX async dispatch overlaps their
       device work), with a single block at each level boundary.  Used by the
       production phase, where per-node attribution is not needed.
+
+Both modes report each node's *actual* logical output size (``size_obs``,
+keyed by post-order position) so the monitor can feed real intermediate
+sizes back into the planner's estimates — the other half of the §III-C
+feedback loop.  When a ``cost_model`` is supplied, the migrator routes casts
+along the model's cheapest (possibly multi-hop) path instead of always
+taking the direct pair.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
-from repro.core.costmodel import container_elems
+from repro.core.costmodel import CostModel, container_elems, observed_nbytes
 from repro.core.engines import ENGINES
 from repro.core.migrator import Migrator
 from repro.core.ops import PolyOp, Ref
@@ -44,6 +51,9 @@ class ExecutionResult:
     # measured (src_kind, dst_kind, bytes, seconds) per cast
     cast_obs: List[Tuple[str, str, float, float]] = field(default_factory=list)
     levels: int = 0                     # topological depth actually dispatched
+    # post-order position -> measured logical output bytes (both modes) —
+    # the monitor stores these per signature for size-estimate feedback
+    size_obs: Dict[int, float] = field(default_factory=dict)
 
 
 def _block(x):
@@ -99,12 +109,14 @@ def _deliver(query: PolyOp, result):
 
 
 def execute_plan(query: PolyOp, plan: Plan, catalog,
-                 concurrent: bool = False) -> ExecutionResult:
+                 concurrent: bool = False,
+                 cost_model: Optional[CostModel] = None) -> ExecutionResult:
     amap = plan.engine_map(query)
-    migrator = Migrator()
+    migrator = Migrator(cost_model=cost_model)
     values: Dict[int, Any] = {}
     per_node: Dict[int, float] = {}
     node_obs: List[Tuple[str, str, float, float]] = []
+    size_obs: Dict[int, float] = {}
     t0 = time.perf_counter()
     n_levels = 0
 
@@ -136,6 +148,11 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
 
     result = _deliver(query, values[query.uid])
     total = time.perf_counter() - t0
+    # size measurement happens OUTSIDE the timed window: observed_nbytes can
+    # touch host memory (columnar validity sum) and must not inflate the
+    # seconds the monitor records and the replan comparison consumes
+    for pos, node in enumerate(query.nodes()):
+        size_obs[pos] = observed_nbytes(values[node.uid])
     return ExecutionResult(result, total, migrator.bytes_moved,
                            migrator.n_casts, plan, per_node, node_obs,
-                           list(migrator.events), n_levels)
+                           list(migrator.events), n_levels, size_obs)

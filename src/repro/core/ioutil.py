@@ -6,6 +6,12 @@ import os
 import tempfile
 
 
+def load_json(path: str):
+    """Read a JSON blob written by ``atomic_json_dump`` (or by hand)."""
+    with open(path) as f:
+        return json.load(f)
+
+
 def atomic_json_dump(path: str, blob) -> None:
     """Write JSON via a same-directory temp file + ``os.replace`` so a crash
     mid-dump can never truncate the target (monitor DB, calibration file)."""

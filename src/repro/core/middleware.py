@@ -1,36 +1,72 @@
 """BigDAWG middleware facade (paper Fig. 3): planner + monitor + executor +
 migrator behind one ``execute()`` entry point with the training/production
-phase protocol of §III-C-3.
+phase protocol of §III-C-3, plus the adaptive feedback loop the paper's
+monitor sketches ("collects performance data ... and uses it to improve
+future plans"):
 
-  training   — enumerate candidate plans via the cost-model DP, run (up to
+  training   — enumerate candidate plans via the cost-model DP (sized from
+               measured intermediate sizes where history exists), run (up to
                ``train_plans`` of) them sequentially (per-node timings feed
-               the calibrated cost model), record stats, return the best
-               run's result, and cache the winning Plan by signature.
+               the calibrated cost model), record stats + actual sizes,
+               return the best run's result, and cache the winning Plan with
+               its predicted cost.
   production — serve from the signature-keyed plan cache (no re-enumeration,
                no plan-key parsing), dispatching DAG levels concurrently; on
                signature miss fall back to training; on usage drift, re-train
                (paper: "rerun the query under the training phase under the
                current usage") and queue the losers for background
-               exploration.
+               exploration.  After every run, the measured seconds are
+               compared against the cached plan's predicted cost: divergence
+               beyond ``replan_factor`` invalidates the entry and re-runs the
+               cheap DP under the updated cost model + measured sizes
+               (online re-planning, no training-phase trials needed).
   auto       — production if the signature is known, else training.
+
+The plan cache persists beside the monitor DB (``<monitor>.plans.json``,
+atomic JSON via ``ioutil``), so a restarted production process serves
+previously-trained signatures warm — zero plan enumerations.
 """
 from __future__ import annotations
 
+import os
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
 from repro.core.executor import ExecutionResult, execute_plan
+from repro.core.ioutil import atomic_json_dump, load_json
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
-from repro.core.planner import Plan, enumerate_plans
+from repro.core.planner import (Plan, dp_plans, estimate_sizes, plan_cost)
 from repro.core.signature import signature
 
 
 def _plan_from_key(plan_key: str) -> Plan:
-    return Plan(tuple((int(u), e) for u, e in
-                      (p.split(":") for p in plan_key.split("|"))))
+    """Parse ``pos:engine|pos:engine|...``; raises ValueError on malformed or
+    unknown-engine keys (callers decide whether to skip or retrain)."""
+    try:
+        pairs = tuple((int(u), e) for u, e in
+                      (p.split(":") for p in plan_key.split("|")))
+    except (ValueError, AttributeError) as exc:
+        raise ValueError(f"malformed plan key {plan_key!r}") from exc
+    for _, eng in pairs:
+        if eng not in ENGINES:
+            raise ValueError(f"plan key {plan_key!r} names unknown engine "
+                             f"{eng!r}")
+    if [u for u, _ in pairs] != list(range(len(pairs))):
+        raise ValueError(f"plan key {plan_key!r} positions are not "
+                         f"consecutive from 0")
+    return Plan(pairs)
+
+
+def default_plan_cache_path(monitor_path: Optional[str]) -> Optional[str]:
+    """Plan-cache file that rides alongside a monitor DB path."""
+    if not monitor_path:
+        return None
+    root, _ = os.path.splitext(monitor_path)
+    return root + ".plans.json"
 
 
 @dataclass
@@ -38,6 +74,21 @@ class CatalogEntry:
     name: str
     obj: Any                 # a tables.* container
     engine: str              # home engine
+
+
+@dataclass
+class CachedPlan:
+    """A plan-cache entry: the winning Plan plus the predicted cost it was
+    cached under (the baseline the online re-planner diverges against)."""
+    plan: Plan
+    predicted_s: float = 0.0
+    # a freshly re-planned entry is served once ahead of monitor history so
+    # its measured seconds enter the history and the comparison is live
+    pinned: bool = False
+    # loaded from a persisted cache: the first serve re-syncs the prediction
+    # to this process's runtime instead of re-planning (a cold jit cache can
+    # legitimately be >2x slower than the recording process was)
+    restored: bool = False
 
 
 @dataclass
@@ -51,13 +102,20 @@ class Report:
     plans_tried: int = 1
     drifted: bool = False
     cache_hit: bool = False  # plan came from the signature-keyed plan cache
+    replanned: bool = False  # predicted/measured divergence re-ran the DP
+    predicted_s: float = 0.0  # cached prediction for the executed plan
 
 
 class BigDAWG:
+    # measured/predicted divergence factor that triggers online re-planning
+    REPLAN_FACTOR = 2.0
+
     def __init__(self, monitor: Optional[Monitor] = None,
                  train_plans: int = 8, train_repeats: int = 2,
                  cost_model: Optional[CostModel] = None,
-                 calibrate: bool = False):
+                 calibrate: bool = False,
+                 plan_cache_path: Optional[str] = None,
+                 replan_factor: float = REPLAN_FACTOR):
         self.catalog: Dict[str, CatalogEntry] = {}
         self.monitor = monitor or Monitor()
         self.train_plans = train_plans
@@ -70,9 +128,16 @@ class BigDAWG:
             default_calibration_path(self.monitor.path))
         if calibrate and not self.cost_model.calibrated:
             self.cost_model.calibrate()
-        # signature -> winning Plan: production requests skip re-enumeration
-        # and plan-key parsing entirely
-        self.plan_cache: Dict[str, Plan] = {}
+        self.replan_factor = replan_factor
+        self.replans = 0
+        # signature -> CachedPlan: production requests skip re-enumeration
+        # and plan-key parsing entirely; persisted beside the monitor DB so
+        # restarted processes serve warm
+        self.plan_cache: Dict[str, CachedPlan] = {}
+        self.plan_cache_path = plan_cache_path or default_plan_cache_path(
+            self.monitor.path)
+        if self.plan_cache_path and os.path.exists(self.plan_cache_path):
+            self.load_plan_cache(self.plan_cache_path)
 
     # -- catalog -----------------------------------------------------------
     def register(self, name: str, obj, engine: str):
@@ -80,34 +145,144 @@ class BigDAWG:
             raise ValueError(f"unknown engine {engine}")
         if ENGINES[engine].kind != obj.kind:
             from repro.core import cast as castmod
-            obj = castmod.cast(obj, ENGINES[engine].kind)
+            obj = castmod.cast(obj, ENGINES[engine].kind, self.cost_model)
         self.catalog[name] = CatalogEntry(name, obj, engine)
 
+    # -- plan-cache persistence ---------------------------------------------
+    def save_plan_cache(self, path: Optional[str] = None):
+        path = path or self.plan_cache_path
+        if not path:
+            return
+        blob = {"format": 1,
+                "entries": {sig: {"plan": e.plan.key,
+                                  "predicted_s": e.predicted_s}
+                            for sig, e in self.plan_cache.items()}}
+        atomic_json_dump(path, blob)
+
+    def load_plan_cache(self, path: str):
+        """Load a persisted plan cache, skipping (with a warning) any entry a
+        hand edit or corruption has mangled — bad entries, or a whole file
+        that no longer parses, must not take down the warm-start path."""
+        try:
+            blob = load_json(path)
+        except (OSError, ValueError) as exc:   # JSONDecodeError is a ValueError
+            warnings.warn(f"plan cache {path}: unreadable ({exc}); "
+                          f"starting cold")
+            return
+        entries = blob.get("entries", {}) if isinstance(blob, dict) else {}
+        for sig, ent in entries.items():
+            try:
+                if not isinstance(ent, dict):
+                    raise ValueError(f"entry for {sig!r} is not an object")
+                plan = _plan_from_key(ent["plan"])
+                self.plan_cache[sig] = CachedPlan(
+                    plan, float(ent.get("predicted_s", 0.0)), restored=True)
+            except (ValueError, KeyError, TypeError) as exc:
+                warnings.warn(f"plan cache {path}: skipping bad entry "
+                              f"{sig!r}: {exc}")
+
     # -- phases --------------------------------------------------------------
+    def _predict(self, query: PolyOp, plan: Plan, sig: str) -> float:
+        """Current predicted seconds for a plan, under measured sizes."""
+        sizes = estimate_sizes(query, self.catalog,
+                               measured=self.monitor.measured_sizes(sig))
+        return plan_cost(query, plan, self.catalog, self.cost_model,
+                         sizes=sizes)
+
     def _train(self, query: PolyOp, sig: str) -> Report:
-        plans = enumerate_plans(query, self.catalog,
-                                max_plans=self.train_plans,
-                                cost_model=self.cost_model)
+        ranked = dp_plans(query, self.catalog, max_plans=self.train_plans,
+                          cost_model=self.cost_model,
+                          measured_sizes=self.monitor.measured_sizes(sig))
         best: Optional[ExecutionResult] = None
         usage = usage_snapshot()
-        for plan in plans:
+        for _, plan in ranked:
             # sequential warm-up runs: kill cold-start jit bias AND feed
             # honest per-node timings to the cost model (sequential only)
             for _ in range(self.train_repeats):
-                res = execute_plan(query, plan, self.catalog)
+                res = execute_plan(query, plan, self.catalog,
+                                   cost_model=self.cost_model)
             self.cost_model.observe_execution(res)
             # the RECORDED measurement uses concurrent dispatch — the same
             # mode production executes in, so every seconds value a
             # Monitor.best() comparison sees is from one dispatch mode
-            res = execute_plan(query, plan, self.catalog, concurrent=True)
+            res = execute_plan(query, plan, self.catalog, concurrent=True,
+                               cost_model=self.cost_model)
             self.monitor.record(sig, plan.key, res.seconds,
-                                cast_bytes=res.cast_bytes, usage=usage)
+                                cast_bytes=res.cast_bytes, usage=usage,
+                                sizes=res.size_obs)
             if best is None or res.seconds < best.seconds:
                 best = res
-        self.plan_cache[sig] = best.plan
+        # the cached prediction is recomputed AFTER the training observations
+        # and size measurements landed — the freshest model state, the
+        # baseline online re-planning diverges against.  If the model is
+        # still off by more than the replan factor from the measurement we
+        # JUST took, the measurement is the better baseline (caching a known-
+        # bad prediction would trigger a pointless re-plan on the very next
+        # production run)
+        predicted = self._predict(query, best.plan, sig)
+        if self._diverged(predicted, best.seconds):
+            predicted = best.seconds
+        self.plan_cache[sig] = CachedPlan(best.plan, predicted)
         self.cost_model.save()
+        self.monitor.save()
+        self.save_plan_cache()
         return Report(best.value, best.plan.key, "training", best.seconds,
-                      best.cast_bytes, sig, plans_tried=len(plans))
+                      best.cast_bytes, sig, plans_tried=len(ranked),
+                      predicted_s=predicted)
+
+    def _diverged(self, predicted: float, measured: float) -> bool:
+        """The online re-planner's divergence policy: prediction and
+        measurement disagree by more than ``replan_factor`` in either
+        direction (non-positive values never diverge)."""
+        if predicted <= 0.0 or measured <= 0.0:
+            return False
+        return max(measured / predicted,
+                   predicted / measured) > self.replan_factor
+
+    def _maybe_replan(self, query: PolyOp, sig: str, measured: float,
+                      entry: CachedPlan) -> bool:
+        """Online re-planning: >replan_factor divergence between the measured
+        cost (the monitor's history-damped mean for the served plan — a
+        single run's timing noise on short queries can exceed the factor by
+        itself) and the cached prediction invalidates the entry and re-runs
+        the cheap DP under the updated cost model + measured sizes."""
+        pred = entry.predicted_s
+        if measured <= 0.0:
+            return False
+        if entry.restored:
+            # first serve after a warm restart: a cold jit cache makes this
+            # run incomparable to the recording process's baseline — re-sync
+            # the prediction instead of re-planning.  A restored entry with
+            # no usable baseline (predicted_s missing from the file -> 0.0)
+            # must also adopt the measurement, or the loop stays dead
+            entry.restored = False
+            if pred <= 0.0 or self._diverged(pred, measured):
+                entry.predicted_s = measured
+            return False
+        if pred <= 0.0 or not self._diverged(pred, measured):
+            return False
+        # the "cheap DP": only the new optimum is consumed, so k=1 (per-engine
+        # fronts keep the top-1 exact — see dp_plans)
+        ranked = dp_plans(query, self.catalog, max_plans=1,
+                          cost_model=self.cost_model,
+                          measured_sizes=self.monitor.measured_sizes(sig))
+        cost, plan = ranked[0]
+        if plan.key == entry.plan.key:
+            # same plan still wins — the divergence is model form error, not
+            # a placement mistake; adopt the measured cost as the entry's
+            # prediction so a stable runtime stops re-triggering
+            self.plan_cache[sig] = CachedPlan(plan, measured)
+        else:
+            # prefer the plan's measured history (training trials measured
+            # every candidate) over the raw model cost as the new baseline —
+            # a model-based baseline could itself diverge and cascade
+            stats = self.monitor.known_plans(sig).get(plan.key)
+            pred_new = stats.mean_seconds if stats is not None and stats.n \
+                else cost
+            self.plan_cache[sig] = CachedPlan(plan, pred_new, pinned=True)
+        self.replans += 1
+        self.save_plan_cache()
+        return True
 
     def _production(self, query: PolyOp, sig: str) -> Report:
         usage = usage_snapshot()
@@ -124,15 +299,49 @@ class BigDAWG:
                     self.monitor.queue_background(sig, pk)
             rep.drifted = True
             return rep
-        cached = self.plan_cache.get(sig)
-        hit = cached is not None and cached.key == plan_key
-        plan = cached if hit else _plan_from_key(plan_key)
-        self.plan_cache[sig] = plan
-        res = execute_plan(query, plan, self.catalog, concurrent=True)
+        entry = self.plan_cache.get(sig)
+        if entry is not None and entry.pinned:
+            # freshly re-planned entry: serve the DP's new choice once ahead
+            # of monitor history so its measured seconds enter the comparison
+            plan, plan_key, hit = entry.plan, entry.plan.key, True
+            entry.pinned = False
+        else:
+            hit = entry is not None and entry.plan.key == plan_key
+            if hit:
+                plan = entry.plan
+            else:
+                try:
+                    plan = _plan_from_key(plan_key)
+                except ValueError as exc:    # corrupted monitor history
+                    warnings.warn(f"monitor best for {sig!r} unusable "
+                                  f"({exc}); retraining")
+                    return self._train(query, sig)
+                # measured history as the baseline (stats exist: best() just
+                # picked this plan by mean seconds) — model predictions are
+                # only baselines when no measurement is available
+                entry = CachedPlan(plan, stats.mean_seconds if stats.n
+                                   else self._predict(query, plan, sig))
+                self.plan_cache[sig] = entry
+        if len(plan.assignment) != len(query.nodes()):
+            # a persisted entry (or hand-edited history) for a different
+            # query shape under this signature: unusable, retrain
+            warnings.warn(f"plan for {sig!r} covers {len(plan.assignment)} "
+                          f"positions, query has {len(query.nodes())}; "
+                          f"retraining")
+            self.plan_cache.pop(sig, None)
+            return self._train(query, sig)
+        res = execute_plan(query, plan, self.catalog, concurrent=True,
+                           cost_model=self.cost_model)
         self.monitor.record(sig, plan_key, res.seconds,
-                            cast_bytes=res.cast_bytes, usage=usage)
+                            cast_bytes=res.cast_bytes, usage=usage,
+                            sizes=res.size_obs)
+        after = self.monitor.known_plans(sig).get(plan_key)
+        measured = after.mean_seconds if after is not None and after.n \
+            else res.seconds
+        replanned = self._maybe_replan(query, sig, measured, entry)
         return Report(res.value, plan_key, "production", res.seconds,
-                      res.cast_bytes, sig, cache_hit=hit)
+                      res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
+                      predicted_s=entry.predicted_s)
 
     # -- public API ----------------------------------------------------------
     def execute(self, query: PolyOp, mode: str = "auto") -> Report:
@@ -155,13 +364,25 @@ class BigDAWG:
             sig, plan_key = self.monitor.background_queue.pop()
             if sig not in query_by_sig:
                 continue
+            query = query_by_sig[sig]
+            try:
+                plan = _plan_from_key(plan_key)
+                if len(plan.assignment) != len(query.nodes()):
+                    raise ValueError(f"plan covers {len(plan.assignment)} "
+                                     f"positions, query has "
+                                     f"{len(query.nodes())}")
+            except ValueError as exc:    # corrupted history: skip, keep
+                warnings.warn(f"background queue: skipping bad plan for "
+                              f"{sig!r}: {exc}")       # draining the rest
+                continue
             # concurrent, like production: exploration exists to challenge the
             # incumbent's production-mode mean, so its seconds must be
             # measured under the same dispatch mode or the comparison is
             # structurally biased toward whichever plan won training
-            res = execute_plan(query_by_sig[sig], _plan_from_key(plan_key),
-                               self.catalog, concurrent=True)
+            res = execute_plan(query, plan,
+                               self.catalog, concurrent=True,
+                               cost_model=self.cost_model)
             self.monitor.record(sig, plan_key, res.seconds,
-                                cast_bytes=res.cast_bytes)
+                                cast_bytes=res.cast_bytes, sizes=res.size_obs)
             done += 1
         return done

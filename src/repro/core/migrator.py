@@ -1,12 +1,17 @@
 """Migrator (paper §III-C / [18]): executes casts between engines, keeps
 account of the bytes moved (the executor charges them to the plan's stats),
 and times every transfer so the calibrated cost model can learn real cast
-bandwidth per (src, dst) data-model pair."""
+bandwidth per (src, dst) data-model pair.
+
+Given a cost model, the migrator follows ``cast_path`` — the cheapest route
+over the calibrated cast graph, which may be multi-hop (coo->dense->columnar
+when the direct pair is slow).  Every hop is timed and reported separately,
+so the model keeps learning true per-pair bandwidths even on detours."""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Tuple
+from typing import Any, List, Optional, Tuple
 
 from repro.core import cast as castmod
 from repro.core.engines import ENGINES
@@ -16,21 +21,25 @@ from repro.core.engines import ENGINES
 class Migrator:
     bytes_moved: float = 0.0
     n_casts: int = 0
-    # (src_kind, dst_kind, bytes, seconds) per executed cast
+    # (src_kind, dst_kind, bytes, seconds) per executed cast hop
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
+    cost_model: Optional[Any] = None     # enables calibrated multi-hop routes
 
     def to_engine(self, obj, engine_name: str):
         eng = ENGINES[engine_name]
         if obj.kind == eng.kind:
             return obj
-        nbytes = obj.nbytes
-        self.bytes_moved += nbytes
-        self.n_casts += 1
-        t0 = time.perf_counter()
-        out = castmod.cast(obj, eng.kind)
-        self.events.append((obj.kind, eng.kind, float(nbytes),
-                            time.perf_counter() - t0))
-        return out
+        path = castmod.cast_path(obj.kind, eng.kind, obj.nbytes,
+                                 self.cost_model)
+        for dst_kind in path[1:]:
+            src_kind, nbytes = obj.kind, obj.nbytes
+            self.bytes_moved += nbytes
+            self.n_casts += 1
+            t0 = time.perf_counter()
+            obj = castmod.cast_step(obj, dst_kind)
+            self.events.append((src_kind, dst_kind, float(nbytes),
+                                time.perf_counter() - t0))
+        return obj
 
     def reset(self):
         self.bytes_moved = 0.0

@@ -4,10 +4,38 @@ measurement time.  Production-phase matching compares the current usage
 snapshot against the recorded one; large drift triggers retraining advice
 (paper: "the optimizer may ... recommend that the user rerun the query under
 the training phase under the current usage").
+
+Beyond per-plan timings, the monitor stores *measured intermediate sizes*:
+the executor reports each node's actual logical output bytes (keyed by
+post-order position, which is stable across structurally-identical query
+rebuilds — the same property plan keys rely on), and ``measured_sizes``
+hands them back to the planner so data-dependent ops (select, join,
+distinct) are sized from observation instead of shape rules.
+
+Persistence: one JSON file (``Monitor(path)``), written atomically through
+``ioutil.atomic_json_dump`` — the blob is dumped to a same-directory temp
+file and moved into place with ``os.replace``, so a crash mid-save can never
+truncate or corrupt the DB (the previous version survives intact).  Format
+(version 2; version-1 files, a bare ``{sig: {plan_key: stats}}`` mapping,
+still load)::
+
+    {"format": 2,
+     "plans": {sig: {plan_key: PlanStats-dict}},     # timings + usage
+     "sizes": {sig: {post_order_pos: [mean_bytes, n_samples]}}}
+
+Worked example (round-trips through one file)::
+
+    >>> m = Monitor("/tmp/demo.monitor.json")
+    >>> m.record("s1", "0:dense_array", 0.02, sizes={0: 4096.0})
+    >>> m.save()                              # atomic write
+    >>> m2 = Monitor("/tmp/demo.monitor.json")    # fresh process: warm start
+    >>> m2.best("s1")[0]
+    '0:dense_array'
+    >>> m2.measured_sizes("s1")
+    {0: 4096.0}
 """
 from __future__ import annotations
 
-import json
 import os
 import resource
 import time
@@ -16,7 +44,7 @@ from typing import Dict, Optional
 
 import jax
 
-from repro.core.ioutil import atomic_json_dump
+from repro.core.ioutil import atomic_json_dump, load_json
 
 
 @dataclass
@@ -61,13 +89,16 @@ def usage_drift(a: Dict[str, float], b: Dict[str, float]) -> float:
 
 
 class Monitor:
-    """signature -> {plan_key: PlanStats}; JSON-persistent."""
+    """signature -> {plan_key: PlanStats} (+ measured sizes); JSON-persistent."""
 
     DRIFT_THRESHOLD = 0.5
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self.db: Dict[str, Dict[str, PlanStats]] = {}
+        # sig -> {post-order position: [mean logical bytes, n]} — actual
+        # intermediate sizes, fed back into estimate_sizes on re-plans
+        self.sizes: Dict[str, Dict[int, list]] = {}
         self.background_queue: list = []     # plans to re-explore when idle
         if path and os.path.exists(path):
             self.load(path)
@@ -75,9 +106,21 @@ class Monitor:
     # -- recording ---------------------------------------------------------
     def record(self, sig: str, plan_key: str, seconds: float,
                cast_bytes: float = 0.0, extra: Optional[Dict] = None,
-               usage: Optional[Dict[str, float]] = None):
+               usage: Optional[Dict[str, float]] = None,
+               sizes: Optional[Dict[int, float]] = None):
         entry = self.db.setdefault(sig, {}).setdefault(plan_key, PlanStats())
         entry.record(seconds, usage or usage_snapshot(), cast_bytes, extra)
+        if sizes:
+            store = self.sizes.setdefault(sig, {})
+            for pos, nbytes in sizes.items():
+                m = store.setdefault(int(pos), [0.0, 0])
+                m[0] = (m[0] * m[1] + float(nbytes)) / (m[1] + 1)
+                m[1] += 1
+
+    def measured_sizes(self, sig: str) -> Dict[int, float]:
+        """Post-order position -> mean measured logical output bytes (empty
+        dict when the signature has never been executed)."""
+        return {pos: m[0] for pos, m in self.sizes.get(sig, {}).items()}
 
     # -- production-phase matching ------------------------------------------
     def best(self, sig: str, usage: Optional[Dict[str, float]] = None):
@@ -103,12 +146,23 @@ class Monitor:
         path = path or self.path
         if not path:
             return
-        blob = {sig: {pk: asdict(st) for pk, st in plans.items()}
-                for sig, plans in self.db.items()}
+        blob = {
+            "format": 2,
+            "plans": {sig: {pk: asdict(st) for pk, st in plans.items()}
+                      for sig, plans in self.db.items()},
+            "sizes": {sig: {str(pos): list(m) for pos, m in store.items()}
+                      for sig, store in self.sizes.items()},
+        }
         atomic_json_dump(path, blob)
 
     def load(self, path: str):
-        with open(path) as f:
-            blob = json.load(f)
-        self.db = {sig: {pk: PlanStats(**st) for pk, st in plans.items()}
-                   for sig, plans in blob.items()}
+        blob = load_json(path)
+        if isinstance(blob, dict) and "plans" in blob:      # format 2
+            plans, sizes = blob["plans"], blob.get("sizes", {})
+        else:                       # format 1: bare {sig: {plan_key: stats}}
+            plans, sizes = blob, {}
+        self.db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
+                   for sig, pls in plans.items()}
+        self.sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
+                            for pos, m in store.items()}
+                      for sig, store in sizes.items()}

@@ -117,13 +117,21 @@ def _ref_size(ref: Ref, catalog) -> Tuple[float, Optional[Tuple[int, ...]]]:
     return 4096.0, None                   # unknown object: assume a small page
 
 
-def estimate_sizes(query: PolyOp, catalog=None) -> Dict[int, float]:
+def estimate_sizes(query: PolyOp, catalog=None,
+                   measured: Optional[Dict[int, float]] = None
+                   ) -> Dict[int, float]:
     """uid -> predicted output bytes, propagated bottom-up with per-op rules
-    (shape-aware where the catalog gives real shapes)."""
+    (shape-aware where the catalog gives real shapes).
+
+    ``measured`` — actual logical output bytes per post-order position, from
+    ``Monitor.measured_sizes`` — overrides the shape rule for any node it
+    covers; downstream propagation then builds on the observed value.  This
+    is the size-feedback half of the §III-C monitor loop: ops whose output is
+    data-dependent (select, join, distinct) get real sizes on re-plans."""
     nbytes: Dict[int, float] = {}
     shapes: Dict[int, Optional[Tuple[int, ...]]] = {}
 
-    for node in query.nodes():            # post-order: inputs already done
+    for pos, node in enumerate(query.nodes()):   # post-order: inputs done
         ins: List[Tuple[float, Optional[Tuple[int, ...]]]] = []
         for inp in node.inputs:
             if isinstance(inp, Ref):
@@ -163,6 +171,8 @@ def estimate_sizes(query: PolyOp, catalog=None) -> Dict[int, float]:
         # select/haar/tfidf/scale/add/join/groupby_sum/ingest/to_array:
         # output ~ input size (the max-input default)
 
+        if measured is not None and pos in measured:
+            out_b = measured[pos]        # observation beats any shape rule
         nbytes[node.uid] = max(out_b, 4.0)
         shapes[node.uid] = out_s
     return nbytes
@@ -256,12 +266,20 @@ def _intra_cost(c: PlanContainer, engine: str, sizes, catalog,
 
 
 def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
-             cost_model: Optional[CostModel] = None) -> List[Tuple[float, Plan]]:
+             cost_model: Optional[CostModel] = None,
+             measured_sizes: Optional[Dict[int, float]] = None
+             ) -> List[Tuple[float, Plan]]:
     """Exact k-best DP over the container tree: for every container and engine
     choice, combine the k cheapest child subplans through the cast edge cost.
-    Covers the full container-assignment product (no truncation bias)."""
+    Covers the full container-assignment product (no truncation bias).
+
+    Cast edges are costed by ``CostModel.cast_seconds``, which routes
+    multi-hop over the calibrated cast graph — a coo->dense->columnar detour
+    beats a direct pair measured slow.  ``measured_sizes`` (from
+    ``Monitor.measured_sizes``) replaces shape-rule estimates with actual
+    intermediate sizes wherever the signature has execution history."""
     cm = cost_model or default_cost_model()
-    sizes = estimate_sizes(query, catalog)
+    sizes = estimate_sizes(query, catalog, measured=measured_sizes)
     containers = plan_containers(query, catalog, sizes=sizes)
     k = max(1, max_plans)
 
@@ -337,12 +355,13 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
 
 
 def exhaustive_plans(query: PolyOp, catalog=None,
-                     cost_model: Optional[CostModel] = None
+                     cost_model: Optional[CostModel] = None,
+                     measured_sizes: Optional[Dict[int, float]] = None
                      ) -> List[Tuple[float, Plan]]:
     """Brute-force reference over the container assignment product, costed
     with the same model — the DP must agree with this on small DAGs."""
     cm = cost_model or default_cost_model()
-    sizes = estimate_sizes(query, catalog)
+    sizes = estimate_sizes(query, catalog, measured=measured_sizes)
     containers = plan_containers(query, catalog, sizes=sizes)
     pos_owner = {p: ci for ci, c in enumerate(containers) for p in c.positions}
     nodes = query.nodes()
@@ -388,10 +407,13 @@ def plan_cost(query: PolyOp, plan: Plan, catalog=None,
 
 
 def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16,
-                    cost_model: Optional[CostModel] = None) -> List[Plan]:
+                    cost_model: Optional[CostModel] = None,
+                    measured_sizes: Optional[Dict[int, float]] = None
+                    ) -> List[Plan]:
     """Top-``max_plans`` candidate plans by predicted cost, from the k-best
     container DP (full assignment space, cheapest first)."""
-    return [p for _, p in dp_plans(query, catalog, max_plans, cost_model)]
+    return [p for _, p in dp_plans(query, catalog, max_plans, cost_model,
+                                   measured_sizes=measured_sizes)]
 
 
 def estimate_casts(query: PolyOp, plan: Plan, catalog=None,

@@ -12,6 +12,12 @@ picks the decode plan (tensorplan), and the monitor records per-step times.
 signature-keyed plan cache: the first request for a signature pays the
 training phase (plan enumeration + measured trials), every later request
 executes the cached plan with concurrent DAG dispatch and no re-enumeration.
+Because the middleware persists its plan cache, monitor DB and calibration
+beside each other (``persist()`` flushes all three), a restarted server
+pointed at the same paths starts *warm*: previously-trained signatures are
+served in production mode with zero plan enumerations.  The middleware's
+online re-planner still watches every run — ``stats["replans"]`` counts the
+times measured/predicted divergence forced a fresh (cheap) DP pass.
 """
 from __future__ import annotations
 
@@ -144,7 +150,7 @@ class QueryServer:
     def __init__(self, bigdawg):
         self.bd = bigdawg
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
-                      "seconds": 0.0}
+                      "replans": 0, "seconds": 0.0}
 
     def warm(self, queries) -> int:
         """Admission/warmup: train every query shape once so production
@@ -155,6 +161,14 @@ class QueryServer:
             n += 1
         return n
 
+    def persist(self) -> None:
+        """Flush monitor DB, cost-model calibration and plan cache to their
+        side-by-side files so the next server process restarts warm (no-ops
+        for components constructed without a path)."""
+        self.bd.monitor.save()
+        self.bd.cost_model.save()
+        self.bd.save_plan_cache()
+
     def submit(self, query):
         t0 = time.perf_counter()
         rep = self.bd.execute(query, mode="auto")
@@ -164,4 +178,6 @@ class QueryServer:
             self.stats["trainings"] += 1
         if rep.cache_hit:
             self.stats["cache_hits"] += 1
+        if rep.replanned:
+            self.stats["replans"] += 1
         return rep

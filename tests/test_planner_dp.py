@@ -218,6 +218,10 @@ def test_cost_model_roundtrip(tmp_path):
 
 def test_plan_cache_hit_skips_enumeration(monkeypatch):
     bd = _bd()
+    # disarm online re-planning: wall-clock noise on ~ms queries can exceed
+    # the 2x factor by itself and would call the patched dp_plans (the replan
+    # policy has its own controlled-value tests in test_adaptive_loop.py)
+    bd.replan_factor = float("inf")
     q = _analytic()
     rep1 = bd.execute(q, mode="training")
     assert rep1.sig in bd.plan_cache
@@ -227,7 +231,7 @@ def test_plan_cache_hit_skips_enumeration(monkeypatch):
     def boom(*a, **kw):
         raise AssertionError("production re-enumerated plans")
 
-    monkeypatch.setattr(mw, "enumerate_plans", boom)
+    monkeypatch.setattr(mw, "dp_plans", boom)
     rep2 = bd.execute(_analytic(), mode="auto")          # rebuilt query
     assert rep2.mode == "production"
     assert rep2.cache_hit
