@@ -1,0 +1,160 @@
+"""Host-parallel executor: measure the win from thread-pooling a topological
+level's host work (ISSUE 3 tentpole).
+
+The pre-PR-3 concurrent mode only overlapped JAX *async dispatch*: the
+numpy-eager engine work — columnar sort-merge joins, COO conversions, every
+cast hop — still serialized on the host, so a level of W independent
+host-heavy branches ran no faster than sequential.  The rebuilt executor
+submits every node of a level (including its multi-hop input casts) to a
+shared host thread pool; numpy releases the GIL on real arrays, so that work
+genuinely overlaps.
+
+Two DAG families, both fig_planner_scaling-style wide trees:
+
+  pipeline_widthW — W independent select->haar->bin_hist->tfidf branches on
+      the columnar engine (one dense->columnar cast per branch), reduced by
+      a dense add tree.  Mostly XLA-backed ops: the threaded win here is
+      bounded by how much the XLA CPU runtime already parallelizes.
+  join_widthW — W independent columnar sort-merge joins (np.argsort /
+      searchsorted dominate: single-threaded numpy that releases the GIL),
+      reduced the same way.  This is the workload the ROADMAP names
+      ("thread-pool the numpy-eager engine ops (columnar join, ...)"), and
+      where host overlap pays even on small machines.
+
+Per entry this emits JSON:
+
+  * ``sequential_s``          — post-order, block-per-node (training mode),
+  * ``inline_concurrent_s``   — level dispatch, single-threaded
+                                (``host_workers=1``: the pre-PR-3 behavior),
+  * ``threaded_s``            — level dispatch over the shared host pool,
+  * ``host_speedup``          — inline_concurrent_s / threaded_s: the pure
+                                host-overlap win (same plan, same levels),
+  * ``speedup_vs_sequential`` — sequential_s / threaded_s.
+
+Speedups scale with cores (``workers`` is recorded): on a 2-core CI runner
+expect ~1.1-1.3x on the join family and ~1x on the XLA-bound pipeline
+family; on an n-core host the ceiling is min(W, n).
+
+Run: PYTHONPATH=src python benchmarks/fig_host_parallel.py [--fast]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (BigDAWG, ColumnarTable, DenseTensor, array,
+                        execute_plan, relational, topo_levels)
+from repro.core.executor import DEFAULT_HOST_WORKERS
+from repro.core.planner import Plan
+
+# branch stages that carry the host-side columnar work
+_COLUMNAR_OPS = {"select", "haar", "bin_hist", "tfidf", "join", "count"}
+
+
+def _add_tree(outs):
+    """Balanced dense add-reduction of a list of branch outputs."""
+    while len(outs) > 1:
+        outs = [array.add(a, b) if b is not None else a
+                for a, b in zip(outs[0::2],
+                                outs[1::2] + [None] * (len(outs) % 2))]
+    return outs[0]
+
+
+def pipeline_dag(width: int):
+    """W independent columnar pipelines — the fig_planner_scaling shape."""
+    def branch():
+        s = relational.select("waves", column="value", lo=0.0)
+        h = array.haar(s, levels=2)
+        return array.tfidf(array.bin_hist(h, nbins=8, levels=2))
+    return _add_tree([branch() for _ in range(width)])
+
+
+def join_dag(width: int):
+    """W independent sort-merge joins (host numpy), counted to scalars and
+    add-reduced."""
+    return _add_tree([
+        array.count(relational.join(f"jl{i}", f"jr{i}",
+                                    left_on="i", right_on="i"))
+        for i in range(width)])
+
+
+def host_heavy_plan(query) -> Plan:
+    """Columnar stages on the columnar engine, reduction tree on dense."""
+    return Plan(tuple(
+        (i, "columnar" if n.op in _COLUMNAR_OPS else "dense_array")
+        for i, n in enumerate(query.nodes())))
+
+
+def measure(query, plan, catalog, iters, **kw):
+    execute_plan(query, plan, catalog, **kw)          # warm (jit, pool spin-up)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        execute_plan(query, plan, catalog, **kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def main(fast: bool = False):
+    fast = fast or "--fast" in sys.argv
+    iters = 1 if fast else 3
+    n, t = (16, 64) if fast else (96, 256)
+    # fast join inputs stay above the executor's HOST_TASK_MIN_BYTES auto-
+    # threading gate, so the CI smoke exercises the pool, not the fallback
+    join_rows = 150_000 if fast else 800_000
+    widths = (2, 4) if fast else (4, 8)
+
+    rng = np.random.default_rng(0)
+    bd = BigDAWG()
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(n, t)).astype(np.float32))), engine="dense_array")
+    for i in range(max(widths)):
+        for side_idx, side in enumerate(("jl", "jr")):
+            # deterministic seeds (hash() is salted per process)
+            r = np.random.default_rng(1000 + 2 * i + side_idx)
+            keys = r.permutation(join_rows).astype(np.int32)
+            bd.register(f"{side}{i}", ColumnarTable(
+                {"i": jnp.asarray(keys),
+                 "value": jnp.asarray(
+                     r.normal(size=join_rows).astype(np.float32))}),
+                engine="columnar")
+
+    report = {}
+    for family, build in (("pipeline", pipeline_dag), ("join", join_dag)):
+        for width in widths:
+            q = build(width)
+            plan = host_heavy_plan(q)
+            seq = measure(q, plan, bd.catalog, iters)
+            inline = measure(q, plan, bd.catalog, iters, concurrent=True,
+                             host_workers=1)
+            threaded = measure(q, plan, bd.catalog, iters, concurrent=True)
+            res = execute_plan(q, plan, bd.catalog, concurrent=True)
+            report[f"{family}_width{width}"] = {
+                "n_nodes": len(q.nodes()),
+                "width": width,
+                "levels": len(topo_levels(q)),
+                "n_casts": res.n_casts,
+                "workers": DEFAULT_HOST_WORKERS,
+                "sequential_s": round(seq, 6),
+                "inline_concurrent_s": round(inline, 6),
+                "threaded_s": round(threaded, 6),
+                "host_speedup": round(inline / max(threaded, 1e-9), 3),
+                "speedup_vs_sequential": round(seq / max(threaded, 1e-9), 3),
+            }
+            print(f"# {family} width={width} nodes={len(q.nodes())} "
+                  f"seq={seq:.4f}s inline={inline:.4f}s "
+                  f"threaded={threaded:.4f}s "
+                  f"host_speedup={inline / max(threaded, 1e-9):.2f}x",
+                  file=sys.stderr, flush=True)
+
+    print(json.dumps(report, indent=1))
+    return report
+
+
+if __name__ == "__main__":
+    main()

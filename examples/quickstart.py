@@ -1,33 +1,65 @@
-"""Quickstart: a cross-island polystore query in ~20 lines.
+"""Quickstart: a cross-island polystore query in ~40 lines, end to end
+through the adaptive planning loop (see docs/PLANNER_LOOP.md).
 
 This is the paper's own example (§III-C-2):
     ARRAY( multiply( RELATIONAL( select * from A ... ), B ) )
 The RELATIONAL scope runs on the columnar engine, the ARRAY scope on the
-dense engine, and the middleware inserts the Cast between them.
+dense engine, and the middleware inserts the Cast between them.  The second
+half restarts the middleware on the same state files — a warm restart serves
+production with zero plan enumerations, and the budgeted exploration path
+keeps trying the k-best DP's runner-up plans while serving the winner
+(``stats["explorations"]``); ``stats["replans"]`` counts online re-plans
+from predicted/measured divergence.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+import os
+
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import BigDAWG, DenseTensor, array, relational
+from repro.core import BigDAWG, DenseTensor, Monitor, array, relational
+from repro.runtime import QueryServer
 
-bd = BigDAWG()
+state_dir = tempfile.mkdtemp(prefix="bigdawg-quickstart-")
 rng = np.random.default_rng(0)
-bd.register("A", DenseTensor(jnp.asarray(
-    rng.normal(size=(256, 256)).astype(np.float32))), engine="columnar")
-bd.register("B", DenseTensor(jnp.asarray(
-    rng.normal(size=(256, 64)).astype(np.float32))), engine="dense_array")
 
-# the paper's cross-island query
-query = array.matmul(relational.select("A", column="value", lo=-0.5, hi=2.0),
-                     "B")
 
-report = bd.execute(query, mode="training")      # first time: explore plans
+def make_bigdawg():
+    """Middleware wired to persistent state files (monitor DB, calibration
+    and plan cache ride side by side under state_dir)."""
+    bd = BigDAWG(monitor=Monitor(os.path.join(state_dir, "monitor.json")),
+                 explore_budget=0.5)       # spend <=50% of serve time trying
+    bd.register("A", DenseTensor(jnp.asarray(                  # alternates
+        rng.normal(size=(256, 256)).astype(np.float32))), engine="columnar")
+    bd.register("B", DenseTensor(jnp.asarray(
+        rng.normal(size=(256, 64)).astype(np.float32))), engine="dense_array")
+    return bd
+
+
+def query():
+    # the paper's cross-island query (rebuilt fresh each time: signatures
+    # make structurally-identical queries share plans and history)
+    return array.matmul(relational.select("A", column="value",
+                                          lo=-0.5, hi=2.0), "B")
+
+
+# -- first process: training phase, then persist ----------------------------
+bd = make_bigdawg()
+report = bd.execute(query(), mode="training")    # first time: explore plans
 print(f"training phase: tried {report.plans_tried} plans, "
       f"winner={report.plan_key} in {report.seconds*1e3:.1f} ms")
+srv = QueryServer(bd)
+srv.persist()                                    # flush monitor/calib/plans
 
-report = bd.execute(query)                       # now: production phase
+# -- second process (simulated): warm restart, production + exploration -----
+srv2 = QueryServer(make_bigdawg())               # reads the persisted state
+for _ in range(4):
+    report = srv2.submit(query())                # production: cached plan
 print(f"production phase: plan={report.plan_key} "
       f"in {report.seconds*1e3:.1f} ms (cast {report.cast_bytes/1e6:.1f} MB)")
+print(f"after warm restart: trainings={srv2.stats['trainings']} "
+      f"explorations={srv2.stats['explorations']} "
+      f"replans={srv2.stats['replans']}")
 print("result:", report.result.data.shape, report.result.data.dtype)

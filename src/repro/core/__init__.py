@@ -5,12 +5,16 @@ from repro.core.ops import PolyOp, Ref
 from repro.core.engines import ENGINES, Engine
 from repro.core.islands import ISLANDS, array, relational, text, stream, degenerate
 from repro.core.signature import signature, signature_text
-from repro.core.costmodel import CostModel, default_calibration_path
+from repro.core.costmodel import (CostModel, default_calibration_path,
+                                  kind_nbytes_from_logical,
+                                  container_kind_nbytes, observed_shape)
 from repro.core.planner import (Plan, enumerate_plans, find_containers,
                                 plan_containers, plan_cost, dp_plans,
-                                exhaustive_plans, estimate_sizes)
+                                exhaustive_plans, estimate_sizes,
+                                estimate_sizes_shapes)
 from repro.core.monitor import Monitor, usage_snapshot
-from repro.core.executor import execute_plan, ExecutionResult, topo_levels
+from repro.core.executor import (execute_plan, ExecutionResult, topo_levels,
+                                 host_pool)
 from repro.core.middleware import (BigDAWG, CachedPlan, Report,
                                    default_plan_cache_path)
 
@@ -19,9 +23,10 @@ __all__ = [
     "PolyOp", "Ref", "ENGINES", "Engine", "ISLANDS",
     "array", "relational", "text", "stream", "degenerate",
     "signature", "signature_text", "CostModel", "default_calibration_path",
+    "kind_nbytes_from_logical", "container_kind_nbytes", "observed_shape",
     "Plan", "enumerate_plans", "find_containers", "plan_containers",
     "plan_cost", "dp_plans", "exhaustive_plans", "estimate_sizes",
-    "Monitor", "usage_snapshot", "execute_plan", "ExecutionResult",
-    "topo_levels", "BigDAWG", "CachedPlan", "Report",
-    "default_plan_cache_path",
+    "estimate_sizes_shapes", "Monitor", "usage_snapshot", "execute_plan",
+    "ExecutionResult", "topo_levels", "host_pool", "BigDAWG", "CachedPlan",
+    "Report", "default_plan_cache_path",
 ]

@@ -125,17 +125,25 @@ def cast_step(obj, dst_kind: str):
 
 
 def cast_path(src_kind: str, dst_kind: str, nbytes: float = 0.0,
-              cost_model=None) -> list:
+              cost_model=None, obj=None) -> list:
     """Hop sequence (kind names, inclusive of endpoints) for a cast.
 
     With a cost model: the cheapest route over the calibrated per-pair
     bandwidths (``CostModel.cast_route``) — possibly multi-hop even when a
-    direct pair exists, if the direct pair has been measured slow.  Without
-    one: the direct registered pair, else the legacy two-hop through dense."""
+    direct pair exists, if the direct pair has been measured slow.  When the
+    actual container is at hand, pass it as ``obj`` so every hop is sized
+    from its true intermediate format (coo->dense densifies; the dense
+    onward hop moves more bytes than the triples did).  Without a model:
+    the direct registered pair, else the legacy two-hop through dense."""
     if src_kind == dst_kind:
         return [src_kind]
     if cost_model is not None:
-        return cost_model.cast_route(src_kind, dst_kind, nbytes)[1]
+        kind_nbytes = None
+        if obj is not None:
+            from repro.core.costmodel import container_kind_nbytes
+            kind_nbytes = container_kind_nbytes(obj)
+        return cost_model.cast_route(src_kind, dst_kind, nbytes,
+                                     kind_nbytes)[1]
     if (src_kind, dst_kind) in _CASTS:
         return [src_kind, dst_kind]
     return [src_kind, "dense", dst_kind]
@@ -143,7 +151,7 @@ def cast_path(src_kind: str, dst_kind: str, nbytes: float = 0.0,
 
 def cast(obj, dst_kind: str, cost_model=None):
     for k in cast_path(obj.kind, dst_kind, getattr(obj, "nbytes", 0.0),
-                       cost_model)[1:]:
+                       cost_model, obj=obj)[1:]:
         obj = cast_step(obj, k)
     return obj
 

@@ -11,7 +11,12 @@ Cast predictions route *multi-hop*: ``cast_route`` searches the registered
 cast graph for the cheapest path under the calibrated per-pair bandwidths, so
 e.g. coo->dense->columnar wins over a direct coo->columnar pair that has been
 measured slow.  Multi-hop routes are only trusted when every edge on them has
-been observed — optimistic defaults never beat a real measurement.
+been observed — optimistic defaults never beat a real measurement.  Each hop
+is sized from the format the data is in when that hop starts (pass
+``kind_nbytes``, see ``kind_nbytes_from_logical`` /
+``container_kind_nbytes``): a coo->dense hop *densifies* the payload, so the
+following dense->columnar hop must be charged for the inflated dense bytes,
+not the original COO triple bytes.
 
 Persistence: the model is saved as JSON *beside the monitor DB*
 (``default_calibration_path`` maps ``monitor.json`` -> ``monitor.calib.json``)
@@ -123,6 +128,55 @@ def observed_nbytes(obj) -> float:
     return float(getattr(obj, "nbytes", 4.0))
 
 
+def observed_shape(obj) -> Optional[Tuple[int, ...]]:
+    """Measured dense-equivalent SHAPE of a container, or None when the
+    format does not carry one cheaply (columnar tables would need a max-scan
+    over index columns).  This is the shape-feedback unit the executor
+    reports (``ExecutionResult.shape_obs``) and the monitor stores so
+    downstream matmul/transpose output estimates use observed shapes instead
+    of rule-propagated guesses."""
+    kind = getattr(obj, "kind", None)
+    if kind in ("dense", "stream"):
+        return tuple(int(d) for d in obj.data.shape)
+    if kind == "coo":
+        return tuple(int(d) for d in obj.shape)
+    return None
+
+
+def kind_nbytes_from_logical(logical_bytes: float,
+                             shape: Optional[Tuple[int, ...]] = None
+                             ) -> Dict[str, float]:
+    """Predicted PHYSICAL bytes of a payload held in each data-model kind,
+    from its logical size (4 bytes per live element) and, when known, its
+    dense-equivalent shape.
+
+    Dense/stream layouts materialize the full shape (densification: a sparse
+    payload inflates to 4 * prod(shape)); triple layouts (columnar, coo)
+    carry ~3 columns (i, j, value) per live element.  This is what makes
+    per-hop cast sizing honest on multi-hop routes."""
+    dense_b = float(logical_bytes)
+    if shape:
+        n = 1.0
+        for d in shape:
+            n *= d
+        dense_b = 4.0 * n
+    triple_b = 3.0 * float(logical_bytes)
+    return {"dense": dense_b, "stream": dense_b,
+            "columnar": triple_b, "coo": triple_b}
+
+
+def container_kind_nbytes(obj) -> Dict[str, float]:
+    """Per-kind physical bytes for an ACTUAL container (exact for the format
+    the object is currently in, shape-derived estimates for the others) —
+    what the migrator hands ``cast_route`` so every hop of a multi-hop cast
+    is sized from its true intermediate format."""
+    kn = kind_nbytes_from_logical(observed_nbytes(obj), observed_shape(obj))
+    kind = getattr(obj, "kind", None)
+    if kind in kn:
+        kn[kind] = float(getattr(obj, "nbytes", kn[kind]))
+    return kn
+
+
 def _registered_cast_edges() -> Tuple[Tuple[str, str], ...]:
     """Edges of the executable cast graph (lazy: cast.py imports tables)."""
     from repro.core.cast import _CASTS
@@ -205,8 +259,9 @@ class CostModel:
         m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
         return bool(m and m.n)
 
-    def cast_route(self, src_kind: str, dst_kind: str,
-                   nbytes: float) -> Tuple[float, List[str]]:
+    def cast_route(self, src_kind: str, dst_kind: str, nbytes: float,
+                   kind_nbytes: Optional[Dict[str, float]] = None
+                   ) -> Tuple[float, List[str]]:
         """(predicted seconds, hop path) of the cheapest cast route.
 
         Candidate routes are the direct registered pair plus every multi-hop
@@ -214,9 +269,26 @@ class CostModel:
         default bandwidth must never make a detour look cheaper than a
         measured direct conversion.  When nothing on the graph is calibrated
         the shortest registered path (defaults) is used, and an unregistered,
-        unreachable pair falls back to a direct-default estimate."""
+        unreachable pair falls back to a direct-default estimate.
+
+        ``kind_nbytes`` (kind -> physical bytes of this payload in that
+        format, see ``kind_nbytes_from_logical``) sizes EACH HOP from the
+        format the data is in when the hop starts — a coo->dense hop
+        densifies, so a following dense->columnar hop moves more bytes than
+        the original triples did.  Without it every hop is charged the flat
+        ``nbytes`` (the pre-PR-3 behavior)."""
         if src_kind == dst_kind:
             return 0.0, [src_kind]
+
+        def hop_bytes(kind: str) -> float:
+            if kind_nbytes is not None:
+                return kind_nbytes.get(kind, nbytes)
+            return nbytes
+
+        def route_cost(hops) -> float:
+            return sum(self._edge_seconds(a, b, hop_bytes(a))
+                       for a, b in hops)
+
         edges = _registered_cast_edges()
         ck = (src_kind, dst_kind, edges)
         paths = _PATHS_CACHE.get(ck)
@@ -228,7 +300,7 @@ class CostModel:
             if len(hops) > 1 and not all(self._edge_observed(a, b)
                                          for a, b in hops):
                 continue
-            cost = sum(self._edge_seconds(a, b, nbytes) for a, b in hops)
+            cost = route_cost(hops)
             if best is None or cost < best[0]:
                 best = (cost, path)
         if best is not None:
@@ -236,19 +308,20 @@ class CostModel:
         if paths:                       # registered routes, none fully observed:
             # cheapest under whatever mix of observed/default edge rates we
             # have — a partially-observed slow edge still steers away
-            costed = [(sum(self._edge_seconds(a, b, nbytes)
-                           for a, b in itertools.pairwise(p)), p)
+            costed = [(route_cost(list(itertools.pairwise(p))), p)
                       for p in paths]
             return min(costed, key=lambda t: t[0])
-        return (self._edge_seconds(src_kind, dst_kind, nbytes),
+        return (self._edge_seconds(src_kind, dst_kind, hop_bytes(src_kind)),
                 [src_kind, dst_kind])
 
-    def cast_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
+    def cast_seconds(self, src_kind: str, dst_kind: str, nbytes: float,
+                     kind_nbytes: Optional[Dict[str, float]] = None) -> float:
         """Predicted seconds to move/convert `nbytes` between data models
-        (cheapest route over the cast graph, possibly multi-hop)."""
+        (cheapest route over the cast graph, possibly multi-hop; see
+        ``cast_route`` for per-hop sizing via ``kind_nbytes``)."""
         if src_kind == dst_kind:
             return 0.0
-        return self.cast_route(src_kind, dst_kind, nbytes)[0]
+        return self.cast_route(src_kind, dst_kind, nbytes, kind_nbytes)[0]
 
     # -- learning ------------------------------------------------------------
     def observe_op(self, engine: str, op: str, elems: float, seconds: float):

@@ -7,27 +7,49 @@ Two dispatch modes:
 
   sequential (default) — blocks after every node, yielding honest per-node
       timings; these feed the calibrated cost model (training phase).
-  concurrent — groups the DAG into topological levels and dispatches every
-      node in a level without blocking (JAX async dispatch overlaps their
-      device work), with a single block at each level boundary.  Used by the
-      production phase, where per-node attribution is not needed.
+  concurrent — groups the DAG into topological levels and submits every node
+      in a level (including its multi-hop input casts) to a shared host
+      ``ThreadPoolExecutor``.  Numpy-eager engine work — columnar joins, COO
+      conversions, cast hops — releases the GIL on real arrays, so host work
+      genuinely overlaps across workers, on top of JAX async dispatch
+      overlapping the device work.  One barrier per level (futures are
+      drained before the next level starts).  Used by the production phase,
+      where per-node attribution is not needed.  In auto mode
+      (``host_workers=None``) a level is threaded only when at least two of
+      its tasks each move ``HOST_TASK_MIN_BYTES`` of input — tiny XLA-bound
+      levels stay inline, where single-threaded async dispatch is already
+      optimal; ``host_workers<=1`` falls back to inline single-threaded
+      level dispatch (the pre-PR-3 behavior), and a single-node level always
+      runs inline (no pool round-trip).
 
-Both modes report each node's *actual* logical output size (``size_obs``,
-keyed by post-order position) so the monitor can feed real intermediate
-sizes back into the planner's estimates — the other half of the §III-C
-feedback loop.  When a ``cost_model`` is supplied, the migrator routes casts
-along the model's cheapest (possibly multi-hop) path instead of always
-taking the direct pair.
+Both modes report each node's *actual* logical output size (``size_obs``)
+and dense-equivalent output shape (``shape_obs``), keyed by post-order
+position, so the monitor can feed real intermediate sizes AND shapes back
+into the planner's estimates — the other half of the §III-C feedback loop
+(a measured select size overrides the bytes rule; a measured shape feeds
+downstream matmul output estimates).  When a ``cost_model`` is supplied, the
+migrator routes casts along the model's cheapest (possibly multi-hop) path,
+each hop sized from its intermediate format, instead of always taking the
+direct pair.
+
+The host pool is process-wide and lazily built (``host_pool``): plans are
+short-lived but frequent on the serving path, and thread churn per plan
+would dominate the win.  Do not call ``execute_plan`` from inside a pool
+worker — a saturated pool could deadlock on the level barrier.
 """
 from __future__ import annotations
 
+import os
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
-from repro.core.costmodel import CostModel, container_elems, observed_nbytes
+from repro.core.costmodel import (CostModel, container_elems, observed_nbytes,
+                                  observed_shape)
 from repro.core.engines import ENGINES
 from repro.core.migrator import Migrator
 from repro.core.ops import PolyOp, Ref
@@ -36,6 +58,39 @@ from repro.core.planner import Plan
 # the data model a query's result is delivered in = its root island's model
 ISLAND_KIND = {"array": "dense", "relational": "columnar", "text": "coo",
                "stream": "stream"}
+
+# default size of the shared host pool; override per call via host_workers=
+# or process-wide via REPRO_HOST_WORKERS
+DEFAULT_HOST_WORKERS = min(8, os.cpu_count() or 1)
+
+# auto mode (host_workers=None) threads a level only when at least two of
+# its nodes each move this many input bytes: small-payload levels are
+# XLA-dispatch-bound, and multi-threaded dispatch of many tiny ops pays lock
+# contention for zero overlap (measured ~0.6x on fig_host_parallel's
+# pipeline family).  An explicit host_workers forces threading regardless.
+HOST_TASK_MIN_BYTES = 1e6
+
+_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_SIZE = 0
+_POOL_LOCK = threading.Lock()
+
+
+def host_pool(max_workers: Optional[int] = None) -> ThreadPoolExecutor:
+    """The process-wide host-task pool for concurrent dispatch (lazily
+    created; rebuilt only if a larger size is requested)."""
+    global _POOL, _POOL_SIZE
+    want = max_workers or int(os.environ.get("REPRO_HOST_WORKERS", 0)) \
+        or DEFAULT_HOST_WORKERS
+    with _POOL_LOCK:
+        if _POOL is None or _POOL_SIZE < want:
+            # a superseded pool is NOT shut down: another plan may still
+            # hold a reference and submit to it (shutdown would raise
+            # RuntimeError mid-plan).  Its idle threads simply park until
+            # process exit; pool growth happens at most a handful of times.
+            _POOL = ThreadPoolExecutor(max_workers=want,
+                                       thread_name_prefix="bigdawg-host")
+            _POOL_SIZE = want
+        return _POOL
 
 
 @dataclass
@@ -54,6 +109,10 @@ class ExecutionResult:
     # post-order position -> measured logical output bytes (both modes) —
     # the monitor stores these per signature for size-estimate feedback
     size_obs: Dict[int, float] = field(default_factory=dict)
+    # post-order position -> measured dense-equivalent output shape (both
+    # modes, where the format carries one) — shape feedback for downstream
+    # matmul/transpose output estimates
+    shape_obs: Dict[int, Tuple[int, ...]] = field(default_factory=dict)
 
 
 def _block(x):
@@ -83,6 +142,19 @@ def topo_levels(query: PolyOp) -> List[List[PolyOp]]:
     return levels
 
 
+def _node_input_nbytes(node: PolyOp, catalog, values) -> float:
+    """Physical bytes this node's inputs occupy right now — the cheap proxy
+    the auto-threading gate uses for 'is this task heavy enough to overlap'."""
+    total = 0.0
+    for inp in node.inputs:
+        if isinstance(inp, Ref):
+            if catalog is not None and inp.name in catalog:
+                total += float(getattr(catalog[inp.name].obj, "nbytes", 0.0))
+        else:
+            total += float(getattr(values.get(inp.uid), "nbytes", 0.0) or 0.0)
+    return total
+
+
 def _gather_args(node: PolyOp, eng, catalog, values, migrator):
     args = []
     for inp in node.inputs:
@@ -110,28 +182,64 @@ def _deliver(query: PolyOp, result):
 
 def execute_plan(query: PolyOp, plan: Plan, catalog,
                  concurrent: bool = False,
-                 cost_model: Optional[CostModel] = None) -> ExecutionResult:
+                 cost_model: Optional[CostModel] = None,
+                 host_workers: Optional[int] = None) -> ExecutionResult:
     amap = plan.engine_map(query)
     migrator = Migrator(cost_model=cost_model)
     values: Dict[int, Any] = {}
     per_node: Dict[int, float] = {}
     node_obs: List[Tuple[str, str, float, float]] = []
     size_obs: Dict[int, float] = {}
+    shape_obs: Dict[int, Tuple[int, ...]] = {}
     t0 = time.perf_counter()
     n_levels = 0
+
+    def run_node(node: PolyOp):
+        """One host task: migrate inputs (possibly multi-hop casts) and run
+        the engine op — the numpy-eager parts release the GIL, so tasks of
+        one level overlap on the pool.  Deliberately does NOT block on the
+        result: XLA-backed ops stay async (dispatch returns immediately;
+        blocking here would serialize the device pipeline behind each
+        worker), and the level boundary blocks everything once."""
+        eng = ENGINES[amap[node.uid]]
+        tn = time.perf_counter()
+        args = _gather_args(node, eng, catalog, values, migrator)
+        out = eng.run(node.op, node.attrs, *args)
+        per_node[node.uid] = time.perf_counter() - tn
+        return node.uid, out
 
     if concurrent:
         lvls = topo_levels(query)
         n_levels = len(lvls)
+        workers = host_workers if host_workers is not None else \
+            int(os.environ.get("REPRO_HOST_WORKERS", 0)) or \
+            DEFAULT_HOST_WORKERS
+        pool = host_pool(workers) if workers > 1 else None
         for level in lvls:
             outs = []
-            for node in level:              # dispatch whole level, no blocking
-                eng = ENGINES[amap[node.uid]]
-                args = _gather_args(node, eng, catalog, values, migrator)
-                out = eng.run(node.op, node.attrs, *args)
-                values[node.uid] = out
-                outs.append(out)
-            for out in outs:                # one block at the level boundary
+            use_pool = pool is not None and len(level) > 1
+            if use_pool and host_workers is None:
+                # auto mode: thread only when >= 2 tasks are heavy enough to
+                # overlap (see HOST_TASK_MIN_BYTES)
+                heavy = sum(1 for n in level
+                            if _node_input_nbytes(n, catalog, values)
+                            >= HOST_TASK_MIN_BYTES)
+                use_pool = heavy >= 2
+            if not use_pool:
+                for node in level:           # inline fallback / trivial level
+                    uid, out = run_node(node)
+                    values[uid] = out
+                    outs.append(out)
+            else:
+                # one future per node; .result() re-raises the first worker
+                # exception in submission order — a failing node fails the
+                # plan, it does not vanish into the pool
+                futs = [pool.submit(run_node, node) for node in level]
+                for fut in futs:
+                    uid, out = fut.result()
+                    values[uid] = out
+                    outs.append(out)
+            for out in outs:                 # one block per level boundary
                 _block(out)
     else:
         for node in query.nodes():          # post-order
@@ -148,11 +256,15 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
 
     result = _deliver(query, values[query.uid])
     total = time.perf_counter() - t0
-    # size measurement happens OUTSIDE the timed window: observed_nbytes can
-    # touch host memory (columnar validity sum) and must not inflate the
+    # size/shape measurement happens OUTSIDE the timed window: observed_nbytes
+    # can touch host memory (columnar validity sum) and must not inflate the
     # seconds the monitor records and the replan comparison consumes
     for pos, node in enumerate(query.nodes()):
         size_obs[pos] = observed_nbytes(values[node.uid])
+        shp = observed_shape(values[node.uid])
+        if shp is not None:
+            shape_obs[pos] = shp
     return ExecutionResult(result, total, migrator.bytes_moved,
                            migrator.n_casts, plan, per_node, node_obs,
-                           list(migrator.events), n_levels, size_obs)
+                           list(migrator.events), n_levels, size_obs,
+                           shape_obs)

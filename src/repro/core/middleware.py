@@ -11,27 +11,40 @@ future plans"):
                return the best run's result, and cache the winning Plan with
                its predicted cost.
   production — serve from the signature-keyed plan cache (no re-enumeration,
-               no plan-key parsing), dispatching DAG levels concurrently; on
-               signature miss fall back to training; on usage drift, re-train
-               (paper: "rerun the query under the training phase under the
-               current usage") and queue the losers for background
+               no plan-key parsing), dispatching DAG levels concurrently over
+               the executor's host thread pool; on signature miss fall back
+               to training; on usage drift, re-train (paper: "rerun the
+               query under the training phase under the current usage") and
+               queue the DP's true runner-up plans for background
                exploration.  After every run, the measured seconds are
                compared against the cached plan's predicted cost: divergence
                beyond ``replan_factor`` invalidates the entry and re-runs the
-               cheap DP under the updated cost model + measured sizes
-               (online re-planning, no training-phase trials needed).
+               cheap DP under the updated cost model + measured sizes and
+               shapes (online re-planning, no training-phase trials needed).
   auto       — production if the signature is known, else training.
 
-The plan cache persists beside the monitor DB (``<monitor>.plans.json``,
-atomic JSON via ``ioutil``), so a restarted production process serves
-previously-trained signatures warm — zero plan enumerations.
+Each cache entry carries the k-best DP's runner-up plans
+(``CachedPlan.alternates``).  With a non-zero ``explore_budget``, production
+occasionally *explores*: after serving the winner, it executes the next
+alternate in rotation and records its measured seconds/sizes/shapes into the
+monitor — the paper's "the monitor must continuously try alternate plans"
+loop, bounded so exploration time never exceeds ``explore_budget`` x
+cumulative serve time.  An alternate
+that proves faster becomes the monitor's best and is promoted on the next
+serve.
+
+The plan cache (winning plan + predicted cost + alternate keys) persists
+beside the monitor DB (``<monitor>.plans.json``, atomic JSON via
+``ioutil``), so a restarted production process serves previously-trained
+signatures warm — zero plan enumerations — and keeps exploring the same
+alternates.
 """
 from __future__ import annotations
 
 import os
 import warnings
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
@@ -39,7 +52,8 @@ from repro.core.executor import ExecutionResult, execute_plan
 from repro.core.ioutil import atomic_json_dump, load_json
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
-from repro.core.planner import (Plan, dp_plans, estimate_sizes, plan_cost)
+from repro.core.planner import (Plan, dp_plans, estimate_sizes_shapes,
+                                plan_cost)
 from repro.core.signature import signature
 
 
@@ -79,7 +93,8 @@ class CatalogEntry:
 @dataclass
 class CachedPlan:
     """A plan-cache entry: the winning Plan plus the predicted cost it was
-    cached under (the baseline the online re-planner diverges against)."""
+    cached under (the baseline the online re-planner diverges against), and
+    the k-best DP's runner-up plans for budgeted exploration."""
     plan: Plan
     predicted_s: float = 0.0
     # a freshly re-planned entry is served once ahead of monitor history so
@@ -89,6 +104,10 @@ class CachedPlan:
     # to this process's runtime instead of re-planning (a cold jit cache can
     # legitimately be >2x slower than the recording process was)
     restored: bool = False
+    # the DP's true runner-up plans (training order, best first) — what the
+    # budgeted exploration path executes in rotation
+    alternates: Tuple[Plan, ...] = ()
+    next_alt: int = 0        # rotation cursor (not persisted)
 
 
 @dataclass
@@ -104,18 +123,26 @@ class Report:
     cache_hit: bool = False  # plan came from the signature-keyed plan cache
     replanned: bool = False  # predicted/measured divergence re-ran the DP
     predicted_s: float = 0.0  # cached prediction for the executed plan
+    explored: bool = False   # this serve also executed an alternate plan
+    explored_key: str = ""   # which alternate (empty when explored is False)
 
 
 class BigDAWG:
     # measured/predicted divergence factor that triggers online re-planning
     REPLAN_FACTOR = 2.0
+    # max fraction of cumulative production serve seconds spendable on
+    # executing alternate plans (0.0 disables exploration)
+    EXPLORE_BUDGET = 0.0
+    # how many DP runner-ups each cache entry keeps for exploration
+    MAX_ALTERNATES = 3
 
     def __init__(self, monitor: Optional[Monitor] = None,
                  train_plans: int = 8, train_repeats: int = 2,
                  cost_model: Optional[CostModel] = None,
                  calibrate: bool = False,
                  plan_cache_path: Optional[str] = None,
-                 replan_factor: float = REPLAN_FACTOR):
+                 replan_factor: float = REPLAN_FACTOR,
+                 explore_budget: float = EXPLORE_BUDGET):
         self.catalog: Dict[str, CatalogEntry] = {}
         self.monitor = monitor or Monitor()
         self.train_plans = train_plans
@@ -130,6 +157,12 @@ class BigDAWG:
             self.cost_model.calibrate()
         self.replan_factor = replan_factor
         self.replans = 0
+        # budgeted alternate exploration (see module docstring): exploration
+        # seconds may never exceed explore_budget x cumulative serve seconds
+        self.explore_budget = explore_budget
+        self.explorations = 0
+        self.explore_seconds = 0.0
+        self.serve_seconds = 0.0
         # signature -> CachedPlan: production requests skip re-enumeration
         # and plan-key parsing entirely; persisted beside the monitor DB so
         # restarted processes serve warm
@@ -153,9 +186,10 @@ class BigDAWG:
         path = path or self.plan_cache_path
         if not path:
             return
-        blob = {"format": 1,
+        blob = {"format": 2,
                 "entries": {sig: {"plan": e.plan.key,
-                                  "predicted_s": e.predicted_s}
+                                  "predicted_s": e.predicted_s,
+                                  "alternates": [p.key for p in e.alternates]}
                             for sig, e in self.plan_cache.items()}}
         atomic_json_dump(path, blob)
 
@@ -175,24 +209,36 @@ class BigDAWG:
                 if not isinstance(ent, dict):
                     raise ValueError(f"entry for {sig!r} is not an object")
                 plan = _plan_from_key(ent["plan"])
+                alts = []
+                for ak in ent.get("alternates", []) or []:
+                    try:
+                        alts.append(_plan_from_key(ak))
+                    except ValueError as exc:   # one bad alternate must not
+                        warnings.warn(           # sink the whole entry
+                            f"plan cache {path}: dropping bad alternate "
+                            f"for {sig!r}: {exc}")
                 self.plan_cache[sig] = CachedPlan(
-                    plan, float(ent.get("predicted_s", 0.0)), restored=True)
+                    plan, float(ent.get("predicted_s", 0.0)), restored=True,
+                    alternates=tuple(alts))
             except (ValueError, KeyError, TypeError) as exc:
                 warnings.warn(f"plan cache {path}: skipping bad entry "
                               f"{sig!r}: {exc}")
 
     # -- phases --------------------------------------------------------------
     def _predict(self, query: PolyOp, plan: Plan, sig: str) -> float:
-        """Current predicted seconds for a plan, under measured sizes."""
-        sizes = estimate_sizes(query, self.catalog,
-                               measured=self.monitor.measured_sizes(sig))
+        """Current predicted seconds for a plan, under measured sizes and
+        shapes."""
+        sizes, shapes = estimate_sizes_shapes(
+            query, self.catalog, measured=self.monitor.measured_sizes(sig),
+            measured_shapes=self.monitor.measured_shapes(sig))
         return plan_cost(query, plan, self.catalog, self.cost_model,
-                         sizes=sizes)
+                         sizes=sizes, shapes=shapes)
 
     def _train(self, query: PolyOp, sig: str) -> Report:
         ranked = dp_plans(query, self.catalog, max_plans=self.train_plans,
                           cost_model=self.cost_model,
-                          measured_sizes=self.monitor.measured_sizes(sig))
+                          measured_sizes=self.monitor.measured_sizes(sig),
+                          measured_shapes=self.monitor.measured_shapes(sig))
         best: Optional[ExecutionResult] = None
         usage = usage_snapshot()
         for _, plan in ranked:
@@ -209,7 +255,7 @@ class BigDAWG:
                                cost_model=self.cost_model)
             self.monitor.record(sig, plan.key, res.seconds,
                                 cast_bytes=res.cast_bytes, usage=usage,
-                                sizes=res.size_obs)
+                                sizes=res.size_obs, shapes=res.shape_obs)
             if best is None or res.seconds < best.seconds:
                 best = res
         # the cached prediction is recomputed AFTER the training observations
@@ -222,7 +268,13 @@ class BigDAWG:
         predicted = self._predict(query, best.plan, sig)
         if self._diverged(predicted, best.seconds):
             predicted = best.seconds
-        self.plan_cache[sig] = CachedPlan(best.plan, predicted)
+        # the DP's runner-ups are the TRUE alternates (ROADMAP: background
+        # exploration must try these, not whatever the monitor happens to
+        # have recorded) — kept with the entry for budgeted exploration
+        alternates = tuple(p for _, p in ranked
+                           if p.key != best.plan.key)[:self.MAX_ALTERNATES]
+        self.plan_cache[sig] = CachedPlan(best.plan, predicted,
+                                          alternates=alternates)
         self.cost_model.save()
         self.monitor.save()
         self.save_plan_cache()
@@ -265,13 +317,15 @@ class BigDAWG:
         # fronts keep the top-1 exact — see dp_plans)
         ranked = dp_plans(query, self.catalog, max_plans=1,
                           cost_model=self.cost_model,
-                          measured_sizes=self.monitor.measured_sizes(sig))
+                          measured_sizes=self.monitor.measured_sizes(sig),
+                          measured_shapes=self.monitor.measured_shapes(sig))
         cost, plan = ranked[0]
         if plan.key == entry.plan.key:
             # same plan still wins — the divergence is model form error, not
             # a placement mistake; adopt the measured cost as the entry's
             # prediction so a stable runtime stops re-triggering
-            self.plan_cache[sig] = CachedPlan(plan, measured)
+            self.plan_cache[sig] = CachedPlan(plan, measured,
+                                              alternates=entry.alternates)
         else:
             # prefer the plan's measured history (training trials measured
             # every candidate) over the raw model cost as the new baseline —
@@ -279,7 +333,13 @@ class BigDAWG:
             stats = self.monitor.known_plans(sig).get(plan.key)
             pred_new = stats.mean_seconds if stats is not None and stats.n \
                 else cost
-            self.plan_cache[sig] = CachedPlan(plan, pred_new, pinned=True)
+            self.plan_cache[sig] = CachedPlan(
+                plan, pred_new, pinned=True,
+                # the dethroned incumbent joins the alternates — exploration
+                # keeps measuring it so a wrong re-plan can be reversed
+                alternates=tuple(
+                    p for p in (entry.plan,) + entry.alternates
+                    if p.key != plan.key)[:self.MAX_ALTERNATES])
         self.replans += 1
         self.save_plan_cache()
         return True
@@ -291,12 +351,13 @@ class BigDAWG:
             return self._train(query, sig)
         if drifted:
             # usage changed too much since training — re-train now, queue the
-            # alternates for background exploration
+            # DP's true runner-up plans for background exploration (not the
+            # monitor's historical leftovers, which may never have been
+            # planner candidates under the current sizes)
             self.plan_cache.pop(sig, None)
             rep = self._train(query, sig)
-            for pk in self.monitor.known_plans(sig):
-                if pk != rep.plan_key:
-                    self.monitor.queue_background(sig, pk)
+            for alt in self.plan_cache[sig].alternates:
+                self.monitor.queue_background(sig, alt.key)
             rep.drifted = True
             return rep
         entry = self.plan_cache.get(sig)
@@ -318,9 +379,17 @@ class BigDAWG:
                     return self._train(query, sig)
                 # measured history as the baseline (stats exist: best() just
                 # picked this plan by mean seconds) — model predictions are
-                # only baselines when no measurement is available
+                # only baselines when no measurement is available.  An
+                # exploration win lands here: the promoted alternate keeps
+                # the old entry's alternate pool (incumbent included) so
+                # exploration continues to challenge it
+                alts = ()
+                if entry is not None:
+                    alts = tuple(p for p in (entry.plan,) + entry.alternates
+                                 if p.key != plan_key)[:self.MAX_ALTERNATES]
                 entry = CachedPlan(plan, stats.mean_seconds if stats.n
-                                   else self._predict(query, plan, sig))
+                                   else self._predict(query, plan, sig),
+                                   alternates=alts)
                 self.plan_cache[sig] = entry
         if len(plan.assignment) != len(query.nodes()):
             # a persisted entry (or hand-edited history) for a different
@@ -334,14 +403,57 @@ class BigDAWG:
                            cost_model=self.cost_model)
         self.monitor.record(sig, plan_key, res.seconds,
                             cast_bytes=res.cast_bytes, usage=usage,
-                            sizes=res.size_obs)
+                            sizes=res.size_obs, shapes=res.shape_obs)
         after = self.monitor.known_plans(sig).get(plan_key)
         measured = after.mean_seconds if after is not None and after.n \
             else res.seconds
         replanned = self._maybe_replan(query, sig, measured, entry)
+        self.serve_seconds += res.seconds
+        explored_key = self._maybe_explore(query, sig, usage)
         return Report(res.value, plan_key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
-                      predicted_s=entry.predicted_s)
+                      predicted_s=entry.predicted_s,
+                      explored=bool(explored_key), explored_key=explored_key)
+
+    def _maybe_explore(self, query: PolyOp, sig: str,
+                       usage: Dict[str, float]) -> str:
+        """Budgeted alternate exploration (paper: the monitor "continuously"
+        tries alternate plans): execute the next DP runner-up in rotation and
+        feed its measured seconds/sizes/shapes to the monitor (which the
+        planner and cost model consume on every later planning pass).
+        Runs only while cumulative exploration
+        time stays within ``explore_budget`` x cumulative serve time, so the
+        serving path's overhead is bounded.  Returns the explored plan key,
+        or '' when nothing ran."""
+        entry = self.plan_cache.get(sig)
+        if (self.explore_budget <= 0.0 or entry is None
+                or not entry.alternates):
+            return ""
+        if self.explore_seconds > self.explore_budget * self.serve_seconds:
+            return ""
+        n_pos = len(query.nodes())
+        for _ in range(len(entry.alternates)):
+            alt = entry.alternates[entry.next_alt % len(entry.alternates)]
+            entry.next_alt += 1
+            if len(alt.assignment) == n_pos and alt.key != entry.plan.key:
+                break
+        else:
+            return ""
+        res = execute_plan(query, alt, self.catalog, concurrent=True,
+                           cost_model=self.cost_model)
+        self.explore_seconds += res.seconds
+        self.explorations += 1
+        # same dispatch mode as production serves, so the alternate's mean is
+        # directly comparable to the incumbent's — if it wins, the next
+        # Monitor.best() promotes it.  The COST MODEL is deliberately NOT fed
+        # here: concurrent-mode cast hops time pool-worker contention, and
+        # folding them into cast_rate would corrupt the calibration that
+        # training keeps sequential-only.  The model still benefits through
+        # the monitor channel (sizes/shapes sharpen its size inputs).
+        self.monitor.record(sig, alt.key, res.seconds,
+                            cast_bytes=res.cast_bytes, usage=usage,
+                            sizes=res.size_obs, shapes=res.shape_obs)
+        return alt.key
 
     # -- public API ----------------------------------------------------------
     def execute(self, query: PolyOp, mode: str = "auto") -> Report:
@@ -383,6 +495,7 @@ class BigDAWG:
                                self.catalog, concurrent=True,
                                cost_model=self.cost_model)
             self.monitor.record(sig, plan_key, res.seconds,
-                                cast_bytes=res.cast_bytes, sizes=res.size_obs)
+                                cast_bytes=res.cast_bytes, sizes=res.size_obs,
+                                shapes=res.shape_obs)
             done += 1
         return done

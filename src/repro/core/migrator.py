@@ -5,10 +5,18 @@ bandwidth per (src, dst) data-model pair.
 
 Given a cost model, the migrator follows ``cast_path`` — the cheapest route
 over the calibrated cast graph, which may be multi-hop (coo->dense->columnar
-when the direct pair is slow).  Every hop is timed and reported separately,
-so the model keeps learning true per-pair bandwidths even on detours."""
+when the direct pair is slow), with every hop sized from the format the data
+is actually in at that hop (a coo->dense hop densifies the payload).  Every
+hop is timed and reported separately, so the model keeps learning true
+per-pair bandwidths even on detours.
+
+One Migrator instance is shared by all of a plan's nodes; in the executor's
+thread-pooled concurrent mode several host workers cast through it at once,
+so the byte/cast accounting is guarded by a lock (the casts themselves run
+outside it and genuinely overlap)."""
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Tuple
@@ -24,24 +32,28 @@ class Migrator:
     # (src_kind, dst_kind, bytes, seconds) per executed cast hop
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
     cost_model: Optional[Any] = None     # enables calibrated multi-hop routes
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False,
+                                  compare=False)
 
     def to_engine(self, obj, engine_name: str):
         eng = ENGINES[engine_name]
         if obj.kind == eng.kind:
             return obj
         path = castmod.cast_path(obj.kind, eng.kind, obj.nbytes,
-                                 self.cost_model)
+                                 self.cost_model, obj=obj)
         for dst_kind in path[1:]:
             src_kind, nbytes = obj.kind, obj.nbytes
-            self.bytes_moved += nbytes
-            self.n_casts += 1
             t0 = time.perf_counter()
             obj = castmod.cast_step(obj, dst_kind)
-            self.events.append((src_kind, dst_kind, float(nbytes),
-                                time.perf_counter() - t0))
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self.bytes_moved += nbytes
+                self.n_casts += 1
+                self.events.append((src_kind, dst_kind, float(nbytes), dt))
         return obj
 
     def reset(self):
-        self.bytes_moved = 0.0
-        self.n_casts = 0
-        self.events.clear()
+        with self._lock:
+            self.bytes_moved = 0.0
+            self.n_casts = 0
+            self.events.clear()

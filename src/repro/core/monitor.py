@@ -5,34 +5,52 @@ snapshot against the recorded one; large drift triggers retraining advice
 (paper: "the optimizer may ... recommend that the user rerun the query under
 the training phase under the current usage").
 
-Beyond per-plan timings, the monitor stores *measured intermediate sizes*:
-the executor reports each node's actual logical output bytes (keyed by
-post-order position, which is stable across structurally-identical query
-rebuilds — the same property plan keys rely on), and ``measured_sizes``
-hands them back to the planner so data-dependent ops (select, join,
-distinct) are sized from observation instead of shape rules.
+Beyond per-plan timings, the monitor stores *measured intermediate sizes*
+AND *measured dense-equivalent shapes*: the executor reports each node's
+actual logical output bytes and output shape (keyed by post-order position,
+which is stable across structurally-identical query rebuilds — the same
+property plan keys rely on), and ``measured_sizes`` / ``measured_shapes``
+hand them back to the planner so data-dependent ops (select, join,
+distinct) are sized from observation instead of shape rules, and downstream
+shape-driven estimates (matmul, transpose) build on observed geometry.
+
+**History decay.**  All running means (per-plan seconds and cast bytes,
+per-position sizes) are *exponentially decayed*: each new sample enters with
+weight ``alpha = max(1 / (n + 1), decay)``, so the first few samples behave
+exactly like a cumulative mean and, once ``n + 1 > 1 / decay``, the mean
+becomes an EMA whose newest-sample weight floors at ``decay``.  A workload
+shift (the same signature suddenly selecting 10x the rows, or a plan's
+runtime regressing) therefore moves the mean within ~``1/decay`` runs
+instead of being diluted by an unbounded tail of stale samples.  The knob is
+``Monitor(path, decay=...)`` (default ``DECAY = 0.2``, i.e. full cumulative
+averaging through the first 5 samples, then a 5-run effective window);
+``decay=0.0`` restores pure cumulative means.
 
 Persistence: one JSON file (``Monitor(path)``), written atomically through
 ``ioutil.atomic_json_dump`` — the blob is dumped to a same-directory temp
 file and moved into place with ``os.replace``, so a crash mid-save can never
 truncate or corrupt the DB (the previous version survives intact).  Format
-(version 2; version-1 files, a bare ``{sig: {plan_key: stats}}`` mapping,
-still load)::
+(version 3 adds ``shapes``; version-2 files and version-1 files — a bare
+``{sig: {plan_key: stats}}`` mapping — still load)::
 
-    {"format": 2,
-     "plans": {sig: {plan_key: PlanStats-dict}},     # timings + usage
-     "sizes": {sig: {post_order_pos: [mean_bytes, n_samples]}}}
+    {"format": 3,
+     "plans":  {sig: {plan_key: PlanStats-dict}},    # timings + usage
+     "sizes":  {sig: {post_order_pos: [mean_bytes, n_samples]}},
+     "shapes": {sig: {post_order_pos: [dim, ...]}}}  # last observed shape
 
 Worked example (round-trips through one file)::
 
     >>> m = Monitor("/tmp/demo.monitor.json")
-    >>> m.record("s1", "0:dense_array", 0.02, sizes={0: 4096.0})
+    >>> m.record("s1", "0:dense_array", 0.02, sizes={0: 4096.0},
+    ...          shapes={0: (32, 32)})
     >>> m.save()                              # atomic write
     >>> m2 = Monitor("/tmp/demo.monitor.json")    # fresh process: warm start
     >>> m2.best("s1")[0]
     '0:dense_array'
     >>> m2.measured_sizes("s1")
     {0: 4096.0}
+    >>> m2.measured_shapes("s1")
+    {0: (32, 32)}
 """
 from __future__ import annotations
 
@@ -40,11 +58,18 @@ import os
 import resource
 import time
 from dataclasses import dataclass, field, asdict
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 
 from repro.core.ioutil import atomic_json_dump, load_json
+
+
+def _ema_alpha(n: int, decay: float) -> float:
+    """Weight of the newest sample: cumulative-mean behavior for the first
+    ``1/decay`` samples, then an EMA floored at ``decay`` (see module
+    docstring)."""
+    return max(1.0 / (n + 1), decay)
 
 
 @dataclass
@@ -57,11 +82,13 @@ class PlanStats:
     extra: Dict[str, float] = field(default_factory=dict)
 
     def record(self, seconds: float, usage: Dict[str, float],
-               cast_bytes: float = 0.0, extra: Optional[Dict] = None):
-        self.mean_seconds = (self.mean_seconds * self.n + seconds) / (self.n + 1)
-        # running mean, like mean_seconds — a single light run must not
-        # overwrite the history (cast traffic can vary with catalog state)
-        self.cast_bytes = (self.cast_bytes * self.n + cast_bytes) / (self.n + 1)
+               cast_bytes: float = 0.0, extra: Optional[Dict] = None,
+               decay: float = 0.0):
+        a = _ema_alpha(self.n, decay)
+        self.mean_seconds = (1.0 - a) * self.mean_seconds + a * seconds
+        # decayed like mean_seconds — a single light run must not overwrite
+        # the history (cast traffic can vary with catalog state)
+        self.cast_bytes = (1.0 - a) * self.cast_bytes + a * cast_bytes
         self.n += 1
         self.last_seconds = seconds
         self.usage = dict(usage)
@@ -89,16 +116,25 @@ def usage_drift(a: Dict[str, float], b: Dict[str, float]) -> float:
 
 
 class Monitor:
-    """signature -> {plan_key: PlanStats} (+ measured sizes); JSON-persistent."""
+    """signature -> {plan_key: PlanStats} (+ measured sizes/shapes);
+    JSON-persistent, with exponentially-decayed means (see module
+    docstring)."""
 
     DRIFT_THRESHOLD = 0.5
+    DECAY = 0.2           # newest-sample floor weight for all running means
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None,
+                 decay: Optional[float] = None):
         self.path = path
+        self.decay = self.DECAY if decay is None else float(decay)
         self.db: Dict[str, Dict[str, PlanStats]] = {}
         # sig -> {post-order position: [mean logical bytes, n]} — actual
         # intermediate sizes, fed back into estimate_sizes on re-plans
         self.sizes: Dict[str, Dict[int, list]] = {}
+        # sig -> {post-order position: (dim, ...)} — last observed
+        # dense-equivalent shapes (shapes are discrete: the newest
+        # observation replaces, it is not averaged)
+        self.shapes: Dict[str, Dict[int, Tuple[int, ...]]] = {}
         self.background_queue: list = []     # plans to re-explore when idle
         if path and os.path.exists(path):
             self.load(path)
@@ -107,20 +143,33 @@ class Monitor:
     def record(self, sig: str, plan_key: str, seconds: float,
                cast_bytes: float = 0.0, extra: Optional[Dict] = None,
                usage: Optional[Dict[str, float]] = None,
-               sizes: Optional[Dict[int, float]] = None):
+               sizes: Optional[Dict[int, float]] = None,
+               shapes: Optional[Dict[int, Tuple[int, ...]]] = None):
         entry = self.db.setdefault(sig, {}).setdefault(plan_key, PlanStats())
-        entry.record(seconds, usage or usage_snapshot(), cast_bytes, extra)
+        entry.record(seconds, usage or usage_snapshot(), cast_bytes, extra,
+                     decay=self.decay)
         if sizes:
             store = self.sizes.setdefault(sig, {})
             for pos, nbytes in sizes.items():
                 m = store.setdefault(int(pos), [0.0, 0])
-                m[0] = (m[0] * m[1] + float(nbytes)) / (m[1] + 1)
+                a = _ema_alpha(m[1], self.decay)
+                m[0] = (1.0 - a) * m[0] + a * float(nbytes)
                 m[1] += 1
+        if shapes:
+            store_s = self.shapes.setdefault(sig, {})
+            for pos, shp in shapes.items():
+                store_s[int(pos)] = tuple(int(d) for d in shp)
 
     def measured_sizes(self, sig: str) -> Dict[int, float]:
-        """Post-order position -> mean measured logical output bytes (empty
-        dict when the signature has never been executed)."""
+        """Post-order position -> decayed-mean measured logical output bytes
+        (empty dict when the signature has never been executed)."""
         return {pos: m[0] for pos, m in self.sizes.get(sig, {}).items()}
+
+    def measured_shapes(self, sig: str) -> Dict[int, Tuple[int, ...]]:
+        """Post-order position -> last observed dense-equivalent output
+        shape (only positions whose container format carries a cheap shape —
+        dense/coo/stream; columnar outputs are absent)."""
+        return dict(self.shapes.get(sig, {}))
 
     # -- production-phase matching ------------------------------------------
     def best(self, sig: str, usage: Optional[Dict[str, float]] = None):
@@ -147,22 +196,28 @@ class Monitor:
         if not path:
             return
         blob = {
-            "format": 2,
+            "format": 3,
             "plans": {sig: {pk: asdict(st) for pk, st in plans.items()}
                       for sig, plans in self.db.items()},
             "sizes": {sig: {str(pos): list(m) for pos, m in store.items()}
                       for sig, store in self.sizes.items()},
+            "shapes": {sig: {str(pos): list(s) for pos, s in store.items()}
+                       for sig, store in self.shapes.items()},
         }
         atomic_json_dump(path, blob)
 
     def load(self, path: str):
         blob = load_json(path)
-        if isinstance(blob, dict) and "plans" in blob:      # format 2
+        if isinstance(blob, dict) and "plans" in blob:      # format >= 2
             plans, sizes = blob["plans"], blob.get("sizes", {})
+            shapes = blob.get("shapes", {})                 # format >= 3
         else:                       # format 1: bare {sig: {plan_key: stats}}
-            plans, sizes = blob, {}
+            plans, sizes, shapes = blob, {}, {}
         self.db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
                    for sig, pls in plans.items()}
         self.sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
                             for pos, m in store.items()}
                       for sig, store in sizes.items()}
+        self.shapes = {sig: {int(pos): tuple(int(d) for d in s)
+                             for pos, s in store.items()}
+                       for sig, store in shapes.items()}

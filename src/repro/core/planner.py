@@ -20,7 +20,9 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.costmodel import CostModel, container_elems
+from repro.core.costmodel import (CostModel, container_elems,
+                                  container_kind_nbytes,
+                                  kind_nbytes_from_logical)
 from repro.core.islands import ISLANDS
 from repro.core.engines import ENGINES
 from repro.core.ops import PolyOp, Ref
@@ -117,17 +119,27 @@ def _ref_size(ref: Ref, catalog) -> Tuple[float, Optional[Tuple[int, ...]]]:
     return 4096.0, None                   # unknown object: assume a small page
 
 
-def estimate_sizes(query: PolyOp, catalog=None,
-                   measured: Optional[Dict[int, float]] = None
-                   ) -> Dict[int, float]:
-    """uid -> predicted output bytes, propagated bottom-up with per-op rules
-    (shape-aware where the catalog gives real shapes).
+def estimate_sizes_shapes(query: PolyOp, catalog=None,
+                          measured: Optional[Dict[int, float]] = None,
+                          measured_shapes: Optional[Dict[int, Tuple[int, ...]]]
+                          = None
+                          ) -> Tuple[Dict[int, float],
+                                     Dict[int, Optional[Tuple[int, ...]]]]:
+    """(uid -> predicted output bytes, uid -> predicted output shape),
+    propagated bottom-up with per-op rules (shape-aware where the catalog
+    gives real shapes).
 
     ``measured`` — actual logical output bytes per post-order position, from
-    ``Monitor.measured_sizes`` — overrides the shape rule for any node it
+    ``Monitor.measured_sizes`` — overrides the bytes rule for any node it
     covers; downstream propagation then builds on the observed value.  This
     is the size-feedback half of the §III-C monitor loop: ops whose output is
-    data-dependent (select, join, distinct) get real sizes on re-plans."""
+    data-dependent (select, join, distinct) get real sizes on re-plans.
+
+    ``measured_shapes`` — actual dense-equivalent output shapes per
+    post-order position, from ``Monitor.measured_shapes`` — overrides the
+    propagated shape the same way, so downstream shape-driven rules (matmul,
+    transpose, bin_hist) build on observed geometry, not just observed
+    bytes."""
     nbytes: Dict[int, float] = {}
     shapes: Dict[int, Optional[Tuple[int, ...]]] = {}
 
@@ -172,10 +184,29 @@ def estimate_sizes(query: PolyOp, catalog=None,
         # output ~ input size (the max-input default)
 
         if measured is not None and pos in measured:
-            out_b = measured[pos]        # observation beats any shape rule
+            out_b = measured[pos]        # observation beats any bytes rule
+        if measured_shapes is not None and pos in measured_shapes:
+            out_s = tuple(measured_shapes[pos])   # ... and any shape rule
         nbytes[node.uid] = max(out_b, 4.0)
         shapes[node.uid] = out_s
-    return nbytes
+    return nbytes, shapes
+
+
+def estimate_sizes(query: PolyOp, catalog=None,
+                   measured: Optional[Dict[int, float]] = None,
+                   measured_shapes: Optional[Dict[int, Tuple[int, ...]]] = None
+                   ) -> Dict[int, float]:
+    """uid -> predicted output bytes (see ``estimate_sizes_shapes``, which
+    also returns the propagated shapes the cast-edge sizing uses)."""
+    return estimate_sizes_shapes(query, catalog, measured, measured_shapes)[0]
+
+
+def _edge_kind_nbytes(logical_bytes: float,
+                      shape: Optional[Tuple[int, ...]]) -> Dict[str, float]:
+    """Per-kind physical bytes of a node-output payload crossing a cast edge
+    (the planner-side analogue of ``container_kind_nbytes`` for objects that
+    do not exist yet)."""
+    return kind_nbytes_from_logical(logical_bytes, shape)
 
 
 def _work_elems(node: PolyOp, sizes: Dict[int, float], catalog) -> float:
@@ -204,19 +235,25 @@ class PlanContainer:
     positions: List[int]                       # post-order indices
     nodes: List[PolyOp]
     candidates: Tuple[str, ...]
-    children: List[Tuple[int, float]] = field(default_factory=list)
-    # (child container index, predicted bytes over that cast edge)
+    children: List[Tuple[int, float, Optional[Tuple[int, ...]]]] = \
+        field(default_factory=list)
+    # (child container index, predicted bytes over that cast edge, predicted
+    #  dense-equivalent shape of the crossing payload — sizes the cast's
+    #  per-format hops)
 
 
 def plan_containers(query: PolyOp, catalog=None,
-                    sizes: Optional[Dict[int, float]] = None
-                    ) -> List[PlanContainer]:
+                    sizes: Optional[Dict[int, float]] = None,
+                    shapes: Optional[Dict[int, Optional[Tuple[int, ...]]]]
+                    = None) -> List[PlanContainer]:
     """Containers over the query's TREE UNFOLDING: ownership is tracked per
     post-order *occurrence*, not per node uid, so shared subtrees (which the
     executor and ``plan_cost`` both account once per occurrence) contract to
     a tree of containers — no cycles, no double-visited children.  The owner
     of position ``p`` is the container whose ``positions`` include ``p``."""
-    sizes = sizes if sizes is not None else estimate_sizes(query, catalog)
+    if sizes is None:
+        sizes, shapes = estimate_sizes_shapes(query, catalog)
+    shapes = shapes or {}
     containers: List[PlanContainer] = []
     owner_by_pos: Dict[int, int] = {}
     counter = itertools.count()
@@ -227,7 +264,7 @@ def plan_containers(query: PolyOp, catalog=None,
         pos = next(counter)                    # == post-order walk position
         cands = tuple(node_candidates(node))
         ci_own = None
-        edges: List[Tuple[int, float]] = []
+        edges: List[Tuple[int, float, Optional[Tuple[int, ...]]]] = []
         for p, inp in child_pos:
             ci = owner_by_pos[p]
             if ci_own is None and containers[ci].candidates == cands:
@@ -235,13 +272,13 @@ def plan_containers(query: PolyOp, catalog=None,
                 containers[ci].nodes.append(node)
                 ci_own = ci
             else:
-                edges.append((ci, sizes[inp.uid]))
+                edges.append((ci, sizes[inp.uid], shapes.get(inp.uid)))
         if ci_own is None:
             containers.append(PlanContainer([pos], [node], cands))
             ci_own = len(containers) - 1
         owner_by_pos[pos] = ci_own
         containers[ci_own].children.extend(
-            (d, b) for d, b in edges if d != ci_own)
+            (d, b, s) for d, b, s in edges if d != ci_own)
         return pos
 
     visit(query)
@@ -261,13 +298,15 @@ def _intra_cost(c: PlanContainer, engine: str, sizes, catalog,
                     and inp.name in catalog:
                 entry = catalog[inp.name]
                 src_kind = ENGINES[entry.engine].kind
-                cost += cm.cast_seconds(src_kind, kind, entry.obj.nbytes)
+                cost += cm.cast_seconds(src_kind, kind, entry.obj.nbytes,
+                                        container_kind_nbytes(entry.obj))
     return cost
 
 
 def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
              cost_model: Optional[CostModel] = None,
-             measured_sizes: Optional[Dict[int, float]] = None
+             measured_sizes: Optional[Dict[int, float]] = None,
+             measured_shapes: Optional[Dict[int, Tuple[int, ...]]] = None
              ) -> List[Tuple[float, Plan]]:
     """Exact k-best DP over the container tree: for every container and engine
     choice, combine the k cheapest child subplans through the cast edge cost.
@@ -275,12 +314,16 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
 
     Cast edges are costed by ``CostModel.cast_seconds``, which routes
     multi-hop over the calibrated cast graph — a coo->dense->columnar detour
-    beats a direct pair measured slow.  ``measured_sizes`` (from
-    ``Monitor.measured_sizes``) replaces shape-rule estimates with actual
-    intermediate sizes wherever the signature has execution history."""
+    beats a direct pair measured slow — with every hop sized from its
+    intermediate format.  ``measured_sizes`` / ``measured_shapes`` (from
+    ``Monitor.measured_sizes`` / ``measured_shapes``) replace rule-derived
+    estimates with actual intermediate sizes and shapes wherever the
+    signature has execution history."""
     cm = cost_model or default_cost_model()
-    sizes = estimate_sizes(query, catalog, measured=measured_sizes)
-    containers = plan_containers(query, catalog, sizes=sizes)
+    sizes, shapes = estimate_sizes_shapes(query, catalog,
+                                          measured=measured_sizes,
+                                          measured_shapes=measured_shapes)
+    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes)
     k = max(1, max_plans)
 
     pos_owner: Dict[int, int] = {}
@@ -300,7 +343,7 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
         if ci in seen_ci:
             return
         seen_ci.add(ci)
-        for di, _ in containers[ci].children:
+        for di, _, _ in containers[ci].children:
             _order(di)
         order.append(ci)
 
@@ -314,13 +357,14 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
         for e in c.candidates:
             kind = ENGINES[e].kind
             combos = [(_intra_cost(c, e, sizes, catalog, cm), {ci: e})]
-            for (di, edge_bytes) in c.children:
+            for (di, edge_bytes, edge_shape) in c.children:
+                edge_kn = _edge_kind_nbytes(edge_bytes, edge_shape)
                 merged: List[Tuple[float, Dict[int, str]]] = []
                 for cc, asg in combos:
                     for cd, asg_d in kbest[di]:
                         f = asg_d[di]
                         cast = cm.cast_seconds(ENGINES[f].kind, kind,
-                                               edge_bytes)
+                                               edge_bytes, edge_kn)
                         merged.append((cc + cd + cast, {**asg, **asg_d}))
                 merged.sort(key=lambda t: t[0])
                 combos = merged[:k]
@@ -346,7 +390,8 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
         if has_shared:
             amap = plan.engine_map(query)
             plan = Plan(tuple((p, amap[nodes[p].uid]) for p in range(n_pos)))
-            cost = plan_cost(query, plan, catalog, cm, sizes=sizes)
+            cost = plan_cost(query, plan, catalog, cm, sizes=sizes,
+                             shapes=shapes)
         if plan.key not in seen:
             seen.add(plan.key)
             out.append((cost, plan))
@@ -356,13 +401,16 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
 
 def exhaustive_plans(query: PolyOp, catalog=None,
                      cost_model: Optional[CostModel] = None,
-                     measured_sizes: Optional[Dict[int, float]] = None
-                     ) -> List[Tuple[float, Plan]]:
+                     measured_sizes: Optional[Dict[int, float]] = None,
+                     measured_shapes: Optional[Dict[int, Tuple[int, ...]]]
+                     = None) -> List[Tuple[float, Plan]]:
     """Brute-force reference over the container assignment product, costed
     with the same model — the DP must agree with this on small DAGs."""
     cm = cost_model or default_cost_model()
-    sizes = estimate_sizes(query, catalog, measured=measured_sizes)
-    containers = plan_containers(query, catalog, sizes=sizes)
+    sizes, shapes = estimate_sizes_shapes(query, catalog,
+                                          measured=measured_sizes,
+                                          measured_shapes=measured_shapes)
+    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes)
     pos_owner = {p: ci for ci, c in enumerate(containers) for p in c.positions}
     nodes = query.nodes()
     out, seen = [], set()
@@ -375,20 +423,26 @@ def exhaustive_plans(query: PolyOp, catalog=None,
         if plan.key in seen:
             continue
         seen.add(plan.key)
-        out.append((plan_cost(query, plan, catalog, cm, sizes=sizes), plan))
+        out.append((plan_cost(query, plan, catalog, cm, sizes=sizes,
+                              shapes=shapes), plan))
     out.sort(key=lambda t: t[0])
     return out
 
 
 def plan_cost(query: PolyOp, plan: Plan, catalog=None,
               cost_model: Optional[CostModel] = None,
-              sizes: Optional[Dict[int, float]] = None) -> float:
+              sizes: Optional[Dict[int, float]] = None,
+              shapes: Optional[Dict[int, Optional[Tuple[int, ...]]]] = None
+              ) -> float:
     """Predicted seconds for an arbitrary assignment: per-node op seconds plus
-    cast seconds on every model-crossing edge (node-node and ref-node).
-    ``sizes`` (from ``estimate_sizes``) is plan-independent — pass it in when
-    costing many plans of one query."""
+    cast seconds on every model-crossing edge (node-node and ref-node), each
+    cast's hops sized from the format the payload is in at that hop.
+    ``sizes``/``shapes`` (from ``estimate_sizes_shapes``) are
+    plan-independent — pass them in when costing many plans of one query."""
     cm = cost_model or default_cost_model()
-    sizes = sizes if sizes is not None else estimate_sizes(query, catalog)
+    if sizes is None:
+        sizes, shapes = estimate_sizes_shapes(query, catalog)
+    shapes = shapes or {}
     amap = plan.engine_map(query)
     cost = 0.0
     for node in query.nodes():
@@ -398,22 +452,27 @@ def plan_cost(query: PolyOp, plan: Plan, catalog=None,
         for inp in node.inputs:
             if isinstance(inp, PolyOp):
                 src = ENGINES[amap[inp.uid]]
-                cost += cm.cast_seconds(src.kind, eng.kind, sizes[inp.uid])
+                cost += cm.cast_seconds(
+                    src.kind, eng.kind, sizes[inp.uid],
+                    _edge_kind_nbytes(sizes[inp.uid], shapes.get(inp.uid)))
             elif catalog is not None and inp.name in catalog:
                 entry = catalog[inp.name]
                 src_kind = ENGINES[entry.engine].kind
-                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes)
+                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes,
+                                        container_kind_nbytes(entry.obj))
     return cost
 
 
 def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16,
                     cost_model: Optional[CostModel] = None,
-                    measured_sizes: Optional[Dict[int, float]] = None
-                    ) -> List[Plan]:
+                    measured_sizes: Optional[Dict[int, float]] = None,
+                    measured_shapes: Optional[Dict[int, Tuple[int, ...]]]
+                    = None) -> List[Plan]:
     """Top-``max_plans`` candidate plans by predicted cost, from the k-best
     container DP (full assignment space, cheapest first)."""
     return [p for _, p in dp_plans(query, catalog, max_plans, cost_model,
-                                   measured_sizes=measured_sizes)]
+                                   measured_sizes=measured_sizes,
+                                   measured_shapes=measured_shapes)]
 
 
 def estimate_casts(query: PolyOp, plan: Plan, catalog=None,
@@ -421,7 +480,7 @@ def estimate_casts(query: PolyOp, plan: Plan, catalog=None,
     """Planner-side cast cost: predicted seconds of cast traffic a plan
     implies (model-crossing edges only, sized from the catalog)."""
     cm = cost_model or default_cost_model()
-    sizes = estimate_sizes(query, catalog)
+    sizes, shapes = estimate_sizes_shapes(query, catalog)
     amap = plan.engine_map(query)
     cost = 0.0
     for node in query.nodes():
@@ -429,9 +488,12 @@ def estimate_casts(query: PolyOp, plan: Plan, catalog=None,
         for inp in node.inputs:
             if isinstance(inp, PolyOp):
                 src = ENGINES[amap[inp.uid]]
-                cost += cm.cast_seconds(src.kind, eng.kind, sizes[inp.uid])
+                cost += cm.cast_seconds(
+                    src.kind, eng.kind, sizes[inp.uid],
+                    _edge_kind_nbytes(sizes[inp.uid], shapes.get(inp.uid)))
             elif catalog is not None and inp.name in catalog:
                 entry = catalog[inp.name]
                 src_kind = ENGINES[entry.engine].kind
-                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes)
+                cost += cm.cast_seconds(src_kind, eng.kind, entry.obj.nbytes,
+                                        container_kind_nbytes(entry.obj))
     return cost

@@ -11,13 +11,17 @@ picks the decode plan (tensorplan), and the monitor records per-step times.
 ``QueryServer`` — polystore query serving through the middleware's
 signature-keyed plan cache: the first request for a signature pays the
 training phase (plan enumeration + measured trials), every later request
-executes the cached plan with concurrent DAG dispatch and no re-enumeration.
+executes the cached plan with concurrent DAG dispatch (topological levels
+fanned out over the executor's host thread pool) and no re-enumeration.
 Because the middleware persists its plan cache, monitor DB and calibration
 beside each other (``persist()`` flushes all three), a restarted server
 pointed at the same paths starts *warm*: previously-trained signatures are
 served in production mode with zero plan enumerations.  The middleware's
-online re-planner still watches every run — ``stats["replans"]`` counts the
-times measured/predicted divergence forced a fresh (cheap) DP pass.
+adaptive loop still watches every run — ``stats["replans"]`` counts the
+times measured/predicted divergence forced a fresh (cheap) DP pass, and
+``stats["explorations"]`` counts the budgeted serves of a k-best DP
+runner-up plan (enable with ``BigDAWG(explore_budget=...)``) whose
+measurements keep the monitor's plan ranking honest.
 """
 from __future__ import annotations
 
@@ -150,7 +154,7 @@ class QueryServer:
     def __init__(self, bigdawg):
         self.bd = bigdawg
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
-                      "replans": 0, "seconds": 0.0}
+                      "replans": 0, "explorations": 0, "seconds": 0.0}
 
     def warm(self, queries) -> int:
         """Admission/warmup: train every query shape once so production
@@ -180,4 +184,6 @@ class QueryServer:
             self.stats["cache_hits"] += 1
         if rep.replanned:
             self.stats["replans"] += 1
+        if rep.explored:
+            self.stats["explorations"] += 1
         return rep

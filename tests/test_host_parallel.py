@@ -1,0 +1,361 @@
+"""Host-parallel executor + k-best alternate exploration (ISSUE 3).
+
+Covers the PR's tentpole behaviors: the thread-pooled concurrent mode must
+be a drop-in for sequential execution (same values, worker exceptions
+propagate, ``host_workers=1`` falls back inline), the k-best DP's runner-ups
+must ride the plan cache as ``CachedPlan.alternates`` and be executed by the
+budgeted exploration path (measurements recorded, winner re-selected when an
+alternate proves faster), multi-hop casts must be sized per hop from the
+intermediate format, measured SHAPES must feed downstream estimates, and
+monitor history must decay so workload shifts show up in the means.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BigDAWG, CostModel, DenseTensor, Monitor, array,
+                        estimate_sizes_shapes, execute_plan, relational)
+from repro.core.engines import ENGINES, Engine
+from repro.core.middleware import CachedPlan
+from repro.core.monitor import PlanStats, _ema_alpha
+from repro.core.planner import Plan
+from repro.runtime import QueryServer
+
+
+def _bd(tmp_path=None, n=32, t=64, **kw):
+    monitor = Monitor(str(tmp_path / "monitor.json")) if tmp_path else None
+    bd = BigDAWG(monitor=monitor, train_plans=4, **kw)
+    rng = np.random.default_rng(0)
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(n, t)).astype(np.float32))), engine="dense_array")
+    return bd
+
+
+def _wide():
+    """10-node tree whose first topological level holds two independent
+    selects — the shape the host pool must overlap."""
+    def branch():
+        s = relational.select("waves", column="value", lo=0.0)
+        h = array.haar(s, levels=2)
+        return array.tfidf(array.bin_hist(h, nbins=8, levels=2))
+    return array.matmul(branch(), array.transpose(branch()))
+
+
+def _all_dense(q):
+    return Plan(tuple((i, "dense_array") for i in range(len(q.nodes()))))
+
+
+# ---------------------------------------------------------------------------
+# (1) thread-pooled concurrent executor
+# ---------------------------------------------------------------------------
+
+def test_threaded_concurrent_matches_sequential():
+    bd = _bd()
+    q = _wide()
+    plan = _all_dense(q)
+    seq = execute_plan(q, plan, bd.catalog)
+    thr = execute_plan(q, plan, bd.catalog, concurrent=True, host_workers=4)
+    assert thr.levels >= 4
+    np.testing.assert_allclose(np.asarray(seq.value.data),
+                               np.asarray(thr.value.data),
+                               rtol=1e-5, atol=1e-6)
+    # identical migration accounting: the shared Migrator's locked counters
+    # must not lose updates across workers
+    assert thr.n_casts == seq.n_casts
+    assert thr.cast_bytes == pytest.approx(seq.cast_bytes)
+    # size/shape feedback is mode-independent
+    assert thr.size_obs == pytest.approx(seq.size_obs)
+    assert thr.shape_obs == seq.shape_obs
+    assert seq.node_obs and not thr.node_obs     # cost-model obs: seq only
+
+
+def test_single_thread_fallback_matches():
+    bd = _bd()
+    q = _wide()
+    plan = _all_dense(q)
+    inline = execute_plan(q, plan, bd.catalog, concurrent=True,
+                          host_workers=1)
+    thr = execute_plan(q, plan, bd.catalog, concurrent=True, host_workers=4)
+    assert inline.levels == thr.levels
+    np.testing.assert_allclose(np.asarray(inline.value.data),
+                               np.asarray(thr.value.data), rtol=1e-6)
+
+
+def test_worker_exception_propagates(monkeypatch):
+    bd = _bd()
+    q = _wide()
+    plan = _all_dense(q)
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding(attrs, *inputs):
+        raise Boom("engine op failed in a worker")
+
+    broken = Engine("dense_array", "dense",
+                    dict(ENGINES["dense_array"].ops, select=exploding))
+    monkeypatch.setitem(ENGINES, "dense_array", broken)
+    with pytest.raises(Boom):
+        execute_plan(q, plan, bd.catalog, concurrent=True, host_workers=4)
+
+
+def test_per_node_seconds_recorded_in_concurrent_mode():
+    bd = _bd()
+    q = _wide()
+    res = execute_plan(q, _all_dense(q), bd.catalog, concurrent=True,
+                       host_workers=4)
+    assert len(res.per_node_seconds) == len({n.uid for n in q.nodes()})
+    assert all(v >= 0.0 for v in res.per_node_seconds.values())
+
+
+# ---------------------------------------------------------------------------
+# (2) per-hop cast sizing on multi-hop routes
+# ---------------------------------------------------------------------------
+
+def test_multi_hop_route_sizes_each_hop_from_intermediate_format():
+    cm = CostModel()
+    cm.observe_cast("coo", "columnar", 1e3, 1.0)     # awful direct pair
+    cm.observe_cast("coo", "dense", 1e6, 0.001)      # 1e9 B/s
+    cm.observe_cast("dense", "columnar", 1e6, 0.001)  # 1e9 B/s
+    # a very sparse payload: 1e4 logical bytes of triples, but densified it
+    # is a (1000, 1000) float32 plane = 4e6 bytes
+    kind_nbytes = {"coo": 3e4, "dense": 4e6, "columnar": 3e4}
+    flat, path = cm.cast_route("coo", "columnar", 3e4)
+    sized, path2 = cm.cast_route("coo", "columnar", 3e4, kind_nbytes)
+    assert path == path2 == ["coo", "dense", "columnar"]
+    # the flat estimate charges the dense->columnar hop for 3e4 bytes; the
+    # per-hop estimate charges the densified 4e6 — visibly more expensive
+    assert sized > flat
+    assert sized == pytest.approx(
+        cm._edge_seconds("coo", "dense", 3e4)
+        + cm._edge_seconds("dense", "columnar", 4e6))
+
+
+def test_migrator_routes_with_densification_cost():
+    """A sparse COO whose densified plane is huge must now prefer the direct
+    coo->columnar pair over a detour through dense, even when the detour's
+    per-byte bandwidths look slightly better."""
+    cm = CostModel()
+    cm.observe_cast("coo", "columnar", 1e6, 0.01)     # 1e8 B/s direct
+    cm.observe_cast("coo", "dense", 1e6, 0.004)       # 2.5e8 B/s
+    cm.observe_cast("dense", "columnar", 1e6, 0.004)  # 2.5e8 B/s
+    # payload: sparse triples in a (4000, 4000) plane -> densify = 64e6 bytes
+    kind_nbytes = {"coo": 3.6e6, "dense": 64e6, "columnar": 3.6e6}
+    _, path = cm.cast_route("coo", "columnar", 3.6e6, kind_nbytes)
+    assert path == ["coo", "columnar"]
+    # without per-hop sizing the detour would have (wrongly) won
+    _, flat_path = cm.cast_route("coo", "columnar", 3.6e6)
+    assert flat_path == ["coo", "dense", "columnar"]
+
+
+# ---------------------------------------------------------------------------
+# (3) measured-shape feedback
+# ---------------------------------------------------------------------------
+
+def test_executor_reports_shape_obs():
+    bd = _bd(n=32, t=64)
+    q = array.haar(relational.select("waves", column="value", lo=0.5),
+                   levels=2)
+    res = execute_plan(q, _all_dense(q), bd.catalog)
+    # both nodes run dense: every position carries a dense shape
+    assert res.shape_obs[0] == (32, 64)
+    assert res.shape_obs[1] == (32, 64)
+
+
+def test_measured_shapes_feed_downstream_matmul_estimate():
+    q = array.matmul(array.tfidf("unknown_a"), array.tfidf("unknown_b"))
+    # without catalog entries the shape rules know nothing: matmul output
+    # falls back to max-input bytes
+    static_sizes, static_shapes = estimate_sizes_shapes(q, None)
+    assert static_shapes[q.uid] is None
+    # measured shapes for the two tfidf outputs (post-order 0, 1): now the
+    # matmul rule can predict its true (128, 16) output
+    measured_shapes = {0: (128, 64), 1: (64, 16)}
+    sizes, shapes = estimate_sizes_shapes(q, None,
+                                          measured_shapes=measured_shapes)
+    assert shapes[q.uid] == (128, 16)
+    assert sizes[q.uid] == 4.0 * 128 * 16
+
+
+def test_monitor_persists_shapes(tmp_path):
+    p = tmp_path / "monitor.json"
+    m = Monitor(str(p))
+    m.record("sig", "0:dense_array", 0.1, sizes={0: 64.0},
+             shapes={0: (4, 4)})
+    m.save()
+    m2 = Monitor(str(p))
+    assert m2.measured_shapes("sig") == {0: (4, 4)}
+    # newest shape replaces (no averaging of discrete geometry)
+    m2.record("sig", "0:dense_array", 0.1, shapes={0: (8, 2)})
+    assert m2.measured_shapes("sig") == {0: (8, 2)}
+
+
+def test_trained_signature_stores_shapes():
+    bd = _bd()
+    q = _wide()
+    rep = bd.execute(q, mode="training")
+    shapes = bd.monitor.measured_shapes(rep.sig)
+    assert shapes            # dense placements report real shapes
+    assert all(isinstance(s, tuple) for s in shapes.values())
+
+
+# ---------------------------------------------------------------------------
+# (4) monitor history decay
+# ---------------------------------------------------------------------------
+
+def test_ema_alpha_warmup_then_floor():
+    assert _ema_alpha(0, 0.2) == 1.0                 # first sample: adopt
+    assert _ema_alpha(1, 0.2) == 0.5                 # cumulative mean ...
+    assert _ema_alpha(4, 0.2) == pytest.approx(0.2)  # ... until 1/decay
+    assert _ema_alpha(100, 0.2) == pytest.approx(0.2)   # then EMA floor
+    assert _ema_alpha(100, 0.0) == pytest.approx(1 / 101)   # decay off
+
+
+def test_decay_tracks_workload_shift_cumulative_does_not():
+    fresh, stale = PlanStats(), PlanStats()
+    for _ in range(50):
+        fresh.record(1.0, {}, decay=0.2)
+        stale.record(1.0, {}, decay=0.0)             # pure cumulative
+    for _ in range(5):                               # 10x regression
+        fresh.record(10.0, {}, decay=0.2)
+        stale.record(10.0, {}, decay=0.0)
+    # decayed mean has moved most of the way to the new regime; the
+    # cumulative mean is still diluted by the 50 stale samples
+    assert fresh.mean_seconds > 6.0
+    assert stale.mean_seconds < 2.0
+
+
+def test_monitor_size_means_decay():
+    m = Monitor(decay=0.5)
+    m.record("sig", "0:dense_array", 0.1, sizes={0: 100.0})
+    for _ in range(4):
+        m.record("sig", "0:dense_array", 0.1, sizes={0: 1000.0})
+    # with a 0.5 floor the mean reaches ~944 after four shifted samples; a
+    # cumulative mean would sit at 820
+    assert m.measured_sizes("sig")[0] > 900.0
+
+
+# ---------------------------------------------------------------------------
+# (5) k-best alternates + budgeted exploration
+# ---------------------------------------------------------------------------
+
+def test_training_caches_dp_runner_ups_as_alternates():
+    bd = _bd()
+    q = _wide()
+    rep = bd.execute(q, mode="training")
+    entry = bd.plan_cache[rep.sig]
+    assert entry.alternates                          # runner-ups survived
+    assert len(entry.alternates) <= BigDAWG.MAX_ALTERNATES
+    keys = {p.key for p in entry.alternates}
+    assert entry.plan.key not in keys                # winner is not its own
+    n = len(q.nodes())                               # alternate
+    assert all(len(p.assignment) == n for p in entry.alternates)
+
+
+def test_alternates_roundtrip_through_plan_cache_file(tmp_path):
+    bd = _bd(tmp_path)
+    q = _wide()
+    rep = bd.execute(q, mode="training")
+    want = [p.key for p in bd.plan_cache[rep.sig].alternates]
+    assert want
+    bd.save_plan_cache()
+    bd2 = _bd(tmp_path)
+    entry = bd2.plan_cache[rep.sig]
+    assert entry.restored
+    assert [p.key for p in entry.alternates] == want
+
+
+def test_no_exploration_when_budget_zero():
+    bd = _bd()                                       # default budget: 0.0
+    q = _wide()
+    bd.execute(q, mode="training")
+    rep = bd.execute(q, mode="production")
+    assert not rep.explored
+    assert bd.explorations == 0
+
+
+def test_exploration_executes_true_alternate_within_budget():
+    bd = _bd(explore_budget=10.0)     # generous: explore on every serve
+    bd.replan_factor = float("inf")   # isolate exploration from replanning
+    q = _wide()
+    rep = bd.execute(q, mode="training")
+    entry = bd.plan_cache[rep.sig]
+    alt_keys = [p.key for p in entry.alternates]
+    before = set(bd.monitor.known_plans(rep.sig))
+    incumbent = entry.plan.key
+    rep2 = bd.execute(q, mode="production")
+    assert rep2.explored and rep2.explored_key in alt_keys
+    assert bd.explorations == 1
+    # the alternate's measurement landed in the monitor (n grew or plan is
+    # newly known) and exploration time is accounted
+    stats = bd.monitor.known_plans(rep.sig)[rep2.explored_key]
+    assert stats.n >= 1
+    assert bd.explore_seconds > 0.0
+    # the next serve explores again — from the current entry's pool, which
+    # may legitimately include the old incumbent if timing noise promoted
+    # the explored alternate in between — and never re-runs the served plan
+    rep3 = bd.execute(q, mode="production")
+    assert rep3.explored
+    assert rep3.explored_key in set(alt_keys) | {incumbent}
+    assert rep3.explored_key != rep3.plan_key
+    assert before <= set(bd.monitor.known_plans(rep.sig))
+
+
+def test_exploration_respects_budget_exhaustion():
+    bd = _bd(explore_budget=1e-9)     # one exploration allowed at most
+    bd.replan_factor = float("inf")
+    q = _wide()
+    bd.execute(q, mode="training")
+    bd.execute(q, mode="production")                 # may explore once
+    first = bd.explorations
+    for _ in range(3):
+        bd.execute(q, mode="production")
+    # with a vanishing budget, explore_seconds > budget x serve_seconds
+    # after the first trial: no further exploration
+    assert bd.explorations <= max(first, 1)
+
+
+def test_winning_alternate_is_promoted_on_next_serve():
+    bd = _bd(explore_budget=10.0)
+    bd.replan_factor = float("inf")
+    q = _wide()
+    rep = bd.execute(q, mode="training")
+    entry = bd.plan_cache[rep.sig]
+    alt = entry.alternates[0]
+    incumbent = entry.plan.key
+    # the alternate's measured history suddenly dominates the incumbent's
+    stats = bd.monitor.db[rep.sig].setdefault(alt.key, PlanStats())
+    stats.mean_seconds, stats.n = 1e-9, 5
+    rep2 = bd.execute(q, mode="production")
+    assert rep2.plan_key == alt.key                  # promoted
+    assert not rep2.cache_hit                        # entry was rebuilt
+    promoted = bd.plan_cache[rep.sig]
+    assert promoted.plan.key == alt.key
+    # the dethroned incumbent joined the alternate pool: exploration keeps
+    # challenging it, so a wrong promotion can be reversed
+    assert incumbent in {p.key for p in promoted.alternates}
+
+
+def test_query_server_counts_explorations(tmp_path):
+    bd = _bd(tmp_path, explore_budget=10.0)
+    bd.replan_factor = float("inf")
+    srv = QueryServer(bd)
+    srv.warm([_wide()])
+    srv.persist()
+    for _ in range(2):
+        srv.submit(_wide())
+    assert srv.stats["explorations"] == bd.explorations >= 1
+    # warm restart: the restored cache still carries the alternates, so a
+    # fresh server keeps exploring without retraining
+    bd2 = BigDAWG(monitor=Monitor(str(tmp_path / "monitor.json")),
+                  train_plans=4, explore_budget=10.0)
+    bd2.replan_factor = float("inf")
+    rng = np.random.default_rng(0)
+    bd2.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(32, 64)).astype(np.float32))), engine="dense_array")
+    srv2 = QueryServer(bd2)
+    rep = srv2.submit(_wide())
+    assert rep.mode == "production"
+    srv2.submit(_wide())
+    assert srv2.stats["trainings"] == 0
+    assert srv2.stats["explorations"] >= 1
