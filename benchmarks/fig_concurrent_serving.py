@@ -1,0 +1,184 @@
+"""Concurrent admission: requests/sec through ``QueryServer`` at 1/2/4
+client threads on mixed cold+warm signature traffic (ISSUE 4 tentpole).
+
+The serving stack admits requests from many threads at once: per-signature
+locking in the middleware (one training per cold signature, different
+signatures in parallel), a thread-safe monitor (batched record flushing)
+and cost model, and budgeted alternate exploration scheduled as background
+host-pool tasks — ZERO exploration time on the request path (the serve only
+schedules; ``explore_seconds_off_path`` in the JSON is accounted entirely
+by background workers).
+
+Workload: ``S`` distinct signatures of two families —
+
+  * join-heavy: ``select(join(jl_i, jr_i))`` over host-side numpy tables,
+    columnar-pinned end to end (host sort-merge joins release the GIL — the
+    work class where request threads genuinely overlap on a multi-core
+    host), and
+  * analytic: ``tfidf(haar(select(waves)))`` with real cross-engine plan
+    diversity, so training produces k-best alternates and the background
+    exploration path has something to try.
+
+Entries (all measured with exploration ENABLED, ``explore_budget=0.02``,
+budget clock re-anchored per round so no round inherits banked credit):
+
+  * ``warm_threadsK``        — all signatures pre-trained, R requests
+                               round-robin from K client threads
+                               (``rps_speedup_vs_1`` is the headline:
+                               expect >=1.3x at K=4 on a 2-core runner),
+  * ``mixed_cold_warm_threads4`` — half the signatures cold, 4 threads:
+                               the admission-under-stampede shape
+                               (``trainings`` must equal the cold count).
+
+Run: PYTHONPATH=src python benchmarks/fig_concurrent_serving.py [--fast]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (BigDAWG, ColumnarTable, DenseTensor, array,
+                        relational)
+from repro.core.executor import DEFAULT_HOST_WORKERS
+from repro.runtime import QueryServer
+
+N_JOIN = 3          # join-heavy signatures (host overlap carriers)
+N_ANALYTIC = 1      # analytic signatures (plan diversity -> exploration)
+N_SIGS = N_JOIN + N_ANALYTIC
+
+
+def make_bigdawg(join_rows: int, waves_shape=(48, 128)) -> BigDAWG:
+    """A middleware with join tables registered as host-side (numpy)
+    columnar containers — per-request join work is pure GIL-releasing host
+    numpy — plus one dense table for the analytic family."""
+    bd = BigDAWG(train_plans=4, train_repeats=1, explore_budget=0.02)
+    bd.replan_factor = float("inf")      # measure admission, not replanning
+    for i in range(N_JOIN):
+        for side_idx, side in enumerate(("jl", "jr")):
+            r = np.random.default_rng(1000 + 2 * i + side_idx)
+            keys = r.permutation(join_rows).astype(np.int32)
+            bd.register(f"{side}{i}", ColumnarTable(
+                {"i": keys,
+                 "value": r.normal(size=join_rows).astype(np.float32)}),
+                engine="columnar")
+    rng = np.random.default_rng(0)
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=waves_shape).astype(np.float32))),
+        engine="dense_array")
+    return bd
+
+
+def query(i: int):
+    if i < N_JOIN:      # columnar-pinned: join + a selective filter on top
+        return relational.select(
+            relational.join(f"jl{i}", f"jr{i}", left_on="i", right_on="i"),
+            column="l_value", lo=0.0)
+    return array.tfidf(array.haar(        # cross-engine candidates
+        relational.select("waves", column="value", lo=0.0), levels=2))
+
+
+def traffic(requests: int):
+    """7 join requests : 1 analytic — joins carry the host overlap, the
+    analytic keeps the cross-engine exploration path exercised."""
+    return [query(N_JOIN + (i // 8) % N_ANALYTIC) if i % 8 == 7
+            else query(i % N_JOIN) for i in range(requests)]
+
+
+def main(fast: bool = False):
+    fast = fast or "--fast" in sys.argv
+    join_rows = 60_000 if fast else 400_000
+    requests = 8 if fast else 24
+
+    report = {}
+
+    # -- warm phase: every signature pre-trained, exploration enabled -------
+    bd = make_bigdawg(join_rows)
+    srv = QueryServer(bd)
+    srv.warm([query(i) for i in range(N_SIGS)])
+    srv.submit_many(traffic(N_SIGS), workers=2)            # jit/pool warmup
+    bd.drain_explorations()
+
+    base_rps = None
+    rounds = 1 if fast else 2            # full mode: best-of-2 damps OS noise
+    for threads in (1, 2, 4):
+        best = None
+        for _ in range(rounds):
+            bd.drain_explorations()      # previous round's background work
+            # re-anchor the budget clock: cumulative accounting would let
+            # early rounds bank unspent exploration credit that the last
+            # round burns in a burst, skewing the thread-count comparison
+            bd.reset_exploration_budget()
+            served0, expl0 = bd.serve_seconds, bd.explore_seconds
+            out = srv.serve(traffic(requests), workers=threads)
+            bd.drain_explorations()      # this round's trials land
+            # per-round accounting, so the selected round's seconds fields
+            # all describe the same requests
+            out["serve_delta"] = bd.serve_seconds - served0
+            out["explore_delta"] = bd.explore_seconds - expl0
+            if best is None or out["rps"] > best["rps"]:
+                best = out
+        out = best
+        reps = out["reports"]
+        assert all(r.mode == "production" for r in reps)
+        rps = out["rps"]
+        if base_rps is None:
+            base_rps = rps
+        report[f"warm_threads{threads}"] = {
+            "threads": threads,
+            "rounds": rounds,
+            "requests": len(reps),
+            "seconds": round(out["seconds"], 6),
+            "rps": round(rps, 3),
+            "rps_speedup_vs_1": round(rps / base_rps, 3),
+            "trainings": 0,
+            "explorations": sum(1 for r in reps if r.explored),
+            # serve-path seconds vs background exploration seconds FOR THE
+            # REPORTED ROUND: the request path schedules trials but never
+            # executes them
+            "serve_seconds_on_path": round(out["serve_delta"], 6),
+            "explore_seconds_off_path": round(out["explore_delta"], 6),
+            "workers_host": DEFAULT_HOST_WORKERS,
+        }
+        e = report[f"warm_threads{threads}"]
+        print(f"# warm threads={threads} requests={e['requests']} "
+              f"rps={e['rps']:.2f} speedup={e['rps_speedup_vs_1']:.2f}x "
+              f"explore_off_path={e['explore_seconds_off_path']:.3f}s",
+              file=sys.stderr, flush=True)
+
+    # -- mixed cold+warm stampede at 4 threads -------------------------------
+    bd2 = make_bigdawg(join_rows)
+    srv2 = QueryServer(bd2)
+    srv2.warm([query(i) for i in range(N_SIGS // 2)])      # half warm
+    t0 = time.perf_counter()
+    reps = srv2.submit_many(traffic(requests), workers=4)
+    wall = time.perf_counter() - t0
+    bd2.drain_explorations()
+    trainings = sum(1 for r in reps if r.mode == "training")
+    assert trainings == N_SIGS - N_SIGS // 2, \
+        f"per-signature locking broke: {trainings} trainings"
+    report["mixed_cold_warm_threads4"] = {
+        "threads": 4,
+        "requests": len(reps),
+        "seconds": round(wall, 6),
+        "rps": round(len(reps) / max(wall, 1e-9), 3),
+        "rps_speedup_vs_1": 0.0,     # no 1-thread baseline for this phase
+        "trainings": trainings,
+        "explorations": sum(1 for r in reps if r.explored),
+        "serve_seconds_on_path": round(bd2.serve_seconds, 6),
+        "explore_seconds_off_path": round(bd2.explore_seconds, 6),
+        "workers_host": DEFAULT_HOST_WORKERS,
+    }
+    e = report["mixed_cold_warm_threads4"]
+    print(f"# mixed threads=4 requests={e['requests']} rps={e['rps']:.2f} "
+          f"trainings={e['trainings']}", file=sys.stderr, flush=True)
+
+    print(json.dumps(report, indent=1))
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -63,3 +63,14 @@ print(f"after warm restart: trainings={srv2.stats['trainings']} "
       f"explorations={srv2.stats['explorations']} "
       f"replans={srv2.stats['replans']}")
 print("result:", report.result.data.shape, report.result.data.dtype)
+
+# -- concurrent admission: the same traffic from 4 client threads ------------
+# submit_many drives the server's request pool; the middleware's
+# per-signature locking would train a cold signature exactly once even if
+# every thread raced it, and exploration trials run off-path on the host
+# pool (stats["seconds"] contains zero exploration time).
+out = srv2.serve([query() for _ in range(8)], workers=4)
+srv2.bd.drain_explorations()                     # let background trials land
+print(f"concurrent serve: {out['rps']:.1f} requests/sec from "
+      f"{out['workers']} threads "
+      f"(explorations so far: {srv2.stats['explorations']})")

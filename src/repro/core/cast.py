@@ -7,6 +7,15 @@ conversion; here the conversions are executed directly and the *cost model*
 (bytes moved / link bandwidth + conversion cost) feeds the planner.  Dynamic-
 shape conversions (dense->COO) run eagerly — on-device they would use
 static-capacity buffers.
+
+Casts INTO triple formats (columnar, coo) leave their output as **numpy**:
+these conversions are eager host work, and wrapping the result in
+``jnp.asarray`` would serialize concurrent host-pool workers on the XLA
+transfer lock for arrays the consuming op may keep on the host anyway
+(sort-merge join, the next cast hop).  The device transfer happens when a
+dense consumer actually needs it — ``columnar_to_dense``/``coo_to_dense``
+build device arrays, and long-lived catalog objects are homed explicitly
+via ``tables.device_ready`` at registration.
 """
 from __future__ import annotations
 
@@ -22,17 +31,17 @@ ICI_BYTES_PER_S = 50e9
 def dense_to_columnar(d: DenseTensor) -> ColumnarTable:
     a = np.asarray(d.data)
     if a.ndim == 1:
-        cols = {"i": jnp.arange(a.shape[0], dtype=jnp.int32),
-                "value": jnp.asarray(a)}
+        cols = {"i": np.arange(a.shape[0], dtype=np.int32),
+                "value": a}
     elif a.ndim == 2:
         n, t = a.shape
         ii, jj = np.meshgrid(np.arange(n), np.arange(t), indexing="ij")
-        cols = {"i": jnp.asarray(ii.ravel().astype(np.int32)),
-                "j": jnp.asarray(jj.ravel().astype(np.int32)),
-                "value": jnp.asarray(a.ravel())}
+        cols = {"i": ii.ravel().astype(np.int32),
+                "j": jj.ravel().astype(np.int32),
+                "value": a.ravel()}
     else:
         raise ValueError("columnar cast supports <=2D")
-    return ColumnarTable(cols)
+    return ColumnarTable(cols)     # numpy-eager (see module docstring)
 
 
 def columnar_to_dense(t: ColumnarTable, shape=None) -> DenseTensor:
@@ -61,9 +70,8 @@ def dense_to_coo(d: DenseTensor) -> COOMatrix:
     a = np.asarray(d.data)
     assert a.ndim == 2
     r, c = np.nonzero(a != d.fill)
-    return COOMatrix(jnp.asarray(r.astype(np.int32)),
-                     jnp.asarray(c.astype(np.int32)),
-                     jnp.asarray(a[r, c]), a.shape)
+    return COOMatrix(r.astype(np.int32), c.astype(np.int32),
+                     a[r, c], a.shape)     # numpy-eager
 
 
 def coo_to_dense(m: COOMatrix) -> DenseTensor:
@@ -84,7 +92,7 @@ def columnar_to_coo(t: ColumnarTable, shape=None) -> COOMatrix:
     if shape is None:
         shape = (int(r.max()) + 1 if r.size else 0,
                  int(c.max()) + 1 if c.size else 0)
-    return COOMatrix(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), shape)
+    return COOMatrix(r, c, v, shape)       # numpy-eager
 
 
 def stream_to_dense(s: StreamBuffer) -> DenseTensor:

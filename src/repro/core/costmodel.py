@@ -18,6 +18,19 @@ is sized from the format the data is in when that hop starts (pass
 following dense->columnar hop must be charged for the inflated dense bytes,
 not the original COO triple bytes.
 
+Beyond op and cast rates, the model learns the **host thread-dispatch
+overhead** (``observe_dispatch`` / ``dispatch_overhead_s``): the measured
+cost of a submit→result round trip through the executor's host pool on THIS
+machine.  The executor's auto-threading gate compares each task's predicted
+seconds against a multiple of this overhead — a task must dwarf the pool
+round trip to be worth dispatching — replacing the old static byte
+threshold (see ``executor.execute_plan``).
+
+The model is **thread-safe**: every observation and every prediction takes
+an internal lock (concurrent production serves, training runs, and
+background exploration all read and write it), and ``save`` snapshots under
+the same lock.
+
 Persistence: the model is saved as JSON *beside the monitor DB*
 (``default_calibration_path`` maps ``monitor.json`` -> ``monitor.calib.json``)
 through ``ioutil.atomic_json_dump`` — a same-directory temp file moved into
@@ -26,7 +39,8 @@ The blob stores each running mean with its sample count::
 
     {"calibrated": true,
      "op_rate":   {"dense_array": {"matmul": [5.2e8, 3]}},   # elems/s, n
-     "cast_rate": {"dense>columnar": [1.8e8, 2]}}            # bytes/s, n
+     "cast_rate": {"dense>columnar": [1.8e8, 2]},            # bytes/s, n
+     "dispatch_overhead": [2.1e-4, 5]}                       # s/round-trip, n
 
 Worked example (everything round-trips through one file)::
 
@@ -47,6 +61,7 @@ from __future__ import annotations
 
 import itertools
 import os
+import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -66,6 +81,8 @@ _DEFAULT_CAST_BYTES_PER_S = 2e8     # host-side format conversion, not ICI
 # fixed per-dispatch overhead (python + jax dispatch), seconds
 _OP_OVERHEAD_S = 5e-5
 _CAST_OVERHEAD_S = 1e-4
+# a-priori host-pool submit->result round-trip cost, before any measurement
+_DEFAULT_DISPATCH_OVERHEAD_S = 2e-4
 
 
 @dataclass
@@ -226,7 +243,13 @@ class CostModel:
         self.op_rate: Dict[str, Dict[str, _Mean]] = {}
         # "src>dst" (kinds) -> bytes/s
         self.cast_rate: Dict[str, _Mean] = {}
+        # measured host-pool submit->result round trip on this machine — the
+        # executor's predicted-seconds auto-threading gate compares against it
+        self.dispatch_overhead = _Mean()
         self.calibrated = False
+        # guards every rate dict: observations arrive from concurrent serves
+        # and background exploration while other threads predict
+        self._lock = threading.RLock()
         if path and os.path.exists(path):
             self.load(path)
 
@@ -235,29 +258,40 @@ class CostModel:
         """Predicted seconds for `op` on `engine` over `elems` input elements."""
         from repro.core.engines import ENGINES
         rate = None
-        per_op = self.op_rate.get(engine)
-        if per_op:
-            m = per_op.get(op)
-            if m and m.n:
-                rate = m.mean
-            else:                       # engine-level mean over observed ops
-                obs = [x.mean for x in per_op.values() if x.n]
-                if obs:
-                    rate = sum(obs) / len(obs)
+        with self._lock:
+            per_op = self.op_rate.get(engine)
+            if per_op:
+                m = per_op.get(op)
+                if m and m.n:
+                    rate = m.mean
+                else:                   # engine-level mean over observed ops
+                    obs = [x.mean for x in per_op.values() if x.n]
+                    if obs:
+                        rate = sum(obs) / len(obs)
         if rate is None:
             kind = ENGINES[engine].kind if engine in ENGINES else "dense"
             rate = _DEFAULT_ELEMS_PER_S.get(kind, 1e8)
         return _OP_OVERHEAD_S + max(elems, 1.0) / max(rate, 1.0)
 
+    def dispatch_overhead_s(self) -> float:
+        """Learned per-task host-pool dispatch overhead (seconds), falling
+        back to a conservative default before any measurement."""
+        with self._lock:
+            if self.dispatch_overhead.n:
+                return self.dispatch_overhead.mean
+        return _DEFAULT_DISPATCH_OVERHEAD_S
+
     def _edge_seconds(self, src_kind: str, dst_kind: str, nbytes: float) -> float:
         """One hop: overhead + bytes over the (observed or default) bandwidth."""
-        m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
-        bw = m.mean if (m and m.n) else _DEFAULT_CAST_BYTES_PER_S
+        with self._lock:
+            m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
+            bw = m.mean if (m and m.n) else _DEFAULT_CAST_BYTES_PER_S
         return _CAST_OVERHEAD_S + max(nbytes, 1.0) / max(bw, 1.0)
 
     def _edge_observed(self, src_kind: str, dst_kind: str) -> bool:
-        m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
-        return bool(m and m.n)
+        with self._lock:
+            m = self.cast_rate.get(f"{src_kind}>{dst_kind}")
+            return bool(m and m.n)
 
     def cast_route(self, src_kind: str, dst_kind: str, nbytes: float,
                    kind_nbytes: Optional[Dict[str, float]] = None
@@ -327,15 +361,26 @@ class CostModel:
     def observe_op(self, engine: str, op: str, elems: float, seconds: float):
         if seconds <= 0 or elems <= 0:
             return
-        self.op_rate.setdefault(engine, {}).setdefault(op, _Mean()) \
-            .update(elems / seconds)
+        with self._lock:
+            self.op_rate.setdefault(engine, {}).setdefault(op, _Mean()) \
+                .update(elems / seconds)
 
     def observe_cast(self, src_kind: str, dst_kind: str, nbytes: float,
                      seconds: float):
         if seconds <= 0 or nbytes <= 0:
             return
-        self.cast_rate.setdefault(f"{src_kind}>{dst_kind}", _Mean()) \
-            .update(nbytes / seconds)
+        with self._lock:
+            self.cast_rate.setdefault(f"{src_kind}>{dst_kind}", _Mean()) \
+                .update(nbytes / seconds)
+
+    def observe_dispatch(self, seconds: float):
+        """Fold one measured host-pool submit->result round trip into the
+        learned per-host dispatch overhead (the executor measures it on the
+        live pool; see ``executor._dispatch_overhead``)."""
+        if seconds <= 0:
+            return
+        with self._lock:
+            self.dispatch_overhead.update(seconds)
 
     def observe_execution(self, result):
         """Fold one measured ExecutionResult (sequential run) into the model."""
@@ -422,19 +467,29 @@ class CostModel:
         path = path or self.path
         if not path:
             return
-        blob = {
-            "calibrated": self.calibrated,
-            "op_rate": {e: {op: [m.mean, m.n] for op, m in ops.items()}
-                        for e, ops in self.op_rate.items()},
-            "cast_rate": {k: [m.mean, m.n] for k, m in self.cast_rate.items()},
-        }
+        with self._lock:
+            blob = {
+                "calibrated": self.calibrated,
+                "op_rate": {e: {op: [m.mean, m.n] for op, m in ops.items()}
+                            for e, ops in self.op_rate.items()},
+                "cast_rate": {k: [m.mean, m.n]
+                              for k, m in self.cast_rate.items()},
+                "dispatch_overhead": [self.dispatch_overhead.mean,
+                                      self.dispatch_overhead.n],
+            }
         atomic_json_dump(path, blob)
 
     def load(self, path: str):
         blob = load_json(path)
-        self.calibrated = bool(blob.get("calibrated", False))
-        self.op_rate = {e: {op: _Mean(mean=m, n=cnt)
-                            for op, (m, cnt) in ops.items()}
-                        for e, ops in blob.get("op_rate", {}).items()}
-        self.cast_rate = {k: _Mean(mean=m, n=cnt)
-                          for k, (m, cnt) in blob.get("cast_rate", {}).items()}
+        with self._lock:
+            self.calibrated = bool(blob.get("calibrated", False))
+            self.op_rate = {e: {op: _Mean(mean=m, n=cnt)
+                                for op, (m, cnt) in ops.items()}
+                            for e, ops in blob.get("op_rate", {}).items()}
+            self.cast_rate = {k: _Mean(mean=m, n=cnt)
+                              for k, (m, cnt)
+                              in blob.get("cast_rate", {}).items()}
+            do = blob.get("dispatch_overhead")
+            if do:
+                self.dispatch_overhead = _Mean(mean=float(do[0]),
+                                               n=int(do[1]))

@@ -185,11 +185,28 @@ def _col_groupby_sum(attrs, t: ColumnarTable):
 
 
 def _col_join(attrs, a: ColumnarTable, b: ColumnarTable):
-    """Sort-merge equi-join (eager; dynamic output size)."""
+    """Sort-merge equi-join (eager; dynamic output size).
+
+    The output columns stay NUMPY: argsort/searchsorted/fancy-indexing are
+    host work that releases the GIL (what makes joins overlap on the host
+    pool), and wrapping the result in ``jnp.asarray`` here would serialize
+    every worker on the XLA transfer lock.  A downstream device consumer
+    (segment_sum in matmul/knn, a dense cast) pulls the columns over when it
+    actually needs them."""
     ka, kb = attrs["left_on"], attrs["right_on"]
     av = np.asarray(a.valid); bv = np.asarray(b.valid)
-    an = {c: np.asarray(v)[av] for c, v in a.columns.items()}
-    bn = {c: np.asarray(v)[bv] for c, v in b.columns.items()}
+
+    def live(cols, mask):
+        # skip the boolean gather when nothing is masked out (the common
+        # catalog-table case): an all-true fancy index would copy every
+        # column — pure memory-bandwidth burn that scales terribly across
+        # concurrent requests
+        if mask.all():
+            return {c: np.asarray(v) for c, v in cols.items()}
+        return {c: np.asarray(v)[mask] for c, v in cols.items()}
+
+    an = live(a.columns, av)
+    bn = live(b.columns, bv)
     order = np.argsort(bn[kb], kind="stable")
     bk = bn[kb][order]
     left = np.searchsorted(bk, an[ka], side="left")
@@ -199,10 +216,10 @@ def _col_join(attrs, a: ColumnarTable, b: ColumnarTable):
     offs = (left.astype(np.int64).repeat(counts)
             + _ranges_from_counts(counts))
     bi = order[offs]
-    cols = {("l_" + c if c in bn else c): jnp.asarray(v[ai])
+    cols = {("l_" + c if c in bn else c): v[ai]
             for c, v in an.items()}
     cols.update({("r_" + c if ("l_" + c) in cols or c in an else c):
-                 jnp.asarray(v[bi]) for c, v in bn.items()})
+                 v[bi] for c, v in bn.items()})
     return ColumnarTable(cols)
 
 

@@ -16,11 +16,18 @@ Two dispatch modes:
       drained before the next level starts).  Used by the production phase,
       where per-node attribution is not needed.  In auto mode
       (``host_workers=None``) a level is threaded only when at least two of
-      its tasks each move ``HOST_TASK_MIN_BYTES`` of input — tiny XLA-bound
-      levels stay inline, where single-threaded async dispatch is already
-      optimal; ``host_workers<=1`` falls back to inline single-threaded
-      level dispatch (the pre-PR-3 behavior), and a single-node level always
-      runs inline (no pool round-trip).
+      its tasks are predicted heavy enough to overlap: with a ``cost_model``
+      at hand the gate compares each task's *predicted seconds* (op seconds
+      from learned throughputs + cast seconds for inputs homed on another
+      data model) against ``HOST_TASK_GATE_FACTOR x`` the model's learned
+      per-host thread-dispatch overhead (measured once per process as real
+      submit->result round trips on the live pool, persisted with the
+      calibration file); without a model it falls back to the static
+      ``HOST_TASK_MIN_BYTES`` byte threshold.  Tiny XLA-bound levels stay
+      inline, where single-threaded async dispatch is already optimal;
+      ``host_workers<=1`` falls back to inline single-threaded level
+      dispatch (the pre-PR-3 behavior), and a single-node level always runs
+      inline (no pool round-trip).
 
 Both modes report each node's *actual* logical output size (``size_obs``)
 and dense-equivalent output shape (``shape_obs``), keyed by post-order
@@ -34,8 +41,14 @@ direct pair.
 
 The host pool is process-wide and lazily built (``host_pool``): plans are
 short-lived but frequent on the serving path, and thread churn per plan
-would dominate the win.  Do not call ``execute_plan`` from inside a pool
-worker — a saturated pool could deadlock on the level barrier.
+would dominate the win.  ``execute_plan`` is safe to call from many request
+threads at once — each call keeps its own value/timing dicts, the shared
+Migrator accounting is lock-guarded, and pool workers never submit to the
+pool themselves.  Do not call ``execute_plan(concurrent=True)`` with
+``host_workers>1`` from *inside* a pool worker — a saturated pool could
+deadlock on the level barrier; background tasks that must execute a plan
+from a worker (the middleware's off-path exploration) pass
+``host_workers=1`` so their level dispatch stays inline.
 """
 from __future__ import annotations
 
@@ -63,16 +76,28 @@ ISLAND_KIND = {"array": "dense", "relational": "columnar", "text": "coo",
 # or process-wide via REPRO_HOST_WORKERS
 DEFAULT_HOST_WORKERS = min(8, os.cpu_count() or 1)
 
-# auto mode (host_workers=None) threads a level only when at least two of
-# its nodes each move this many input bytes: small-payload levels are
-# XLA-dispatch-bound, and multi-threaded dispatch of many tiny ops pays lock
-# contention for zero overlap (measured ~0.6x on fig_host_parallel's
-# pipeline family).  An explicit host_workers forces threading regardless.
+# auto-mode FALLBACK gate (no cost model): threads a level only when at
+# least two of its nodes each move this many input bytes.  Small-payload
+# levels are XLA-dispatch-bound, and multi-threaded dispatch of many tiny
+# ops pays lock contention for zero overlap (measured ~0.6x on
+# fig_host_parallel's pipeline family).  An explicit host_workers forces
+# threading regardless.  With a cost model, the predicted-seconds gate below
+# replaces this static threshold.
 HOST_TASK_MIN_BYTES = 1e6
+
+# predicted-seconds gate: a task is worth a pool round trip only when its
+# predicted seconds dwarf the measured dispatch overhead by this factor
+HOST_TASK_GATE_FACTOR = 4.0
 
 _POOL: Optional[ThreadPoolExecutor] = None
 _POOL_SIZE = 0
 _POOL_LOCK = threading.Lock()
+
+# one measurement of the pool round-trip cost per process (see
+# _dispatch_overhead); cached so later cost models inherit it without
+# re-measuring on the serve path
+_DISPATCH_MEASURED: Optional[float] = None
+_DISPATCH_LOCK = threading.Lock()
 
 
 def host_pool(max_workers: Optional[int] = None) -> ThreadPoolExecutor:
@@ -144,7 +169,7 @@ def topo_levels(query: PolyOp) -> List[List[PolyOp]]:
 
 def _node_input_nbytes(node: PolyOp, catalog, values) -> float:
     """Physical bytes this node's inputs occupy right now — the cheap proxy
-    the auto-threading gate uses for 'is this task heavy enough to overlap'."""
+    the FALLBACK auto-threading gate uses when no cost model is at hand."""
     total = 0.0
     for inp in node.inputs:
         if isinstance(inp, Ref):
@@ -153,6 +178,65 @@ def _node_input_nbytes(node: PolyOp, catalog, values) -> float:
         else:
             total += float(getattr(values.get(inp.uid), "nbytes", 0.0) or 0.0)
     return total
+
+
+def _dispatch_overhead(cost_model, reps: int = 5) -> float:
+    """The learned per-host thread-dispatch overhead, in seconds.
+
+    Measured once per process as the median of ``reps`` no-op submit->result
+    round trips, then folded into the cost model (``observe_dispatch``) so
+    it persists beside the calibration and later processes start from a
+    real number.  A model that already carries measurements (restored from
+    disk) is trusted without re-measuring.
+
+    The round trips run on a PRIVATE single-worker pool, not the live host
+    pool: the quantity of interest is pure submit->result overhead, and on
+    the shared pool a queued background exploration trial would be timed as
+    'overhead', poisoning the persisted value (seconds-scale floor => the
+    gate never threads again)."""
+    global _DISPATCH_MEASURED
+    if cost_model.dispatch_overhead.n:
+        return cost_model.dispatch_overhead_s()
+    with _DISPATCH_LOCK:
+        if _DISPATCH_MEASURED is None:
+            with ThreadPoolExecutor(max_workers=1) as probe:
+                probe.submit(lambda: None).result()      # thread spin-up
+                samples = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    probe.submit(lambda: None).result()
+                    samples.append(time.perf_counter() - t0)
+            samples.sort()
+            _DISPATCH_MEASURED = samples[len(samples) // 2]
+    cost_model.observe_dispatch(_DISPATCH_MEASURED)
+    return cost_model.dispatch_overhead_s()
+
+
+def _task_pred_seconds(node: PolyOp, engine_name: str, catalog, values,
+                       cost_model) -> float:
+    """Predicted seconds of one host task (engine op + any input casts onto
+    the op's data model) — what the auto-threading gate weighs against the
+    dispatch overhead.  Sized from the inputs' CURRENT containers, so the
+    estimate sharpens level by level as real intermediates materialize."""
+    eng = ENGINES[engine_name]
+    elems = 0.0
+    secs = 0.0
+    for inp in node.inputs:
+        if isinstance(inp, Ref):
+            obj = catalog[inp.name].obj if (catalog is not None
+                                            and inp.name in catalog) else None
+        else:
+            obj = values.get(inp.uid)
+        if obj is None:
+            continue
+        elems += container_elems(obj)
+        kind = getattr(obj, "kind", eng.kind)
+        if kind != eng.kind:
+            # flat nbytes (no per-hop kind sizing): the gate must stay cheap
+            # — container_kind_nbytes scans columnar validity masks
+            secs += cost_model.cast_seconds(kind, eng.kind,
+                                            float(getattr(obj, "nbytes", 0.0)))
+    return secs + cost_model.op_seconds(engine_name, node.op, elems)
 
 
 def _gather_args(node: PolyOp, eng, catalog, values, migrator):
@@ -220,10 +304,19 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
             use_pool = pool is not None and len(level) > 1
             if use_pool and host_workers is None:
                 # auto mode: thread only when >= 2 tasks are heavy enough to
-                # overlap (see HOST_TASK_MIN_BYTES)
-                heavy = sum(1 for n in level
-                            if _node_input_nbytes(n, catalog, values)
-                            >= HOST_TASK_MIN_BYTES)
+                # overlap.  With a cost model: predicted task seconds vs the
+                # learned dispatch overhead; without: the static byte gate.
+                if cost_model is not None:
+                    floor_s = HOST_TASK_GATE_FACTOR * \
+                        _dispatch_overhead(cost_model)
+                    heavy = sum(1 for n in level
+                                if _task_pred_seconds(n, amap[n.uid], catalog,
+                                                      values, cost_model)
+                                >= floor_s)
+                else:
+                    heavy = sum(1 for n in level
+                                if _node_input_nbytes(n, catalog, values)
+                                >= HOST_TASK_MIN_BYTES)
                 use_pool = heavy >= 2
             if not use_pool:
                 for node in level:           # inline fallback / trivial level

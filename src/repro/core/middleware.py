@@ -25,13 +25,23 @@ future plans"):
 
 Each cache entry carries the k-best DP's runner-up plans
 (``CachedPlan.alternates``).  With a non-zero ``explore_budget``, production
-occasionally *explores*: after serving the winner, it executes the next
-alternate in rotation and records its measured seconds/sizes/shapes into the
-monitor — the paper's "the monitor must continuously try alternate plans"
-loop, bounded so exploration time never exceeds ``explore_budget`` x
-cumulative serve time.  An alternate
-that proves faster becomes the monitor's best and is promoted on the next
-serve.
+occasionally *explores*: after serving the winner, it schedules the next
+alternate in rotation as a **background task on the executor's host pool**
+— the request path never pays for it — and the task records its measured
+seconds/sizes/shapes into the monitor (the paper's "the monitor must
+continuously try alternate plans" loop), bounded so exploration time never
+exceeds ``explore_budget`` x cumulative serve time.  An alternate that
+proves faster becomes the monitor's best and is promoted on a later serve.
+``drain_explorations()`` waits for in-flight trials (tests, shutdown).
+
+**Concurrent admission.**  ``execute`` is safe to call from many request
+threads at once: a per-signature lock serializes requests for the SAME
+signature (two cold requests train once — the second waits, then serves the
+fresh cache entry) while different signatures train and serve fully in
+parallel.  The monitor and cost model take their own internal locks, the
+plan cache and the stats counters are guarded here, and exploration runs
+off-path, so the whole middleware admits multi-threaded traffic (see
+``runtime.server.QueryServer.submit_many``).
 
 The plan cache (winning plan + predicted cost + alternate keys) persists
 beside the monitor DB (``<monitor>.plans.json``, atomic JSON via
@@ -42,13 +52,14 @@ alternates.
 from __future__ import annotations
 
 import os
+import threading
 import warnings
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
-from repro.core.executor import ExecutionResult, execute_plan
+from repro.core.executor import ExecutionResult, execute_plan, host_pool
 from repro.core.ioutil import atomic_json_dump, load_json
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
@@ -123,7 +134,9 @@ class Report:
     cache_hit: bool = False  # plan came from the signature-keyed plan cache
     replanned: bool = False  # predicted/measured divergence re-ran the DP
     predicted_s: float = 0.0  # cached prediction for the executed plan
-    explored: bool = False   # this serve also executed an alternate plan
+    # this serve scheduled a background alternate trial (it runs off-path on
+    # the host pool; drain_explorations() waits for its measurement)
+    explored: bool = False
     explored_key: str = ""   # which alternate (empty when explored is False)
 
 
@@ -169,8 +182,26 @@ class BigDAWG:
         self.plan_cache: Dict[str, CachedPlan] = {}
         self.plan_cache_path = plan_cache_path or default_plan_cache_path(
             self.monitor.path)
+        # -- concurrency state (see module docstring) -----------------------
+        # per-signature serialization: same-signature requests queue (one
+        # training per signature), different signatures run in parallel
+        self._sig_locks: Dict[str, threading.RLock] = {}
+        self._sig_locks_guard = threading.Lock()
+        # guards the counters above (replans/explorations/*_seconds)
+        self._stats_lock = threading.Lock()
+        # guards plan_cache dict mutation + CachedPlan alternate rotation
+        self._cache_lock = threading.RLock()
+        # background exploration bookkeeping: at most one in-flight trial per
+        # signature, futures kept so drain_explorations() can wait
+        self._explore_guard = threading.Lock()
+        self._explore_inflight: set = set()
+        self._explore_futures: List = []
         if self.plan_cache_path and os.path.exists(self.plan_cache_path):
             self.load_plan_cache(self.plan_cache_path)
+
+    def _sig_lock(self, sig: str) -> threading.RLock:
+        with self._sig_locks_guard:
+            return self._sig_locks.setdefault(sig, threading.RLock())
 
     # -- catalog -----------------------------------------------------------
     def register(self, name: str, obj, engine: str):
@@ -178,7 +209,12 @@ class BigDAWG:
             raise ValueError(f"unknown engine {engine}")
         if ENGINES[engine].kind != obj.kind:
             from repro.core import cast as castmod
-            obj = castmod.cast(obj, ENGINES[engine].kind, self.cost_model)
+            from repro.core.tables import device_ready
+            # casts leave triple formats numpy-eager (right for short-lived
+            # intermediates); a catalog object is long-lived and re-consumed
+            # by device ops every query, so home it on the device once here
+            obj = device_ready(
+                castmod.cast(obj, ENGINES[engine].kind, self.cost_model))
         self.catalog[name] = CatalogEntry(name, obj, engine)
 
     # -- plan-cache persistence ---------------------------------------------
@@ -186,11 +222,13 @@ class BigDAWG:
         path = path or self.plan_cache_path
         if not path:
             return
-        blob = {"format": 2,
-                "entries": {sig: {"plan": e.plan.key,
-                                  "predicted_s": e.predicted_s,
-                                  "alternates": [p.key for p in e.alternates]}
-                            for sig, e in self.plan_cache.items()}}
+        with self._cache_lock:     # snapshot: concurrent trainings of other
+            blob = {"format": 2,   # signatures keep mutating the dict
+                    "entries": {sig: {"plan": e.plan.key,
+                                      "predicted_s": e.predicted_s,
+                                      "alternates": [p.key
+                                                     for p in e.alternates]}
+                                for sig, e in self.plan_cache.items()}}
         atomic_json_dump(path, blob)
 
     def load_plan_cache(self, path: str):
@@ -217,9 +255,10 @@ class BigDAWG:
                         warnings.warn(           # sink the whole entry
                             f"plan cache {path}: dropping bad alternate "
                             f"for {sig!r}: {exc}")
-                self.plan_cache[sig] = CachedPlan(
-                    plan, float(ent.get("predicted_s", 0.0)), restored=True,
-                    alternates=tuple(alts))
+                with self._cache_lock:
+                    self.plan_cache[sig] = CachedPlan(
+                        plan, float(ent.get("predicted_s", 0.0)),
+                        restored=True, alternates=tuple(alts))
             except (ValueError, KeyError, TypeError) as exc:
                 warnings.warn(f"plan cache {path}: skipping bad entry "
                               f"{sig!r}: {exc}")
@@ -273,8 +312,9 @@ class BigDAWG:
         # have recorded) — kept with the entry for budgeted exploration
         alternates = tuple(p for _, p in ranked
                            if p.key != best.plan.key)[:self.MAX_ALTERNATES]
-        self.plan_cache[sig] = CachedPlan(best.plan, predicted,
-                                          alternates=alternates)
+        with self._cache_lock:
+            self.plan_cache[sig] = CachedPlan(best.plan, predicted,
+                                              alternates=alternates)
         self.cost_model.save()
         self.monitor.save()
         self.save_plan_cache()
@@ -324,8 +364,9 @@ class BigDAWG:
             # same plan still wins — the divergence is model form error, not
             # a placement mistake; adopt the measured cost as the entry's
             # prediction so a stable runtime stops re-triggering
-            self.plan_cache[sig] = CachedPlan(plan, measured,
-                                              alternates=entry.alternates)
+            with self._cache_lock:
+                self.plan_cache[sig] = CachedPlan(plan, measured,
+                                                  alternates=entry.alternates)
         else:
             # prefer the plan's measured history (training trials measured
             # every candidate) over the raw model cost as the new baseline —
@@ -333,14 +374,17 @@ class BigDAWG:
             stats = self.monitor.known_plans(sig).get(plan.key)
             pred_new = stats.mean_seconds if stats is not None and stats.n \
                 else cost
-            self.plan_cache[sig] = CachedPlan(
-                plan, pred_new, pinned=True,
-                # the dethroned incumbent joins the alternates — exploration
-                # keeps measuring it so a wrong re-plan can be reversed
-                alternates=tuple(
-                    p for p in (entry.plan,) + entry.alternates
-                    if p.key != plan.key)[:self.MAX_ALTERNATES])
-        self.replans += 1
+            with self._cache_lock:
+                self.plan_cache[sig] = CachedPlan(
+                    plan, pred_new, pinned=True,
+                    # the dethroned incumbent joins the alternates —
+                    # exploration keeps measuring it so a wrong re-plan can
+                    # be reversed
+                    alternates=tuple(
+                        p for p in (entry.plan,) + entry.alternates
+                        if p.key != plan.key)[:self.MAX_ALTERNATES])
+        with self._stats_lock:
+            self.replans += 1
         self.save_plan_cache()
         return True
 
@@ -354,50 +398,64 @@ class BigDAWG:
             # DP's true runner-up plans for background exploration (not the
             # monitor's historical leftovers, which may never have been
             # planner candidates under the current sizes)
-            self.plan_cache.pop(sig, None)
+            with self._cache_lock:
+                self.plan_cache.pop(sig, None)
             rep = self._train(query, sig)
             for alt in self.plan_cache[sig].alternates:
                 self.monitor.queue_background(sig, alt.key)
             rep.drifted = True
             return rep
-        entry = self.plan_cache.get(sig)
-        if entry is not None and entry.pinned:
-            # freshly re-planned entry: serve the DP's new choice once ahead
-            # of monitor history so its measured seconds enter the comparison
-            plan, plan_key, hit = entry.plan, entry.plan.key, True
-            entry.pinned = False
-        else:
-            hit = entry is not None and entry.plan.key == plan_key
-            if hit:
-                plan = entry.plan
+        with self._cache_lock:
+            entry = self.plan_cache.get(sig)
+            if entry is not None and entry.pinned:
+                # freshly re-planned entry: serve the DP's new choice once
+                # ahead of monitor history so its measured seconds enter the
+                # comparison
+                plan, plan_key, hit = entry.plan, entry.plan.key, True
+                entry.pinned = False
             else:
-                try:
-                    plan = _plan_from_key(plan_key)
-                except ValueError as exc:    # corrupted monitor history
-                    warnings.warn(f"monitor best for {sig!r} unusable "
-                                  f"({exc}); retraining")
-                    return self._train(query, sig)
-                # measured history as the baseline (stats exist: best() just
-                # picked this plan by mean seconds) — model predictions are
-                # only baselines when no measurement is available.  An
-                # exploration win lands here: the promoted alternate keeps
-                # the old entry's alternate pool (incumbent included) so
-                # exploration continues to challenge it
-                alts = ()
-                if entry is not None:
-                    alts = tuple(p for p in (entry.plan,) + entry.alternates
-                                 if p.key != plan_key)[:self.MAX_ALTERNATES]
-                entry = CachedPlan(plan, stats.mean_seconds if stats.n
-                                   else self._predict(query, plan, sig),
-                                   alternates=alts)
-                self.plan_cache[sig] = entry
+                hit = entry is not None and entry.plan.key == plan_key
+                if hit:
+                    plan = entry.plan
+                else:
+                    try:
+                        plan = _plan_from_key(plan_key)
+                    except ValueError as exc:    # corrupted monitor history
+                        warnings.warn(f"monitor best for {sig!r} unusable "
+                                      f"({exc}); retraining")
+                        # retrain OUTSIDE the cache lock: training runs every
+                        # candidate plan — holding the global lock that long
+                        # would stall every other signature's serve
+                        plan = None
+                    if plan is not None:
+                        # measured history as the baseline (stats exist:
+                        # best() just picked this plan by mean seconds) —
+                        # model predictions are only baselines when no
+                        # measurement is available.  An exploration win lands
+                        # here: the promoted alternate keeps the old entry's
+                        # alternate pool (incumbent included) so exploration
+                        # continues to challenge it
+                        alts = ()
+                        if entry is not None:
+                            alts = tuple(
+                                p for p in (entry.plan,) + entry.alternates
+                                if p.key != plan_key)[:self.MAX_ALTERNATES]
+                        entry = CachedPlan(plan,
+                                           stats.mean_seconds if stats.n
+                                           else self._predict(query, plan,
+                                                              sig),
+                                           alternates=alts)
+                        self.plan_cache[sig] = entry
+        if plan is None:
+            return self._train(query, sig)
         if len(plan.assignment) != len(query.nodes()):
             # a persisted entry (or hand-edited history) for a different
             # query shape under this signature: unusable, retrain
             warnings.warn(f"plan for {sig!r} covers {len(plan.assignment)} "
                           f"positions, query has {len(query.nodes())}; "
                           f"retraining")
-            self.plan_cache.pop(sig, None)
+            with self._cache_lock:
+                self.plan_cache.pop(sig, None)
             return self._train(query, sig)
         res = execute_plan(query, plan, self.catalog, concurrent=True,
                            cost_model=self.cost_model)
@@ -408,7 +466,8 @@ class BigDAWG:
         measured = after.mean_seconds if after is not None and after.n \
             else res.seconds
         replanned = self._maybe_replan(query, sig, measured, entry)
-        self.serve_seconds += res.seconds
+        with self._stats_lock:
+            self.serve_seconds += res.seconds
         explored_key = self._maybe_explore(query, sig, usage)
         return Report(res.value, plan_key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
@@ -418,62 +477,147 @@ class BigDAWG:
     def _maybe_explore(self, query: PolyOp, sig: str,
                        usage: Dict[str, float]) -> str:
         """Budgeted alternate exploration (paper: the monitor "continuously"
-        tries alternate plans): execute the next DP runner-up in rotation and
-        feed its measured seconds/sizes/shapes to the monitor (which the
-        planner and cost model consume on every later planning pass).
-        Runs only while cumulative exploration
-        time stays within ``explore_budget`` x cumulative serve time, so the
-        serving path's overhead is bounded.  Returns the explored plan key,
-        or '' when nothing ran."""
-        entry = self.plan_cache.get(sig)
-        if (self.explore_budget <= 0.0 or entry is None
-                or not entry.alternates):
+        tries alternate plans), OFF the request path: pick the next DP
+        runner-up in rotation and schedule it as a background task on the
+        executor's host pool.  The serve returns immediately; the task feeds
+        its measured seconds/sizes/shapes to the monitor's batched record
+        queue (which the planner and cost model consume on every later
+        planning pass).  Scheduling happens only while cumulative
+        exploration time stays within ``explore_budget`` x cumulative serve
+        time (at most one in-flight trial per signature, so the overshoot is
+        bounded by one trial).  Returns the scheduled plan key, or '' when
+        nothing was scheduled."""
+        if self.explore_budget <= 0.0:
             return ""
-        if self.explore_seconds > self.explore_budget * self.serve_seconds:
+        with self._stats_lock:
+            over = self.explore_seconds > \
+                self.explore_budget * self.serve_seconds
+        if over:
             return ""
-        n_pos = len(query.nodes())
-        for _ in range(len(entry.alternates)):
-            alt = entry.alternates[entry.next_alt % len(entry.alternates)]
-            entry.next_alt += 1
-            if len(alt.assignment) == n_pos and alt.key != entry.plan.key:
-                break
-        else:
-            return ""
-        res = execute_plan(query, alt, self.catalog, concurrent=True,
-                           cost_model=self.cost_model)
-        self.explore_seconds += res.seconds
-        self.explorations += 1
-        # same dispatch mode as production serves, so the alternate's mean is
-        # directly comparable to the incumbent's — if it wins, the next
-        # Monitor.best() promotes it.  The COST MODEL is deliberately NOT fed
-        # here: concurrent-mode cast hops time pool-worker contention, and
-        # folding them into cast_rate would corrupt the calibration that
-        # training keeps sequential-only.  The model still benefits through
-        # the monitor channel (sizes/shapes sharpen its size inputs).
-        self.monitor.record(sig, alt.key, res.seconds,
-                            cast_bytes=res.cast_bytes, usage=usage,
-                            sizes=res.size_obs, shapes=res.shape_obs)
+        with self._explore_guard:
+            if sig in self._explore_inflight:    # one trial per sig at a time
+                return ""                        # (before burning a rotation
+        n_pos = len(query.nodes())               # slot on a skipped serve)
+        with self._cache_lock:               # alternate rotation is shared
+            entry = self.plan_cache.get(sig)
+            if entry is None or not entry.alternates:
+                return ""
+            for _ in range(len(entry.alternates)):
+                alt = entry.alternates[entry.next_alt % len(entry.alternates)]
+                entry.next_alt += 1
+                if len(alt.assignment) == n_pos and alt.key != entry.plan.key:
+                    break
+            else:
+                return ""
+        with self._explore_guard:
+            # same-signature callers hold the signature lock, so the
+            # inflight check above cannot race another scheduler for sig
+            self._explore_inflight.add(sig)
+            self._explore_futures = [f for f in self._explore_futures
+                                     if not f.done()]
+            self._explore_futures.append(host_pool().submit(
+                self._explore_task, query, sig, alt, dict(usage)))
         return alt.key
+
+    def _explore_task(self, query: PolyOp, sig: str, alt: Plan,
+                      usage: Dict[str, float]) -> None:
+        """One background alternate trial (runs on a host-pool worker).
+
+        Level dispatch is concurrent-but-inline (``host_workers=1``): a pool
+        worker must never submit to its own pool (a saturated pool would
+        deadlock on the level barrier).  The auto gate keeps serve-path
+        levels inline for sub-threshold tasks anyway, so the alternate's
+        measured mean stays comparable to the incumbent's for exactly the
+        levels where threading could have diverged them.  The COST MODEL is
+        deliberately NOT fed here: background-mode cast hops time worker
+        contention, and folding them into cast_rate would corrupt the
+        calibration that training keeps sequential-only.  The model still
+        benefits through the monitor channel (sizes/shapes sharpen its size
+        inputs)."""
+        try:
+            res = execute_plan(query, alt, self.catalog, concurrent=True,
+                               host_workers=1, cost_model=self.cost_model)
+            with self._stats_lock:
+                self.explore_seconds += res.seconds
+                self.explorations += 1
+            self.monitor.record(sig, alt.key, res.seconds,
+                                cast_bytes=res.cast_bytes, usage=usage,
+                                sizes=res.size_obs, shapes=res.shape_obs)
+        except Exception as exc:     # an alternate that fails must not take
+            warnings.warn(           # down the worker or block the drain
+                f"background exploration of {alt.key!r} for {sig!r} "
+                f"failed: {exc}")
+            # evict it from the rotation: a doomed alternate charges no
+            # explore_seconds, so the budget would never stop the serve path
+            # from rescheduling it on every request
+            with self._cache_lock:
+                entry = self.plan_cache.get(sig)
+                if entry is not None:
+                    entry.alternates = tuple(p for p in entry.alternates
+                                             if p.key != alt.key)
+        finally:
+            with self._explore_guard:
+                self._explore_inflight.discard(sig)
+
+    def reset_exploration_budget(self) -> None:
+        """Zero the exploration-budget accounting (``explore_seconds`` and
+        ``serve_seconds``).  The budget check compares *cumulative* totals,
+        so a long stretch of cheap trials banks credit that a later busy
+        phase can burn in a burst; epoch-style callers (benchmarks, load
+        phases) re-anchor here so every phase sees the same steady-state
+        ``explore_budget`` fraction."""
+        with self._stats_lock:
+            self.explore_seconds = 0.0
+            self.serve_seconds = 0.0
+
+    def drain_explorations(self, timeout: Optional[float] = None) -> int:
+        """Block until all in-flight background exploration trials finish
+        (their measurements are then in the monitor's pending queue).
+        Returns how many finished futures were retired.  With a ``timeout``
+        (per future, seconds), ``concurrent.futures.TimeoutError``
+        propagates and the unfinished trials STAY tracked — a later drain
+        (or ``QueryServer.persist()``) still waits for them."""
+        with self._explore_guard:
+            futures = list(self._explore_futures)
+        try:
+            for f in futures:
+                f.exception(timeout=timeout)   # surface nothing, just wait
+        finally:
+            with self._explore_guard:          # retire only what finished;
+                done = sum(1 for f in futures if f.done())
+                self._explore_futures = [f for f in self._explore_futures
+                                         if not f.done()]
+        return done
 
     # -- public API ----------------------------------------------------------
     def execute(self, query: PolyOp, mode: str = "auto") -> Report:
+        """Thread-safe entry point.  Requests for the SAME signature are
+        serialized on a per-signature lock — two cold requests racing in
+        ``auto`` mode train exactly once: the loser blocks, then re-checks
+        the monitor inside the lock and serves the winner's fresh plan.
+        Requests for different signatures hold different locks and
+        train/serve fully in parallel."""
         sig = signature(query, self.catalog)
-        if mode == "training":
-            return self._train(query, sig)
-        if mode == "production":
-            return self._production(query, sig)
-        if mode == "auto":
-            known, _, _ = self.monitor.best(sig)
-            return self._production(query, sig) if known else \
-                self._train(query, sig)
+        with self._sig_lock(sig):
+            if mode == "training":
+                return self._train(query, sig)
+            if mode == "production":
+                return self._production(query, sig)
+            if mode == "auto":
+                known, _, _ = self.monitor.best(sig)
+                return self._production(query, sig) if known else \
+                    self._train(query, sig)
         raise ValueError(mode)
 
     def run_background_queue(self, query_by_sig: Dict[str, PolyOp]):
         """Re-explore queued alternate plans 'when the system is
         underutilized' (paper §III-C-3)."""
         done = 0
-        while self.monitor.background_queue:
-            sig, plan_key = self.monitor.background_queue.pop()
+        while True:
+            item = self.monitor.pop_background()     # atomic: two drainers
+            if item is None:                         # cannot double-pop
+                break
+            sig, plan_key = item
             if sig not in query_by_sig:
                 continue
             query = query_by_sig[sig]

@@ -13,7 +13,11 @@ per-pair bandwidths even on detours.
 One Migrator instance is shared by all of a plan's nodes; in the executor's
 thread-pooled concurrent mode several host workers cast through it at once,
 so the byte/cast accounting is guarded by a lock (the casts themselves run
-outside it and genuinely overlap)."""
+outside it and genuinely overlap).  Nothing is shared ACROSS plans: every
+``execute_plan`` call builds its own Migrator, so concurrent request
+threads (and background exploration tasks) never contend on each other's
+accounting — the executor reads the totals only after the final level
+barrier, when all of this plan's workers have joined."""
 from __future__ import annotations
 
 import threading

@@ -26,6 +26,18 @@ instead of being diluted by an unbounded tail of stale samples.  The knob is
 averaging through the first 5 samples, then a 5-run effective window);
 ``decay=0.0`` restores pure cumulative means.
 
+**Thread safety and batched flushing.**  The monitor is written to from
+many threads at once — concurrent production serves, training runs on
+different signatures, and background exploration tasks on the host pool.
+``record`` therefore never mutates the history dicts directly: it appends
+the raw observation to a pending queue (one lock-guarded list append, cheap
+enough for the request path) and ``flush()`` drains that queue, applying the
+decayed-mean updates in arrival order.  Every reader (``best``,
+``known_plans``, ``measured_sizes``, ``measured_shapes``) and ``save()``
+flushes first, so external behavior is exactly the per-record semantics —
+batched only between a record and the next read.  All state is guarded by
+one internal ``RLock``.
+
 Persistence: one JSON file (``Monitor(path)``), written atomically through
 ``ioutil.atomic_json_dump`` — the blob is dumped to a same-directory temp
 file and moved into place with ``os.replace``, so a crash mid-save can never
@@ -56,6 +68,7 @@ from __future__ import annotations
 
 import os
 import resource
+import threading
 import time
 from dataclasses import dataclass, field, asdict
 from typing import Dict, Optional, Tuple
@@ -117,8 +130,8 @@ def usage_drift(a: Dict[str, float], b: Dict[str, float]) -> float:
 
 class Monitor:
     """signature -> {plan_key: PlanStats} (+ measured sizes/shapes);
-    JSON-persistent, with exponentially-decayed means (see module
-    docstring)."""
+    JSON-persistent, with exponentially-decayed means and thread-safe
+    batched recording (see module docstring)."""
 
     DRIFT_THRESHOLD = 0.5
     DECAY = 0.2           # newest-sample floor weight for all running means
@@ -136,6 +149,12 @@ class Monitor:
         # observation replaces, it is not averaged)
         self.shapes: Dict[str, Dict[int, Tuple[int, ...]]] = {}
         self.background_queue: list = []     # plans to re-explore when idle
+        # guards db/sizes/shapes/background_queue AND the pending-record
+        # queue; re-entrant so flush() may run inside a locked reader
+        self._lock = threading.RLock()
+        # raw observations awaiting application — record() only appends
+        # here, flush() drains in arrival order (see module docstring)
+        self._pending: list = []
         if path and os.path.exists(path):
             self.load(path)
 
@@ -145,9 +164,20 @@ class Monitor:
                usage: Optional[Dict[str, float]] = None,
                sizes: Optional[Dict[int, float]] = None,
                shapes: Optional[Dict[int, Tuple[int, ...]]] = None):
+        """Enqueue one observation (cheap; safe from any thread).  The
+        decayed-mean updates happen at the next ``flush()`` — which every
+        reader performs — so behavior is indistinguishable from immediate
+        application unless you bypass the accessors and read ``db`` raw."""
+        rec = (sig, plan_key, seconds, cast_bytes, extra,
+               usage or usage_snapshot(), sizes, shapes)
+        with self._lock:
+            self._pending.append(rec)
+
+    def _apply(self, rec) -> None:
+        """Apply one queued observation to the history dicts (lock held)."""
+        sig, plan_key, seconds, cast_bytes, extra, usage, sizes, shapes = rec
         entry = self.db.setdefault(sig, {}).setdefault(plan_key, PlanStats())
-        entry.record(seconds, usage or usage_snapshot(), cast_bytes, extra,
-                     decay=self.decay)
+        entry.record(seconds, usage, cast_bytes, extra, decay=self.decay)
         if sizes:
             store = self.sizes.setdefault(sig, {})
             for pos, nbytes in sizes.items():
@@ -160,50 +190,89 @@ class Monitor:
             for pos, shp in shapes.items():
                 store_s[int(pos)] = tuple(int(d) for d in shp)
 
+    def flush(self) -> int:
+        """Drain the pending-record queue into the history dicts, in arrival
+        order.  Returns the number of records applied.  Readers call this
+        implicitly; call it directly after hammering ``record`` from worker
+        threads if you are about to inspect ``db`` by hand."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+            for rec in pending:
+                self._apply(rec)
+            return len(pending)
+
+    def pending_records(self) -> int:
+        """Queued-but-unapplied observation count (diagnostics/tests)."""
+        with self._lock:
+            return len(self._pending)
+
     def measured_sizes(self, sig: str) -> Dict[int, float]:
         """Post-order position -> decayed-mean measured logical output bytes
         (empty dict when the signature has never been executed)."""
-        return {pos: m[0] for pos, m in self.sizes.get(sig, {}).items()}
+        with self._lock:
+            self.flush()
+            return {pos: m[0] for pos, m in self.sizes.get(sig, {}).items()}
 
     def measured_shapes(self, sig: str) -> Dict[int, Tuple[int, ...]]:
         """Post-order position -> last observed dense-equivalent output
         shape (only positions whose container format carries a cheap shape —
         dense/coo/stream; columnar outputs are absent)."""
-        return dict(self.shapes.get(sig, {}))
+        with self._lock:
+            self.flush()
+            return dict(self.shapes.get(sig, {}))
 
     # -- production-phase matching ------------------------------------------
     def best(self, sig: str, usage: Optional[Dict[str, float]] = None):
         """Returns (plan_key, stats, drifted).  (None, None, False) if the
         signature has never been trained."""
-        plans = self.db.get(sig)
-        if not plans:
-            return None, None, False
-        key, stats = min(plans.items(), key=lambda kv: kv[1].mean_seconds)
+        with self._lock:
+            self.flush()
+            plans = self.db.get(sig)
+            if not plans:
+                return None, None, False
+            key, stats = min(plans.items(), key=lambda kv: kv[1].mean_seconds)
         drifted = False
         if usage is not None and stats.usage:
             drifted = usage_drift(usage, stats.usage) > self.DRIFT_THRESHOLD
         return key, stats, drifted
 
     def known_plans(self, sig: str) -> Dict[str, PlanStats]:
-        return self.db.get(sig, {})
+        """Snapshot of the signature's stats dict (flushed first).  The
+        dict is a copy — a concurrent flush adding a new plan key must not
+        blow up a caller mid-iteration — but the PlanStats values are the
+        live objects."""
+        with self._lock:
+            self.flush()
+            return dict(self.db.get(sig, {}))
 
     def queue_background(self, sig: str, plan_key: str):
-        self.background_queue.append((sig, plan_key))
+        with self._lock:
+            self.background_queue.append((sig, plan_key))
+
+    def pop_background(self):
+        """Atomically pop one queued (sig, plan_key), or None when the queue
+        is empty — the race-free consumer for ``run_background_queue`` (an
+        unguarded check-then-pop can raise IndexError under two drainers)."""
+        with self._lock:
+            return self.background_queue.pop() if self.background_queue \
+                else None
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: Optional[str] = None):
         path = path or self.path
         if not path:
             return
-        blob = {
-            "format": 3,
-            "plans": {sig: {pk: asdict(st) for pk, st in plans.items()}
-                      for sig, plans in self.db.items()},
-            "sizes": {sig: {str(pos): list(m) for pos, m in store.items()}
-                      for sig, store in self.sizes.items()},
-            "shapes": {sig: {str(pos): list(s) for pos, s in store.items()}
-                       for sig, store in self.shapes.items()},
-        }
+        with self._lock:
+            self.flush()
+            blob = {
+                "format": 3,
+                "plans": {sig: {pk: asdict(st) for pk, st in plans.items()}
+                          for sig, plans in self.db.items()},
+                "sizes": {sig: {str(pos): list(m) for pos, m in store.items()}
+                          for sig, store in self.sizes.items()},
+                "shapes": {sig: {str(pos): list(s) for pos, s in store.items()}
+                           for sig, store in self.shapes.items()},
+            }
         atomic_json_dump(path, blob)
 
     def load(self, path: str):
@@ -213,11 +282,12 @@ class Monitor:
             shapes = blob.get("shapes", {})                 # format >= 3
         else:                       # format 1: bare {sig: {plan_key: stats}}
             plans, sizes, shapes = blob, {}, {}
-        self.db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
-                   for sig, pls in plans.items()}
-        self.sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
-                            for pos, m in store.items()}
-                      for sig, store in sizes.items()}
-        self.shapes = {sig: {int(pos): tuple(int(d) for d in s)
-                             for pos, s in store.items()}
-                       for sig, store in shapes.items()}
+        with self._lock:
+            self.db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
+                       for sig, pls in plans.items()}
+            self.sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
+                                for pos, m in store.items()}
+                          for sig, store in sizes.items()}
+            self.shapes = {sig: {int(pos): tuple(int(d) for d in s)
+                                 for pos, s in store.items()}
+                           for sig, store in shapes.items()}

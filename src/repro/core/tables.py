@@ -3,6 +3,14 @@
 These mirror the paper's data models: SciDB arrays -> DenseTensor, relational
 rows -> ColumnarTable, Accumulo/D4M associative arrays -> COOMatrix, S-Store
 windows -> StreamBuffer.  ``nbytes``/``describe`` feed the cast cost model.
+
+Triple-format containers (ColumnarTable, COOMatrix) accept **either** jnp or
+numpy arrays for their columns/triples.  Eagerly-computed intermediates —
+sort-merge join output, dense->triple casts — stay numpy until a dense
+consumer actually needs the device: wrapping them in ``jnp.asarray`` at
+creation would serialize every host-pool worker on the XLA transfer lock for
+data the next op may never touch on-device (see ``device_ready`` for the
+explicit homing used on long-lived catalog objects).
 """
 from __future__ import annotations
 
@@ -44,7 +52,12 @@ class ColumnarTable:
     def __post_init__(self):
         n = self.nrows
         if self.valid is None:
-            self.valid = jnp.ones((n,), bool)
+            # follow the columns' residency: numpy columns get a numpy mask
+            # (building a device mask for a host-side intermediate would
+            # trigger exactly the transfer this layout avoids)
+            first = next(iter(self.columns.values()))
+            ones = np.ones if isinstance(first, np.ndarray) else jnp.ones
+            self.valid = ones((n,), bool)
 
     @property
     def nrows(self) -> int:
@@ -93,3 +106,25 @@ class StreamBuffer:
 
 FORMATS = {"dense": DenseTensor, "columnar": ColumnarTable, "coo": COOMatrix,
            "stream": StreamBuffer}
+
+
+def device_ready(obj):
+    """Home a container's array leaves on the device (``jnp.asarray``).
+
+    For LONG-LIVED objects — catalog registrations — that will be consumed
+    by device ops many times: paying the transfer once at registration beats
+    re-transferring on every query.  Eager intermediates deliberately skip
+    this (see module docstring)."""
+    if isinstance(obj, ColumnarTable):
+        return ColumnarTable({c: jnp.asarray(v)
+                              for c, v in obj.columns.items()},
+                             valid=jnp.asarray(obj.valid))
+    if isinstance(obj, COOMatrix):
+        return COOMatrix(jnp.asarray(obj.rows), jnp.asarray(obj.cols),
+                         jnp.asarray(obj.vals), obj.shape)
+    if isinstance(obj, DenseTensor):
+        return DenseTensor(jnp.asarray(obj.data),
+                           valid_count=obj.valid_count, fill=obj.fill)
+    if isinstance(obj, StreamBuffer):
+        return StreamBuffer(jnp.asarray(obj.data), obj.t0)
+    return obj

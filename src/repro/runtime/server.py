@@ -19,15 +19,29 @@ pointed at the same paths starts *warm*: previously-trained signatures are
 served in production mode with zero plan enumerations.  The middleware's
 adaptive loop still watches every run — ``stats["replans"]`` counts the
 times measured/predicted divergence forced a fresh (cheap) DP pass, and
-``stats["explorations"]`` counts the budgeted serves of a k-best DP
-runner-up plan (enable with ``BigDAWG(explore_budget=...)``) whose
+``stats["explorations"]`` counts the budgeted background trials of a k-best
+DP runner-up plan (enable with ``BigDAWG(explore_budget=...)``) whose
 measurements keep the monitor's plan ranking honest.
+
+``QueryServer`` admits **concurrent traffic**: ``submit`` is safe to call
+from many threads (the middleware serializes same-signature requests on a
+per-signature lock, so a cold signature trains exactly once under any
+admission pattern; stats updates are lock-guarded), and
+``submit_many``/``serve`` drive a dedicated request thread pool so callers
+get multi-threaded admission without managing threads themselves.  The
+request pool is NOT the executor's host pool: request threads block on
+level barriers, and parking them on the pool that runs the levels could
+starve it.  Exploration runs off the request path (background host-pool
+tasks), so ``stats["seconds"]`` — summed per-request wall time across
+request threads — contains zero exploration time.
 """
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -149,12 +163,25 @@ class QueryServer:
     Serving path: signature -> plan cache -> concurrent plan execution.  Only
     a cache/monitor miss (a never-seen signature) falls back to the training
     phase, so steady-state traffic never re-enumerates plans.
+
+    Thread-safe: ``submit`` may be called from many threads at once (see the
+    module docstring); ``submit_many``/``serve`` spin the requests over the
+    server's own request pool.
     """
+
+    # default size of the request admission pool (submit_many/serve)
+    DEFAULT_REQUEST_WORKERS = 4
 
     def __init__(self, bigdawg):
         self.bd = bigdawg
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
                       "replans": 0, "explorations": 0, "seconds": 0.0}
+        self._stats_lock = threading.Lock()
+        # lazily-built request pool (NOT the executor host pool — request
+        # threads block on level barriers); grows, never shrinks
+        self._request_pool: Optional[ThreadPoolExecutor] = None
+        self._request_pool_size = 0
+        self._pool_lock = threading.Lock()
 
     def warm(self, queries) -> int:
         """Admission/warmup: train every query shape once so production
@@ -168,22 +195,78 @@ class QueryServer:
     def persist(self) -> None:
         """Flush monitor DB, cost-model calibration and plan cache to their
         side-by-side files so the next server process restarts warm (no-ops
-        for components constructed without a path)."""
+        for components constructed without a path).  Waits for in-flight
+        background explorations first, so their measurements are included."""
+        self.bd.drain_explorations()
         self.bd.monitor.save()
         self.bd.cost_model.save()
         self.bd.save_plan_cache()
 
     def submit(self, query):
+        """Admit one request (safe from any thread).  The measured seconds
+        cover the serve path only — background exploration the serve may
+        have scheduled runs off-path and is never in this timing."""
         t0 = time.perf_counter()
         rep = self.bd.execute(query, mode="auto")
-        self.stats["requests"] += 1
-        self.stats["seconds"] += time.perf_counter() - t0
-        if rep.mode == "training":
-            self.stats["trainings"] += 1
-        if rep.cache_hit:
-            self.stats["cache_hits"] += 1
-        if rep.replanned:
-            self.stats["replans"] += 1
-        if rep.explored:
-            self.stats["explorations"] += 1
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.stats["requests"] += 1
+            self.stats["seconds"] += dt
+            if rep.mode == "training":
+                self.stats["trainings"] += 1
+            if rep.cache_hit:
+                self.stats["cache_hits"] += 1
+            if rep.replanned:
+                self.stats["replans"] += 1
+            if rep.explored:
+                self.stats["explorations"] += 1
         return rep
+
+    def _pool(self, workers: int) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._request_pool is None or self._request_pool_size < workers:
+                # a superseded pool is not shut down (in-flight submits may
+                # still hold it); its idle threads park until process exit
+                self._request_pool = ThreadPoolExecutor(
+                    max_workers=workers, thread_name_prefix="bigdawg-request")
+                self._request_pool_size = workers
+            return self._request_pool
+
+    def submit_many(self, queries: Iterable, workers: Optional[int] = None
+                    ) -> List:
+        """Admit a batch of requests concurrently from the request pool and
+        return their Reports in input order.  ``workers<=1`` degrades to a
+        sequential loop (no pool round-trips).  Mixed cold/warm traffic is
+        fine: the middleware's per-signature locking guarantees one training
+        per cold signature no matter how the requests interleave."""
+        queries = list(queries)
+        workers = workers or self.DEFAULT_REQUEST_WORKERS
+        if workers <= 1 or len(queries) <= 1:
+            return [self.submit(q) for q in queries]
+        pool = self._pool(workers)
+        # the pool only grows (in-flight submits may hold the old one), so a
+        # smaller `workers` must be enforced here or a 4-wide pool would run
+        # a workers=2 batch 4 wide — and misreport every thread-count sweep.
+        # The gate is taken at SUBMISSION time (this thread blocks, not a
+        # pool worker): parking excess tasks inside workers would occupy
+        # pool threads and FIFO-starve a concurrent caller's batch
+        gate = threading.Semaphore(workers)
+        futures = []
+        for q in queries:
+            gate.acquire()
+            fut = pool.submit(self.submit, q)
+            fut.add_done_callback(lambda _f: gate.release())
+            futures.append(fut)
+        return [f.result() for f in futures]
+
+    def serve(self, queries: Iterable, workers: Optional[int] = None) -> Dict:
+        """Drive a traffic batch through ``submit_many`` and summarize it:
+        ``{"reports", "seconds" (wall), "rps", "workers"}`` — the
+        requests/sec figure ``benchmarks/fig_concurrent_serving.py``
+        tracks."""
+        t0 = time.perf_counter()
+        reports = self.submit_many(queries, workers=workers)
+        wall = time.perf_counter() - t0
+        return {"reports": reports, "seconds": wall,
+                "rps": len(reports) / max(wall, 1e-9),
+                "workers": workers or self.DEFAULT_REQUEST_WORKERS}

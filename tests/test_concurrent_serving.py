@@ -1,0 +1,384 @@
+"""Concurrent admission across the serving stack (ISSUE 4).
+
+Covers the tentpole's guarantees under multi-threaded traffic: the
+``QueryServer`` admits requests from N threads over mixed cold/warm
+signatures with exactly ONE training per signature (per-signature locking),
+consistent stats totals, and an uncorrupted plan cache; the ``Monitor``'s
+batched record queue loses nothing under a thread hammer; the ``CostModel``
+survives concurrent observe/predict; the auto-threading gate is now
+predicted-seconds-based with a learned per-host dispatch overhead; and
+eager triple-format intermediates stay numpy until a dense consumer needs
+the device.
+"""
+import threading
+from collections import Counter
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BigDAWG, ColumnarTable, CostModel, DenseTensor,
+                        Monitor, array, execute_plan, relational)
+from repro.core.cast import dense_to_columnar, dense_to_coo
+from repro.core.costmodel import _DEFAULT_DISPATCH_OVERHEAD_S
+from repro.core.engines import ENGINES
+from repro.core.executor import (HOST_TASK_GATE_FACTOR, _task_pred_seconds,
+                                 host_pool)
+from repro.core.middleware import _plan_from_key
+from repro.core.planner import Plan
+from repro.runtime import QueryServer
+
+
+def _bd(tmp_path=None, n=24, t=64, **kw):
+    monitor = Monitor(str(tmp_path / "monitor.json")) if tmp_path else None
+    bd = BigDAWG(monitor=monitor, train_plans=2, train_repeats=1, **kw)
+    rng = np.random.default_rng(0)
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(n, t)).astype(np.float32))), engine="dense_array")
+    return bd
+
+
+# four structurally-distinct query shapes = four distinct signatures
+_SHAPES = [
+    lambda: array.tfidf(array.haar(
+        relational.select("waves", column="value", lo=0.0), levels=2)),
+    lambda: array.count(relational.select("waves", column="value", lo=0.5)),
+    lambda: array.matmul(array.tfidf("waves"),
+                         array.transpose(array.tfidf("waves"))),
+    lambda: array.distinct(array.haar("waves", levels=1)),
+]
+
+
+# ---------------------------------------------------------------------------
+# (1) the stress test: N threads, mixed cold/warm signatures
+# ---------------------------------------------------------------------------
+
+def test_stress_mixed_cold_warm_traffic(tmp_path):
+    bd = _bd(tmp_path, explore_budget=0.5)
+    bd.replan_factor = float("inf")      # isolate admission from replanning
+    srv = QueryServer(bd)
+    n_warm = srv.warm([_SHAPES[0](), _SHAPES[1]()])    # 2 warm, 2 cold
+    assert n_warm == 2
+    warm_sigs = set(bd.plan_cache)
+
+    repeat = 4
+    queries = [build() for build in _SHAPES for _ in range(repeat)]
+    rng = np.random.default_rng(7)
+    order = rng.permutation(len(queries))
+    reports = srv.submit_many([queries[i] for i in order], workers=4)
+
+    # every request came back, in submission order
+    assert len(reports) == len(queries)
+    want_sigs = [bd.monitor and r.sig for r in reports]
+    assert all(want_sigs)
+
+    # exactly one training per COLD signature, zero for warm ones
+    trainings = Counter(r.sig for r in reports if r.mode == "training")
+    all_sigs = {r.sig for r in reports}
+    assert len(all_sigs) == len(_SHAPES)
+    for sig in all_sigs:
+        if sig in warm_sigs:
+            assert trainings[sig] == 0
+        else:
+            assert trainings[sig] == 1
+    # stats totals add up
+    assert srv.stats["requests"] == len(queries)
+    assert srv.stats["trainings"] == sum(trainings.values()) == 2
+    assert srv.stats["seconds"] > 0.0
+    n_production = sum(1 for r in reports if r.mode == "production")
+    assert n_production == len(queries) - 2
+
+    # the plan cache stayed uncorrupted: one entry per signature, every
+    # plan/alternate parseable and sized for its query
+    bd.drain_explorations()
+    n_nodes = {r.sig: len(q.nodes())
+               for q, r in zip([queries[i] for i in order], reports)}
+    assert set(bd.plan_cache) == all_sigs
+    for sig, entry in bd.plan_cache.items():
+        assert len(entry.plan.assignment) == n_nodes[sig]
+        _plan_from_key(entry.plan.key)               # raises if mangled
+        for alt in entry.alternates:
+            assert len(alt.assignment) == n_nodes[sig]
+    # ... and round-trips through its file
+    srv.persist()
+    bd2 = _bd(tmp_path)
+    assert set(bd2.plan_cache) == all_sigs
+    assert {s: e.plan.key for s, e in bd2.plan_cache.items()} == \
+        {s: e.plan.key for s, e in bd.plan_cache.items()}
+    # monitor settled: nothing pending once everything drained+flushed
+    bd.monitor.flush()
+    assert bd.monitor.pending_records() == 0
+
+
+def test_racing_cold_requests_train_once(tmp_path):
+    """All threads hit the SAME cold signature at once: per-signature
+    locking must collapse the stampede to one training."""
+    bd = _bd(tmp_path)
+    srv = QueryServer(bd)
+    reports = srv.submit_many([_SHAPES[0]() for _ in range(8)], workers=4)
+    modes = Counter(r.mode for r in reports)
+    assert modes["training"] == 1
+    assert modes["production"] == 7
+    assert srv.stats["trainings"] == 1
+    assert len(bd.plan_cache) == 1
+
+
+def test_submit_many_preserves_input_order(tmp_path):
+    bd = _bd(tmp_path)
+    srv = QueryServer(bd)
+    qs = [_SHAPES[i % 2]() for i in range(6)]
+    want = [len(q.nodes()) for q in qs]
+    reports = srv.submit_many(qs, workers=3)
+    got = [len(_plan_from_key(r.plan_key).assignment) for r in reports]
+    assert got == want
+
+
+def test_serve_summarizes_throughput(tmp_path):
+    bd = _bd(tmp_path)
+    srv = QueryServer(bd)
+    srv.warm([_SHAPES[1]()])
+    out = srv.serve([_SHAPES[1]() for _ in range(4)], workers=2)
+    assert len(out["reports"]) == 4
+    assert out["rps"] == pytest.approx(4 / out["seconds"], rel=1e-6)
+    assert out["workers"] == 2
+
+
+def test_failing_alternate_is_evicted_from_rotation(monkeypatch):
+    """A background trial that raises must not be rescheduled forever: it
+    charges no explore_seconds, so only eviction stops the serve path from
+    re-spawning a doomed task on every request."""
+    import warnings as warnings_mod
+    import repro.core.middleware as mw
+    bd = _bd(explore_budget=10.0)
+    bd.replan_factor = float("inf")
+    q = _SHAPES[0]()
+    rep = bd.execute(q, mode="training")
+    entry = bd.plan_cache[rep.sig]
+    assert entry.alternates
+    doomed = entry.alternates[entry.next_alt % len(entry.alternates)]
+    real = mw.execute_plan
+
+    def flaky(query, plan, *args, **kwargs):
+        if plan.key == doomed.key:
+            raise RuntimeError("alternate exploded")
+        return real(query, plan, *args, **kwargs)
+
+    monkeypatch.setattr(mw, "execute_plan", flaky)
+    with warnings_mod.catch_warnings(record=True):
+        warnings_mod.simplefilter("always")
+        rep2 = bd.execute(q, mode="production")
+        assert rep2.explored_key == doomed.key
+        bd.drain_explorations()
+    # evicted: the doomed alternate left the pool, nothing was credited
+    assert doomed.key not in {p.key
+                              for p in bd.plan_cache[rep.sig].alternates}
+    assert bd.explorations == 0 and bd.explore_seconds == 0.0
+
+
+# ---------------------------------------------------------------------------
+# (2) monitor: batched records survive a thread hammer
+# ---------------------------------------------------------------------------
+
+def test_monitor_batched_records_add_up_across_threads():
+    m = Monitor(decay=0.0)               # cumulative: n is the ground truth
+    threads, per_thread = 8, 50
+
+    def hammer(t):
+        for i in range(per_thread):
+            m.record("sig", "0:dense_array", 0.01, sizes={0: 64.0})
+
+    ts = [threading.Thread(target=hammer, args=(t,)) for t in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    stats = m.known_plans("sig")["0:dense_array"]    # flushes internally
+    assert stats.n == threads * per_thread
+    assert m.pending_records() == 0
+    assert m.sizes["sig"][0][1] == threads * per_thread
+
+
+def test_monitor_record_is_deferred_until_flush():
+    m = Monitor()
+    m.record("sig", "0:dense_array", 0.5)
+    assert m.pending_records() == 1
+    assert "sig" not in m.db                 # raw dict untouched pre-flush
+    key, stats, _ = m.best("sig")            # readers flush implicitly
+    assert key == "0:dense_array" and stats.n == 1
+    assert m.pending_records() == 0
+
+
+# ---------------------------------------------------------------------------
+# (3) cost model: concurrent observe/predict + learned dispatch overhead
+# ---------------------------------------------------------------------------
+
+def test_cost_model_concurrent_observe_and_predict():
+    cm = CostModel()
+    errors = []
+
+    def obs():
+        try:
+            for i in range(200):
+                cm.observe_op("dense_array", "matmul", 1e5, 1e-3)
+                cm.observe_cast("dense", "coo", 1e5, 1e-3)
+        except Exception as exc:            # pragma: no cover
+            errors.append(exc)
+
+    def pred():
+        try:
+            for i in range(200):
+                assert cm.op_seconds("dense_array", "matmul", 1e5) > 0
+                assert cm.cast_seconds("dense", "coo", 1e5) > 0
+        except Exception as exc:            # pragma: no cover
+            errors.append(exc)
+
+    ts = [threading.Thread(target=f) for f in (obs, obs, pred, pred)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors
+    assert cm.op_rate["dense_array"]["matmul"].n == 400
+
+
+def test_dispatch_overhead_learned_and_persisted(tmp_path):
+    p = tmp_path / "calib.json"
+    cm = CostModel(str(p))
+    assert cm.dispatch_overhead_s() == _DEFAULT_DISPATCH_OVERHEAD_S
+    cm.observe_dispatch(3e-4)
+    cm.observe_dispatch(5e-4)
+    assert cm.dispatch_overhead_s() == pytest.approx(4e-4)
+    cm.save()
+    cm2 = CostModel(str(p))
+    assert cm2.dispatch_overhead.n == 2
+    assert cm2.dispatch_overhead_s() == pytest.approx(4e-4)
+
+
+def test_auto_gate_measures_dispatch_overhead_on_first_concurrent_run():
+    bd = _bd()
+    q = array.matmul(array.tfidf(relational.select("waves", column="value",
+                                                   lo=0.0)),
+                     array.transpose(array.tfidf("waves")))
+    plan = Plan(tuple((i, "dense_array") for i in range(len(q.nodes()))))
+    execute_plan(q, plan, bd.catalog, concurrent=True,
+                 cost_model=bd.cost_model)
+    # the gate ran: the model now carries a real measured round trip
+    assert bd.cost_model.dispatch_overhead.n >= 1
+    assert bd.cost_model.dispatch_overhead_s() > 0.0
+
+
+def test_task_pred_seconds_scales_with_input_and_casts():
+    cm = CostModel()
+    bd = _bd(n=64, t=128)
+    small = relational.select("waves", column="value", lo=0.0)
+    # same op, but the input must first cast dense->columnar: predicted
+    # seconds must include the cast onto the columnar data model
+    t_dense = _task_pred_seconds(small, "dense_array", bd.catalog, {}, cm)
+    t_col = _task_pred_seconds(small, "columnar", bd.catalog, {}, cm)
+    assert t_col > t_dense
+    # tiny tasks sit below the threading floor; the floor is overhead-based
+    floor = HOST_TASK_GATE_FACTOR * cm.dispatch_overhead_s()
+    assert floor > 0.0
+
+
+# ---------------------------------------------------------------------------
+# (4) numpy-eager intermediates
+# ---------------------------------------------------------------------------
+
+def test_triple_casts_stay_numpy():
+    d = DenseTensor(jnp.asarray(np.arange(12, dtype=np.float32)
+                                .reshape(3, 4) + 1.0))
+    col = dense_to_columnar(d)
+    assert all(isinstance(v, np.ndarray) for v in col.columns.values())
+    assert isinstance(col.valid, np.ndarray)
+    coo = dense_to_coo(d)
+    assert isinstance(coo.rows, np.ndarray)
+    assert isinstance(coo.vals, np.ndarray)
+    assert col.nbytes > 0 and coo.nbytes > 0      # accounting still works
+
+
+def test_join_output_stays_numpy_and_correct():
+    a = ColumnarTable({"i": jnp.asarray([0, 1, 2], jnp.int32),
+                       "value": jnp.asarray([1.0, 2.0, 3.0])})
+    b = ColumnarTable({"i": jnp.asarray([1, 2, 3], jnp.int32),
+                       "value": jnp.asarray([10.0, 20.0, 30.0])})
+    j = ENGINES["columnar"].run("join", {"left_on": "i", "right_on": "i"},
+                                a, b)
+    assert all(isinstance(v, np.ndarray) for v in j.columns.values())
+    order = np.argsort(np.asarray(j.columns["l_i"]))
+    assert np.asarray(j.columns["l_i"])[order].tolist() == [1, 2]
+    np.testing.assert_allclose(np.asarray(j.columns["l_value"])[order],
+                               [2.0, 3.0])
+    np.testing.assert_allclose(np.asarray(j.columns["r_value"])[order],
+                               [10.0, 20.0])
+
+
+def test_registered_catalog_objects_are_homed_on_device():
+    bd = BigDAWG(train_plans=2)
+    rng = np.random.default_rng(0)
+    # registering a dense object under a columnar home casts it — and the
+    # long-lived catalog copy must be device arrays, not the numpy-eager
+    # intermediate the cast produced
+    bd.register("A", DenseTensor(jnp.asarray(
+        rng.normal(size=(8, 8)).astype(np.float32))), engine="columnar")
+    obj = bd.catalog["A"].obj
+    assert obj.kind == "columnar"
+    assert not any(isinstance(v, np.ndarray) for v in obj.columns.values())
+
+
+def test_numpy_columnar_pipeline_matches_device_pipeline():
+    """A full columnar pipeline over a numpy-born table must agree with the
+    same pipeline over a device-born table."""
+    rng = np.random.default_rng(3)
+    raw = rng.normal(size=(8, 16)).astype(np.float32)
+    q_np = ColumnarTable({"i": np.repeat(np.arange(8, dtype=np.int32), 16),
+                          "j": np.tile(np.arange(16, dtype=np.int32), 8),
+                          "value": raw.ravel()})
+    q_dev = ColumnarTable({c: jnp.asarray(v) for c, v in q_np.columns.items()})
+    eng = ENGINES["columnar"]
+    for op, attrs in (("select", {"column": "value", "lo": 0.0}),
+                      ("haar", {"levels": 2}),
+                      ("count", {}), ("distinct", {"column": "value"})):
+        out_np = eng.run(op, attrs, q_np)
+        out_dev = eng.run(op, attrs, q_dev)
+        if hasattr(out_np, "columns"):
+            for c in out_np.columns:
+                np.testing.assert_allclose(np.asarray(out_np.columns[c]),
+                                           np.asarray(out_dev.columns[c]),
+                                           rtol=1e-5)
+        else:
+            np.testing.assert_allclose(np.asarray(out_np.data),
+                                       np.asarray(out_dev.data), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# (5) concurrent execute_plan sanity (request threads share the host pool)
+# ---------------------------------------------------------------------------
+
+def test_execute_plan_from_many_threads_is_consistent():
+    bd = _bd()
+    q = _SHAPES[0]()
+    plan = Plan(tuple((i, "dense_array") for i in range(len(q.nodes()))))
+    ref = execute_plan(q, plan, bd.catalog)
+    results, errors = [], []
+
+    def run():
+        try:
+            r = execute_plan(q, plan, bd.catalog, concurrent=True,
+                             cost_model=bd.cost_model)
+            results.append(r)
+        except Exception as exc:            # pragma: no cover
+            errors.append(exc)
+
+    ts = [threading.Thread(target=run) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors and len(results) == 4
+    for r in results:
+        np.testing.assert_allclose(np.asarray(r.value.data),
+                                   np.asarray(ref.value.data),
+                                   rtol=1e-5, atol=1e-6)
+        assert r.n_casts == ref.n_casts
+    host_pool()          # pool survives (smoke: no shutdown mid-flight)
