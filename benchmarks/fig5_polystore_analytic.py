@@ -14,8 +14,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (BigDAWG, DenseTensor, array, enumerate_plans,
-                        execute_plan)
+from repro.core import DenseTensor, connect, execute_plan
 from repro.core.planner import Plan
 from repro.data import mimic_like_dataset
 from repro.kernels.ref import haar_ref
@@ -24,26 +23,27 @@ from benchmarks.common import bench, row
 LEVELS, NBINS, K = 6, 32, 11
 
 
-def build_query():
-    coeffs = array.haar("waves", levels=LEVELS)
-    hist = array.bin_hist(coeffs, nbins=NBINS, levels=LEVELS)
-    w = array.tfidf(hist)
-    return array.knn(w, "test_hist", k=K)
+def build_query(session):
+    arr = session.islands.array
+    coeffs = arr.haar("waves", levels=LEVELS)
+    hist = arr.bin_hist(coeffs, nbins=NBINS, levels=LEVELS)
+    w = arr.tfidf(hist)
+    return arr.knn(w, "test_hist", k=K)
 
 
-def make_bd(n_patients=600, n_samples=16384):
+def make_session(n_patients=600, n_samples=16384):
     ds = mimic_like_dataset(n_patients + 1, n_samples)
     waves = np.asarray(ds["waveforms"].data)
-    bd = BigDAWG(train_plans=36)
-    bd.register("waves", DenseTensor(jnp.asarray(waves[:-1])),
-                engine="dense_array")
+    s = connect(train_plans=36)
+    s.register("waves", DenseTensor(jnp.asarray(waves[:-1])),
+               engine="dense_array")
     # the test patient's tf-idf-ready histogram (computed once, dense path)
     c = haar_ref(jnp.asarray(waves[-1:]), LEVELS)
     from repro.core.engines import _da_bin_hist
     th = _da_bin_hist({"nbins": NBINS, "levels": LEVELS},
                       DenseTensor(c)).data
-    bd.register("test_hist", DenseTensor(th), engine="dense_array")
-    return bd, ds["labels"]
+    s.register("test_hist", DenseTensor(th), engine="dense_array")
+    return s, ds["labels"]
 
 
 def named_plans(q):
@@ -61,11 +61,11 @@ def named_plans(q):
 
 def main(n_patients: int = 600, n_samples: int = 16384):
     print("# fig5: name,us_per_call,derived", flush=True)
-    bd, labels = make_bd(n_patients, n_samples)
-    q = build_query()
+    s, labels = make_session(n_patients, n_samples)
+    q = build_query(s)
     times = {}
     for name, plan in named_plans(q).items():
-        t, res = bench(lambda p=plan: execute_plan(q, p, bd.catalog),
+        t, res = bench(lambda p=plan: execute_plan(q, p, s.catalog),
                        warmup=1, iters=3)
         times[name] = t
         row(f"fig5.{name}", t * 1e6)
@@ -77,10 +77,10 @@ def main(n_patients: int = 600, n_samples: int = 16384):
         f"hybrid_wins={hybrid_wins}")
 
     # training phase should discover a plan at least as good as our named ones
-    rep = bd.execute(q, mode="training")
-    row("fig5.training_winner", rep.seconds * 1e6, rep.plan_key)
-    rep2 = bd.execute(q, mode="production")
-    row("fig5.production", rep2.seconds * 1e6, rep2.plan_key)
+    res = s.execute(q, mode="training")
+    row("fig5.training_winner", res.seconds * 1e6, res.plan_key)
+    res2 = s.execute(q, mode="production")
+    row("fig5.production", res2.seconds * 1e6, res2.plan_key)
     return times
 
 

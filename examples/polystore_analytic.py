@@ -4,7 +4,9 @@ deterioration from ECG waveforms via Haar signatures + TF-IDF + kNN
 
 Trains on 600 synthetic MIMIC-like patients, classifies 64 held-out test
 patients under the training-phase-discovered plan, and reports accuracy plus
-the plan comparison of paper Fig. 5.
+the plan comparison of paper Fig. 5.  The analytic is issued through the
+``connect()`` session front door as a textual island query (see
+``repro.core.qlang``).
 
 Run: PYTHONPATH=src python examples/polystore_analytic.py [--patients 600]
 """
@@ -14,12 +16,17 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import BigDAWG, DenseTensor, array, execute_plan
+from repro.core import DenseTensor, connect
 from repro.core.engines import _da_bin_hist
 from repro.data import ecg_waveforms
 from repro.kernels.ref import haar_ref
 
 LEVELS, NBINS, K = 6, 32, 11
+
+# the analytic pipeline as one textual query (the same IR the attribute API
+# would build via session.islands.array)
+QUERY = (f"ARRAY(knn(tfidf(bin_hist(haar(waves, levels={LEVELS}), "
+         f"nbins={NBINS}, levels={LEVELS})), test_hist, k={K}))")
 
 
 def main():
@@ -33,9 +40,9 @@ def main():
     train_w, test_w = waves[:args.patients], waves[args.patients:]
     train_y, test_y = labels[:args.patients], labels[args.patients:]
 
-    bd = BigDAWG(train_plans=36)
-    bd.register("waves", DenseTensor(jnp.asarray(train_w)),
-                engine="dense_array")
+    session = connect(train_plans=36)
+    session.register("waves", DenseTensor(jnp.asarray(train_w)),
+                     engine="dense_array")
 
     # precompute each test patient's tf-idf-ready histogram (same features)
     test_hists = _da_bin_hist({"nbins": NBINS, "levels": LEVELS},
@@ -46,15 +53,11 @@ def main():
     t0 = time.perf_counter()
     plan_key = None
     for i in range(args.test):
-        bd.register("test_hist", DenseTensor(test_hists[i:i + 1]),
-                    engine="dense_array")
-        q = array.knn(
-            array.tfidf(array.bin_hist(array.haar("waves", levels=LEVELS),
-                                       nbins=NBINS, levels=LEVELS)),
-            "test_hist", k=K)
-        rep = bd.execute(q)          # training once, production thereafter
-        plan_key = rep.plan_key
-        neighbors = np.asarray(rep.result.data)[0]
+        session.register("test_hist", DenseTensor(test_hists[i:i + 1]),
+                         engine="dense_array")
+        res = session.execute(QUERY)  # training once, production thereafter
+        plan_key = res.plan_key
+        neighbors = np.asarray(res.value.data)[0]
         pred = int(np.round(train_y[neighbors].mean()))
         correct += int(pred == test_y[i])
     dt = time.perf_counter() - t0

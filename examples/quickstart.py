@@ -3,13 +3,13 @@ through the adaptive planning loop (see docs/PLANNER_LOOP.md).
 
 This is the paper's own example (§III-C-2):
     ARRAY( multiply( RELATIONAL( select * from A ... ), B ) )
-The RELATIONAL scope runs on the columnar engine, the ARRAY scope on the
-dense engine, and the middleware inserts the Cast between them.  The second
-half restarts the middleware on the same state files — a warm restart serves
-production with zero plan enumerations, and the budgeted exploration path
-keeps trying the k-best DP's runner-up plans while serving the winner
-(``stats["explorations"]``); ``stats["replans"]`` counts online re-plans
-from predicted/measured divergence.
+written in the paper's textual syntax and executed through the
+``connect()``/``Session`` front door: the RELATIONAL scope runs on the
+columnar engine, the ARRAY scope on the dense engine, and the planner prices
+and places the Cast at the island seam.  The second half restarts the
+session on the same state files — a warm restart serves production with zero
+plan enumerations — and drives concurrent traffic through a bounded-admission
+``QueryServer``.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,58 +19,56 @@ import os
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import BigDAWG, DenseTensor, Monitor, array, relational
-from repro.runtime import QueryServer
+from repro.core import DenseTensor, connect
 
 state_dir = tempfile.mkdtemp(prefix="bigdawg-quickstart-")
 rng = np.random.default_rng(0)
 
+# the paper's cross-island query, in the paper's textual surface: a nested
+# island block is a SCOPE, the seam between blocks is a CAST the planner
+# places.  (s.parse(QUERY) shows the compiled PolyOp IR; the attribute API
+# — s.islands.array.matmul(s.islands.array.scope(...), "B") — builds the
+# signature-identical tree.)
+QUERY = "ARRAY(matmul(RELATIONAL(select(A, column=value, lo=-0.5, hi=2.0)), B))"
 
-def make_bigdawg():
-    """Middleware wired to persistent state files (monitor DB, calibration
-    and plan cache ride side by side under state_dir)."""
-    bd = BigDAWG(monitor=Monitor(os.path.join(state_dir, "monitor.json")),
-                 explore_budget=0.5)       # spend <=50% of serve time trying
-    bd.register("A", DenseTensor(jnp.asarray(                  # alternates
+
+def make_session():
+    """Session wired to persistent state files (monitor DB, calibration and
+    plan cache ride side by side under state_dir)."""
+    s = connect(os.path.join(state_dir, "monitor.json"),
+                explore_budget=0.5)        # spend <=50% of serve time trying
+    s.register("A", DenseTensor(jnp.asarray(                   # alternates
         rng.normal(size=(256, 256)).astype(np.float32))), engine="columnar")
-    bd.register("B", DenseTensor(jnp.asarray(
+    s.register("B", DenseTensor(jnp.asarray(
         rng.normal(size=(256, 64)).astype(np.float32))), engine="dense_array")
-    return bd
-
-
-def query():
-    # the paper's cross-island query (rebuilt fresh each time: signatures
-    # make structurally-identical queries share plans and history)
-    return array.matmul(relational.select("A", column="value",
-                                          lo=-0.5, hi=2.0), "B")
+    return s
 
 
 # -- first process: training phase, then persist ----------------------------
-bd = make_bigdawg()
-report = bd.execute(query(), mode="training")    # first time: explore plans
-print(f"training phase: tried {report.plans_tried} plans, "
-      f"winner={report.plan_key} in {report.seconds*1e3:.1f} ms")
-srv = QueryServer(bd)
-srv.persist()                                    # flush monitor/calib/plans
+s = make_session()
+res = s.execute(QUERY, mode="training")          # first time: explore plans
+print(f"training phase: tried {res.report.plans_tried} plans "
+      f"in {res.seconds*1e3:.1f} ms")
+print(f"islands: {res.islands}")
+print(f"plan:    {res.describe()}")
+s.persist()                                      # flush monitor/calib/plans
 
 # -- second process (simulated): warm restart, production + exploration -----
-srv2 = QueryServer(make_bigdawg())               # reads the persisted state
+s2 = make_session()                              # reads the persisted state
+srv = s2.server(max_pending=64)                  # bounded admission
 for _ in range(4):
-    report = srv2.submit(query())                # production: cached plan
-print(f"production phase: plan={report.plan_key} "
-      f"in {report.seconds*1e3:.1f} ms (cast {report.cast_bytes/1e6:.1f} MB)")
-print(f"after warm restart: trainings={srv2.stats['trainings']} "
-      f"explorations={srv2.stats['explorations']} "
-      f"replans={srv2.stats['replans']}")
-print("result:", report.result.data.shape, report.result.data.dtype)
+    res = s2.execute(QUERY)                      # production: cached plan
+print(f"production phase: {res.seconds*1e3:.1f} ms "
+      f"(cast {res.cast_bytes/1e6:.1f} MB, mode={res.mode})")
+print("result:", res.value.data.shape, res.value.data.dtype)
 
 # -- concurrent admission: the same traffic from 4 client threads ------------
 # submit_many drives the server's request pool; the middleware's
 # per-signature locking would train a cold signature exactly once even if
-# every thread raced it, and exploration trials run off-path on the host
-# pool (stats["seconds"] contains zero exploration time).
-out = srv2.serve([query() for _ in range(8)], workers=4)
-srv2.bd.drain_explorations()                     # let background trials land
+# every thread raced it, and with max_pending set, overflow beyond the bound
+# is shed (stats["shed"]) instead of queued without limit.
+out = srv.serve([s2.parse(QUERY) for _ in range(8)], workers=4)
+srv.bd.drain_explorations()                      # let background trials land
 print(f"concurrent serve: {out['rps']:.1f} requests/sec from "
-      f"{out['workers']} threads "
-      f"(explorations so far: {srv2.stats['explorations']})")
+      f"{out['workers']} threads (shed: {out['shed']}, "
+      f"explorations so far: {srv.stats['explorations']})")

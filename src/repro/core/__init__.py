@@ -1,9 +1,11 @@
 # The paper's primary contribution — the BigDAWG polystore middleware,
 # adapted to TPU execution regimes (see DESIGN.md §2).
 from repro.core.tables import DenseTensor, ColumnarTable, COOMatrix, StreamBuffer
-from repro.core.ops import PolyOp, Ref
+from repro.core.ops import PolyOp, Ref, SCOPE_OP
 from repro.core.engines import ENGINES, Engine
-from repro.core.islands import ISLANDS, array, relational, text, stream, degenerate
+from repro.core.islands import (ISLANDS, ISLAND_KIND, array, relational, text,
+                                stream, degenerate, island_kind, scope,
+                                scope_candidates)
 from repro.core.signature import signature, signature_text
 from repro.core.costmodel import (CostModel, default_calibration_path,
                                   kind_nbytes_from_logical,
@@ -17,11 +19,14 @@ from repro.core.executor import (execute_plan, ExecutionResult, topo_levels,
                                  host_pool)
 from repro.core.middleware import (BigDAWG, CachedPlan, Report,
                                    default_plan_cache_path)
+from repro.core.qlang import QueryParseError, bigdawg
+from repro.core.api import IslandNamespace, Result, Session, connect
 
 __all__ = [
     "DenseTensor", "ColumnarTable", "COOMatrix", "StreamBuffer",
-    "PolyOp", "Ref", "ENGINES", "Engine", "ISLANDS",
-    "array", "relational", "text", "stream", "degenerate",
+    "PolyOp", "Ref", "SCOPE_OP", "ENGINES", "Engine", "ISLANDS",
+    "ISLAND_KIND", "array", "relational", "text", "stream", "degenerate",
+    "island_kind", "scope", "scope_candidates",
     "signature", "signature_text", "CostModel", "default_calibration_path",
     "kind_nbytes_from_logical", "container_kind_nbytes", "observed_shape",
     "Plan", "enumerate_plans", "find_containers", "plan_containers",
@@ -29,4 +34,6 @@ __all__ = [
     "estimate_sizes_shapes", "Monitor", "usage_snapshot", "execute_plan",
     "ExecutionResult", "topo_levels", "host_pool", "BigDAWG", "CachedPlan",
     "Report", "default_plan_cache_path",
+    "QueryParseError", "bigdawg", "IslandNamespace", "Result", "Session",
+    "connect",
 ]

@@ -1,0 +1,190 @@
+"""The user-facing polystore API — ``connect() -> Session``.
+
+This is the front door the paper's client surface implies (§III: applications
+speak to the middleware, which spans islands): one object that owns the
+middleware stack (catalog + planner + monitor + executor + plan cache),
+exposes the islands, executes queries — programmatic ``PolyOp`` trees, the
+textual ``BIGDAWG(ISLAND(...))`` syntax, or a mix — and returns structured
+``Result``s instead of the middleware's raw ``Report``.
+
+    from repro.core import connect, DenseTensor
+
+    s = connect("state/monitor.json", explore_budget=0.5)
+    s.register("A", table_a, engine="columnar")
+    s.register("B", table_b, engine="columnar")
+    s.register("W", DenseTensor(w), engine="dense_array")
+
+    # textual (the demo-paper surface) ...
+    res = s.execute("RELATIONAL(join(A, B, left_on=key, right_on=key)) "
+                    "|> ARRAY(matmul(_, W))")
+    # ... or programmatic, with explicit island boundaries
+    isl = s.islands
+    q = isl.array.matmul(isl.array.scope(
+            isl.relational.join("A", "B", left_on="key", right_on="key")),
+            "W")
+    res = s.execute(q)
+
+    res.value               # the container, in the root island's data model
+    res.islands             # ('relational', 'array') — every island involved
+    res.provenance          # ('relational.join@columnar',
+                            #  'array.scope@dense_array',
+                            #  'array.matmul@dense_array')
+    res.per_node_seconds    # post-order position -> measured seconds
+    res.cast_bytes          # bytes the migrator moved across boundaries
+
+    srv = s.server(max_pending=64)   # bounded-admission QueryServer
+
+``BigDAWG.execute`` (returning the raw ``Report``) and the module-level
+island objects (``repro.core.array`` etc.) remain supported as the low-level
+API — ``Session`` is a veneer over them, so both surfaces share one catalog,
+one plan cache, and one monitor history.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core import islands as islands_mod
+from repro.core import qlang
+from repro.core.engines import ENGINES
+from repro.core.middleware import BigDAWG, Report, _plan_from_key
+from repro.core.monitor import Monitor
+from repro.core.ops import PolyOp
+
+
+class IslandNamespace:
+    """The islands a session can scope query fragments to — handles for
+    ``session.islands.relational / .array / .text / .stream`` plus
+    ``.degenerate(engine)`` (full power of one engine, zero location
+    transparency, paper §III-B)."""
+
+    def __init__(self):
+        self.array = islands_mod.array
+        self.relational = islands_mod.relational
+        self.text = islands_mod.text
+        self.stream = islands_mod.stream
+
+    @staticmethod
+    def degenerate(engine: str) -> islands_mod.Island:
+        isl = islands_mod.ISLANDS.get(f"degenerate:{engine}")
+        if isl is None:
+            raise ValueError(f"no degenerate island for engine {engine!r}; "
+                             f"engines: {', '.join(sorted(ENGINES))}")
+        return isl
+
+
+@dataclass(frozen=True)
+class Result:
+    """A structured query result: the value plus full plan provenance.
+
+    ``provenance`` names, per post-order node, the island that governed it,
+    the operator, and the engine the planner placed it on —
+    ``"relational.join@columnar"`` — so a cross-island query's answer says
+    exactly which islands took part (``islands``) and where every seam was
+    cast.  ``per_node_seconds`` is keyed by post-order position (the same
+    stable key plan keys and size feedback use)."""
+    value: Any
+    sig: str
+    mode: str                      # "training" | "production"
+    seconds: float
+    cast_bytes: float
+    plan_key: str
+    provenance: Tuple[str, ...]    # per node: "island.op@engine"
+    islands: Tuple[str, ...]       # distinct islands, first-appearance order
+    per_node_seconds: Dict[int, float] = field(default_factory=dict)
+    report: Optional[Report] = None    # the raw middleware report
+
+    def describe(self) -> str:
+        return " -> ".join(self.provenance)
+
+
+def _result_from_report(query: PolyOp, rep: Report) -> Result:
+    nodes = query.nodes()
+    amap = dict(_plan_from_key(rep.plan_key).assignment)
+    provenance = tuple(f"{n.island}.{n.op}@{amap[i]}"
+                       for i, n in enumerate(nodes))
+    seen: Dict[str, None] = {}
+    for n in nodes:
+        seen.setdefault(n.island)
+    return Result(value=rep.result, sig=rep.sig, mode=rep.mode,
+                  seconds=rep.seconds, cast_bytes=rep.cast_bytes,
+                  plan_key=rep.plan_key, provenance=provenance,
+                  islands=tuple(seen), per_node_seconds=rep.per_node_seconds,
+                  report=rep)
+
+
+class Session:
+    """A connection to one middleware instance (see module docstring).
+
+    Thread-safe to the same degree as the underlying ``BigDAWG``: ``execute``
+    may be called from many threads (per-signature locking trains a cold
+    signature exactly once); for managed concurrent admission use
+    ``server()``."""
+
+    def __init__(self, bigdawg: BigDAWG):
+        self.bigdawg = bigdawg
+        self.islands = IslandNamespace()
+
+    @property
+    def catalog(self):
+        return self.bigdawg.catalog
+
+    def register(self, name: str, obj, engine: str) -> "Session":
+        """Home a container on an engine under ``name`` (casting it to the
+        engine's native data model if needed).  Returns the session, so
+        registrations chain."""
+        self.bigdawg.register(name, obj, engine)
+        return self
+
+    def parse(self, text: str) -> PolyOp:
+        """Compile the textual ``BIGDAWG(ISLAND(...))`` / ``|>`` syntax to
+        the PolyOp IR without executing it (``qlang.bigdawg``)."""
+        return qlang.bigdawg(text)
+
+    def execute(self, query: Union[PolyOp, str], mode: str = "auto") -> Result:
+        """Plan and run a query — a ``PolyOp`` tree or a textual qlang
+        string — and return a structured ``Result``.  ``mode`` follows the
+        paper's protocol: ``"training"`` enumerates and measures candidate
+        plans, ``"production"`` serves from the signature-keyed plan cache,
+        ``"auto"`` picks by signature history."""
+        if isinstance(query, str):
+            query = qlang.bigdawg(query)
+        return _result_from_report(query, self.bigdawg.execute(query, mode))
+
+    def server(self, max_pending: Optional[int] = None):
+        """A ``QueryServer`` over this session's middleware — concurrent
+        admission (``submit_many``/``serve``) with optional bounded
+        admission: with ``max_pending=N``, batch overflow beyond N in-flight
+        requests is shed (``stats["shed"]``) instead of queued."""
+        from repro.runtime.server import QueryServer
+        return QueryServer(self.bigdawg, max_pending=max_pending)
+
+    def persist(self) -> None:
+        """Flush monitor DB, calibration and plan cache (waiting for
+        in-flight background explorations first) so a later ``connect`` to
+        the same path starts warm."""
+        self.bigdawg.persist()
+
+
+def connect(state_path: Optional[str] = None, *,
+            monitor: Optional[Monitor] = None,
+            bigdawg: Optional[BigDAWG] = None,
+            **bigdawg_kwargs) -> Session:
+    """Open a polystore session.
+
+    ``state_path`` — optional monitor-DB path; the calibration file and the
+    plan cache ride beside it (``<root>.calib.json`` / ``<root>.plans.json``),
+    so a second ``connect`` to the same path serves previously-trained
+    signatures warm.  ``monitor`` passes a pre-built Monitor instead (e.g.
+    with a custom ``decay``); ``bigdawg`` wraps an existing middleware
+    instance as-is.  Remaining keyword arguments go to ``BigDAWG`` —
+    ``train_plans``, ``explore_budget``, ``calibrate``, ``replan_factor``...
+    """
+    if bigdawg is not None:
+        if state_path or monitor or bigdawg_kwargs:
+            raise ValueError("bigdawg= wraps an existing instance; it cannot "
+                             "be combined with state_path/monitor/kwargs")
+        return Session(bigdawg)
+    if monitor is None and state_path is not None:
+        monitor = Monitor(state_path)
+    return Session(BigDAWG(monitor=monitor, **bigdawg_kwargs))

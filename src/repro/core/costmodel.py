@@ -257,6 +257,13 @@ class CostModel:
     def op_seconds(self, engine: str, op: str, elems: float) -> float:
         """Predicted seconds for `op` on `engine` over `elems` input elements."""
         from repro.core.engines import ENGINES
+        from repro.core.ops import SCOPE_OP
+        if op == SCOPE_OP:
+            # an island boundary is the identity on its input — all of its
+            # real cost is the inter-island cast, which the planner charges
+            # on the boundary edge via cast_seconds (never here, or the cast
+            # would be double-counted)
+            return 0.0
         rate = None
         with self._lock:
             per_op = self.op_rate.get(engine)

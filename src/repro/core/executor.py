@@ -64,13 +64,14 @@ import jax
 from repro.core.costmodel import (CostModel, container_elems, observed_nbytes,
                                   observed_shape)
 from repro.core.engines import ENGINES
+from repro.core.islands import ISLAND_KIND, island_kind
 from repro.core.migrator import Migrator
-from repro.core.ops import PolyOp, Ref
+from repro.core.ops import SCOPE_OP, PolyOp, Ref
 from repro.core.planner import Plan
 
-# the data model a query's result is delivered in = its root island's model
-ISLAND_KIND = {"array": "dense", "relational": "columnar", "text": "coo",
-               "stream": "stream"}
+# (ISLAND_KIND — the data model a query's result is delivered in, i.e. its
+# root island's model — is re-exported from islands.py, its canonical home
+# since island boundaries became first-class IR nodes)
 
 # default size of the shared host pool; override per call via host_workers=
 # or process-wide via REPRO_HOST_WORKERS
@@ -253,10 +254,7 @@ def _gather_args(node: PolyOp, eng, catalog, values, migrator):
 def _deliver(query: PolyOp, result):
     """Deliver in the root island's data model (location transparency: the
     caller sees the island model regardless of which engine produced it)."""
-    if query.island in ISLAND_KIND:
-        want = ISLAND_KIND[query.island]
-    else:                                    # degenerate:<engine>
-        want = ENGINES[query.island.split(":", 1)[1]].kind
+    want = island_kind(query.island)
     if getattr(result, "kind", want) != want:
         from repro.core import cast as castmod
         result = castmod.cast(result, want)
@@ -284,11 +282,17 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
         one level overlap on the pool.  Deliberately does NOT block on the
         result: XLA-backed ops stay async (dispatch returns immediately;
         blocking here would serialize the device pipeline behind each
-        worker), and the level boundary blocks everything once."""
+        worker), and the level boundary blocks everything once.
+
+        An island-boundary (scope) node IS its input migration: the cast
+        onto the boundary engine's data model happens in ``_gather_args``
+        (migrator-routed, byte-accounted), and the node itself is the
+        identity."""
         eng = ENGINES[amap[node.uid]]
         tn = time.perf_counter()
         args = _gather_args(node, eng, catalog, values, migrator)
-        out = eng.run(node.op, node.attrs, *args)
+        out = args[0] if node.op == SCOPE_OP \
+            else eng.run(node.op, node.attrs, *args)
         per_node[node.uid] = time.perf_counter() - tn
         return node.uid, out
 
@@ -337,14 +341,25 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
     else:
         for node in query.nodes():          # post-order
             eng = ENGINES[amap[node.uid]]
+            # per_node covers migration + op (same meaning as concurrent
+            # mode's run_node timing); node_obs — what calibrates op rates —
+            # starts after the gather, so learned throughputs stay pure op
+            tg = time.perf_counter()
             args = _gather_args(node, eng, catalog, values, migrator)
             elems = sum(container_elems(a) for a in args)
             tn = time.perf_counter()
-            out = eng.run(node.op, node.attrs, *args)
-            _block(out)
-            dt = time.perf_counter() - tn
-            per_node[node.uid] = dt
-            node_obs.append((eng.name, node.op, elems, dt))
+            if node.op == SCOPE_OP:
+                # island boundary: the migration above WAS the work (timed
+                # per hop by the migrator); the node is the identity, so no
+                # op observation — a ~0s "scope" rate would poison the
+                # engine-level mean the cost model falls back to
+                out = args[0]
+            else:
+                out = eng.run(node.op, node.attrs, *args)
+                _block(out)
+                node_obs.append((eng.name, node.op, elems,
+                                 time.perf_counter() - tn))
+            per_node[node.uid] = time.perf_counter() - tg
             values[node.uid] = out
 
     result = _deliver(query, values[query.uid])

@@ -5,13 +5,26 @@ queries by calling island operators; the island tag on each node is its
 *scope*, which tells the planner which shims (engine lowerings) are legal.
 Degenerate islands expose a single engine's full op set (semantic
 completeness at the price of location transparency).
+
+Cross-island queries are expressed with ``scope(island, subtree)`` (paper
+§III: the SCOPE marker says which island's semantics govern a subtree, the
+CAST moves data across the boundary): the returned boundary node delivers
+``subtree``'s result in ``island``'s data model.  The planner prices the
+boundary cast with the calibrated per-pair bandwidths and the executor runs
+it through the migrator — see ``ops.SCOPE_OP``.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Set, Union
+from typing import Dict, Sequence, Set, Tuple, Union
 
 from repro.core.engines import ENGINES
-from repro.core.ops import PolyOp, Ref
+from repro.core.ops import SCOPE_OP, PolyOp, Ref
+
+# the data model a query scoped to an island is delivered in (paper §III-B:
+# each island presents one data model regardless of which member engine ran
+# the fragment).  Degenerate islands resolve through ``island_kind``.
+ISLAND_KIND = {"array": "dense", "relational": "columnar", "text": "coo",
+               "stream": "stream"}
 
 
 def _as_input(x):
@@ -30,17 +43,29 @@ class Island:
     def candidates(self, op: str) -> Sequence[str]:
         return self.ops[op]
 
+    def _no_such_op(self, op: str) -> str:
+        avail = ", ".join(sorted(self.__dict__.get("ops", {})))
+        return (f"island {self.name!r} has no operator {op!r}; "
+                f"available operators: {avail}")
+
     def _build(self, op: str, *inputs, **attrs) -> PolyOp:
         if op not in self.ops:
-            raise ValueError(f"island {self.name!r} has no operator {op!r}")
+            raise ValueError(self._no_such_op(op))
         return PolyOp(op=op, island=self.name,
                       inputs=tuple(_as_input(i) for i in inputs), attrs=attrs)
+
+    def scope(self, subtree) -> PolyOp:
+        """``scope(self.name, subtree)`` — deliver a (possibly foreign-island)
+        subtree in this island's data model."""
+        return scope(self, subtree)
 
     def __getattr__(self, op):
         if op.startswith("_"):
             raise AttributeError(op)
         if op not in self.__dict__.get("ops", {}):
-            raise AttributeError(f"island {self.name!r}: no operator {op!r}")
+            # list the vocabulary: the error is how users discover what an
+            # island can do, so hiding the op set behind a bare name is cruel
+            raise AttributeError(self._no_such_op(op))
         return lambda *inputs, **attrs: self._build(op, *inputs, **attrs)
 
 
@@ -110,3 +135,47 @@ for _e in ENGINES:
 
 def island_of(node: PolyOp) -> Island:
     return ISLANDS[node.island]
+
+
+# ---------------------------------------------------------------------------
+# island boundaries (paper §III: SCOPE marks the governing island, CAST moves
+# the data) — the cross-island half of the IR
+# ---------------------------------------------------------------------------
+
+def island_kind(island_name: str) -> str:
+    """The data model an island delivers results in (degenerate islands
+    deliver their engine's native kind)."""
+    if island_name in ISLAND_KIND:
+        return ISLAND_KIND[island_name]
+    if island_name.startswith("degenerate:"):
+        return ENGINES[island_name.split(":", 1)[1]].kind
+    raise ValueError(f"unknown island {island_name!r}; available: "
+                     f"{', '.join(sorted(ISLANDS))}")
+
+
+def scope_candidates(island_name: str) -> Tuple[str, ...]:
+    """Engines a boundary node may materialize on: the target island's
+    data-model-native members (a degenerate island's single engine).  The
+    planner restricts scope nodes to these, so the DP's cast edge into the
+    boundary IS the inter-island cast."""
+    if island_name.startswith("degenerate:"):
+        return (island_name.split(":", 1)[1],)
+    kind = island_kind(island_name)
+    return tuple(e.name for e in ENGINES.values() if e.kind == kind)
+
+
+def scope(island: Union[Island, str], subtree) -> PolyOp:
+    """Explicit island boundary: deliver ``subtree``'s result in ``island``'s
+    data model (paper §III's SCOPE/CAST seam).
+
+    The returned node is the identity on logical content; the planner prices
+    the boundary cast from the subtree's engine kind to the island's model
+    (multi-hop routed over the calibrated bandwidths, charged per hop) and
+    the executor performs it through the migrator.  ``island`` may be an
+    ``Island`` or its name (``"array"``, ``"degenerate:dense_array"``, ...).
+    """
+    name = island.name if isinstance(island, Island) else str(island)
+    if name not in ISLANDS:
+        raise ValueError(f"unknown island {name!r}; available: "
+                         f"{', '.join(sorted(ISLANDS))}")
+    return PolyOp(op=SCOPE_OP, island=name, inputs=(_as_input(subtree),))

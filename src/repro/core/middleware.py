@@ -54,7 +54,7 @@ from __future__ import annotations
 import os
 import threading
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.costmodel import CostModel, default_calibration_path
@@ -138,6 +138,17 @@ class Report:
     # the host pool; drain_explorations() waits for its measurement)
     explored: bool = False
     explored_key: str = ""   # which alternate (empty when explored is False)
+    # post-order position -> measured seconds of that node in the served run
+    # (position-keyed like plan keys and size feedback, so it survives query
+    # rebuilds; the Session API surfaces it as Result.per_node_seconds)
+    per_node_seconds: Dict[int, float] = field(default_factory=dict)
+
+
+def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
+    """Re-key an ExecutionResult's uid-keyed per-node timings by post-order
+    position (shared subtrees collapse to their one executed timing)."""
+    return {pos: res.per_node_seconds.get(n.uid, 0.0)
+            for pos, n in enumerate(query.nodes())}
 
 
 class BigDAWG:
@@ -320,7 +331,8 @@ class BigDAWG:
         self.save_plan_cache()
         return Report(best.value, best.plan.key, "training", best.seconds,
                       best.cast_bytes, sig, plans_tried=len(ranked),
-                      predicted_s=predicted)
+                      predicted_s=predicted,
+                      per_node_seconds=_pos_seconds(query, best))
 
     def _diverged(self, predicted: float, measured: float) -> bool:
         """The online re-planner's divergence policy: prediction and
@@ -472,7 +484,8 @@ class BigDAWG:
         return Report(res.value, plan_key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
                       predicted_s=entry.predicted_s,
-                      explored=bool(explored_key), explored_key=explored_key)
+                      explored=bool(explored_key), explored_key=explored_key,
+                      per_node_seconds=_pos_seconds(query, res))
 
     def _maybe_explore(self, query: PolyOp, sig: str,
                        usage: Dict[str, float]) -> str:
@@ -569,6 +582,17 @@ class BigDAWG:
         with self._stats_lock:
             self.explore_seconds = 0.0
             self.serve_seconds = 0.0
+
+    def persist(self) -> None:
+        """Flush all persistent state — monitor DB, cost-model calibration
+        and plan cache — to their side-by-side files, waiting for in-flight
+        background explorations first so their measurements are included
+        (no-ops for components constructed without a path).  The one flush
+        sequence `Session.persist` and `QueryServer.persist` both call."""
+        self.drain_explorations()
+        self.monitor.save()
+        self.cost_model.save()
+        self.save_plan_cache()
 
     def drain_explorations(self, timeout: Optional[float] = None) -> int:
         """Block until all in-flight background exploration trials finish

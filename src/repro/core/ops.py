@@ -4,6 +4,15 @@ A query is a DAG of PolyOp nodes; leaves are ``Ref``s into the middleware
 catalog (named, engine-homed objects), mirroring the paper's
 ``ARRAY(multiply(RELATIONAL(select * from A), B))`` example where each scope
 tag names the island interpreting that fragment.
+
+Island boundaries are first-class: a node with ``op == SCOPE_OP`` (built by
+``islands.scope(island, subtree)`` or a nested island block in the textual
+``qlang`` syntax) marks the point where one island consumes a subtree from
+another.  A scope node is semantically the identity on its input's *logical*
+content, but it pins the payload to the target island's data model — the
+planner restricts its engine candidates to that model's member engines and
+charges the inter-island cast on the boundary edge (multi-hop routed, sized
+per hop), and the executor materializes the cast through the migrator.
 """
 from __future__ import annotations
 
@@ -12,6 +21,10 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Tuple, Union
 
 _ids = itertools.count()
+
+# operator name of the island-boundary node (see module docstring); the
+# user-facing builder is ``islands.scope``, which validates the island name
+SCOPE_OP = "scope"
 
 
 @dataclass(frozen=True)

@@ -23,9 +23,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.costmodel import (CostModel, container_elems,
                                   container_kind_nbytes,
                                   kind_nbytes_from_logical)
-from repro.core.islands import ISLANDS
+from repro.core.islands import ISLANDS, scope_candidates
 from repro.core.engines import ENGINES
-from repro.core.ops import PolyOp, Ref
+from repro.core.ops import SCOPE_OP, PolyOp, Ref
 
 _DEFAULT_COST_MODEL: Optional[CostModel] = None
 
@@ -62,6 +62,12 @@ class Plan:
 
 
 def node_candidates(node: PolyOp) -> Sequence[str]:
+    if node.op == SCOPE_OP:
+        # an island boundary materializes on the target island's model-native
+        # engines only — the DP's cast edge into this node is therefore the
+        # inter-island cast, priced like any other edge (multi-hop routed,
+        # sized per hop) by cast_seconds
+        return scope_candidates(node.island)
     return ISLANDS[node.island].candidates(node.op)
 
 
@@ -181,7 +187,9 @@ def estimate_sizes_shapes(query: PolyOp, catalog=None,
         elif op == "project":
             out_b = in_bytes[0] * 0.5
         # select/haar/tfidf/scale/add/join/groupby_sum/ingest/to_array:
-        # output ~ input size (the max-input default)
+        # output ~ input size (the max-input default).  scope (island
+        # boundary) is the identity on logical content — the single-input
+        # default already passes bytes and shape through unchanged.
 
         if measured is not None and pos in measured:
             out_b = measured[pos]        # observation beats any bytes rule

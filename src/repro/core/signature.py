@@ -1,6 +1,12 @@
 """Query signatures (paper §III-C-3): identity of the cross-engine remainder,
 derived from (a) DAG structure, (b) referenced objects, (c) binned constants.
 
+Island boundaries are part of identity: a ``scope`` node (``ops.SCOPE_OP``)
+canonicalizes as ``<island>.scope[](<subtree>)``, so a query that pins a
+subtree to another island's data model never shares history with its
+unscoped sibling — they plan and execute differently (the boundary cast),
+so they must not share monitor means or cached plans.
+
 The same information a jit cache key carries — deliberately — so the
 tensor-plan layer reuses this module for compiled-step plan caching.
 """

@@ -1,6 +1,6 @@
 from repro.runtime.trainer import Trainer, SimulatedFailure
-from repro.runtime.server import BatchServer, QueryServer
+from repro.runtime.server import BatchServer, QueryServer, Shed
 from repro.runtime.fault import FailureInjector, StragglerDetector
 
 __all__ = ["Trainer", "SimulatedFailure", "BatchServer", "QueryServer",
-           "FailureInjector", "StragglerDetector"]
+           "Shed", "FailureInjector", "StragglerDetector"]

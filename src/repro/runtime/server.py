@@ -41,11 +41,21 @@ import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclass(frozen=True)
+class Shed:
+    """A request rejected by bounded admission (``QueryServer(max_pending=N)``
+    with N requests already in flight): the query was never executed.  Takes
+    the rejected request's slot in ``submit_many``'s in-order result list so
+    callers can retry exactly what was dropped."""
+    query: Any
+    reason: str = "max_pending"
 
 
 @dataclass
@@ -167,15 +177,30 @@ class QueryServer:
     Thread-safe: ``submit`` may be called from many threads at once (see the
     module docstring); ``submit_many``/``serve`` spin the requests over the
     server's own request pool.
+
+    **Bounded admission.**  With ``max_pending=N``, batch admission
+    (``submit_many``/``serve``) keeps at most N requests in flight at once:
+    a request arriving while N are outstanding is *shed* — its result slot
+    holds a ``Shed`` marker, ``stats["shed"]`` counts it, and the request is
+    never executed (load-shedding backpressure instead of an unbounded
+    queue; ROADMAP PR 4 follow-on).  ``max_pending=None`` (default) admits
+    everything, the pre-PR-5 behavior.  Direct ``submit`` calls bypass the
+    bound: the caller already owns a thread and blocking it is the natural
+    backpressure there.
     """
 
     # default size of the request admission pool (submit_many/serve)
     DEFAULT_REQUEST_WORKERS = 4
 
-    def __init__(self, bigdawg):
+    def __init__(self, bigdawg, max_pending: Optional[int] = None):
         self.bd = bigdawg
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.max_pending = max_pending
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
-                      "replans": 0, "explorations": 0, "seconds": 0.0}
+                      "replans": 0, "explorations": 0, "shed": 0,
+                      "seconds": 0.0}
+        self._pending = 0          # batch-admitted requests still in flight
         self._stats_lock = threading.Lock()
         # lazily-built request pool (NOT the executor host pool — request
         # threads block on level barriers); grows, never shrinks
@@ -197,10 +222,7 @@ class QueryServer:
         side-by-side files so the next server process restarts warm (no-ops
         for components constructed without a path).  Waits for in-flight
         background explorations first, so their measurements are included."""
-        self.bd.drain_explorations()
-        self.bd.monitor.save()
-        self.bd.cost_model.save()
-        self.bd.save_plan_cache()
+        self.bd.persist()
 
     def submit(self, query):
         """Admit one request (safe from any thread).  The measured seconds
@@ -232,17 +254,46 @@ class QueryServer:
                 self._request_pool_size = workers
             return self._request_pool
 
+    def _try_admit(self) -> bool:
+        """Reserve an in-flight slot for one batch request, or shed.  The
+        check-and-increment is atomic under the stats lock, so concurrent
+        ``submit_many`` batches can never jointly exceed ``max_pending``."""
+        with self._stats_lock:
+            if self.max_pending is not None \
+                    and self._pending >= self.max_pending:
+                self.stats["shed"] += 1
+                return False
+            self._pending += 1
+            return True
+
+    def _admitted_submit(self, q):
+        try:
+            return self.submit(q)
+        finally:
+            with self._stats_lock:
+                self._pending -= 1
+
     def submit_many(self, queries: Iterable, workers: Optional[int] = None
                     ) -> List:
         """Admit a batch of requests concurrently from the request pool and
         return their Reports in input order.  ``workers<=1`` degrades to a
         sequential loop (no pool round-trips).  Mixed cold/warm traffic is
         fine: the middleware's per-signature locking guarantees one training
-        per cold signature no matter how the requests interleave."""
+        per cold signature no matter how the requests interleave.
+
+        With ``max_pending=N`` on the server, a request arriving while N
+        batch requests are in flight is rejected *without blocking*: its
+        slot in the returned list is a ``Shed`` marker and ``stats["shed"]``
+        is bumped (see the class docstring)."""
         queries = list(queries)
         workers = workers or self.DEFAULT_REQUEST_WORKERS
         if workers <= 1 or len(queries) <= 1:
-            return [self.submit(q) for q in queries]
+            # sequential admission still reserves an in-flight slot per
+            # request: the bound is shared across batches, and a concurrent
+            # submit_many on another thread must see this one's occupancy
+            # (alone, a sequential batch never exceeds one slot)
+            return [self._admitted_submit(q) if self._try_admit()
+                    else Shed(q) for q in queries]
         pool = self._pool(workers)
         # the pool only grows (in-flight submits may hold the old one), so a
         # smaller `workers` must be enforced here or a 4-wide pool would run
@@ -251,22 +302,30 @@ class QueryServer:
         # pool worker): parking excess tasks inside workers would occupy
         # pool threads and FIFO-starve a concurrent caller's batch
         gate = threading.Semaphore(workers)
-        futures = []
+        futures: List = []
         for q in queries:
+            # shed BEFORE the worker-width gate: a full server must reject
+            # immediately, not park the caller until a slot frees
+            if not self._try_admit():
+                futures.append(Shed(q))
+                continue
             gate.acquire()
-            fut = pool.submit(self.submit, q)
+            fut = pool.submit(self._admitted_submit, q)
             fut.add_done_callback(lambda _f: gate.release())
             futures.append(fut)
-        return [f.result() for f in futures]
+        return [f if isinstance(f, Shed) else f.result() for f in futures]
 
     def serve(self, queries: Iterable, workers: Optional[int] = None) -> Dict:
         """Drive a traffic batch through ``submit_many`` and summarize it:
-        ``{"reports", "seconds" (wall), "rps", "workers"}`` — the
-        requests/sec figure ``benchmarks/fig_concurrent_serving.py``
-        tracks."""
+        ``{"reports", "seconds" (wall), "rps", "shed", "workers"}`` — the
+        requests/sec figure ``benchmarks/fig_concurrent_serving.py`` tracks
+        (``rps`` counts served requests only; ``shed`` says how many of this
+        batch bounded admission rejected)."""
         t0 = time.perf_counter()
         reports = self.submit_many(queries, workers=workers)
         wall = time.perf_counter() - t0
+        shed = sum(1 for r in reports if isinstance(r, Shed))
         return {"reports": reports, "seconds": wall,
-                "rps": len(reports) / max(wall, 1e-9),
+                "rps": (len(reports) - shed) / max(wall, 1e-9),
+                "shed": shed,
                 "workers": workers or self.DEFAULT_REQUEST_WORKERS}

@@ -1,0 +1,442 @@
+"""Multi-island query API: first-class scope boundaries in the IR, the
+``connect()``/``Session`` front door, the textual ``BIGDAWG(ISLAND(...))``
+syntax, bounded admission, and degenerate islands through the full
+train -> cache -> serve path."""
+import threading
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BigDAWG, ColumnarTable, DenseTensor, Monitor, Report,
+                        Result, SCOPE_OP, array, bigdawg, connect, degenerate,
+                        enumerate_plans, execute_plan, island_kind,
+                        relational, scope, scope_candidates, signature,
+                        signature_text, stream, text)
+from repro.core.planner import dp_plans, estimate_casts, exhaustive_plans
+from repro.core.qlang import QueryParseError
+from repro.runtime.server import QueryServer, Shed
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a join-able relational catalog + a dense weight matrix
+# ---------------------------------------------------------------------------
+
+def _cross_island_session(state_path=None, **kwargs):
+    """A session where RELATIONAL(join(A, B)) reconstructs a permuted matrix
+    and ARRAY(matmul(_, W)) projects it — the canonical cross-island query."""
+    rng = np.random.default_rng(0)
+    M = rng.normal(size=(8, 6)).astype(np.float32)
+    perm = np.array([2, 0, 5, 1, 4, 3])
+    W = rng.normal(size=(6, 4)).astype(np.float32)
+    ii, kk = np.meshgrid(np.arange(8), np.arange(6), indexing="ij")
+    A = ColumnarTable({"i": ii.ravel().astype(np.int32),
+                       "key": kk.ravel().astype(np.int32),
+                       "value": M.ravel()})
+    B = ColumnarTable({"key": np.arange(6, dtype=np.int32),
+                       "j": perm.astype(np.int32)})
+    s = connect(state_path, **kwargs)
+    s.register("A", A, "columnar").register("B", B, "columnar")
+    s.register("W", DenseTensor(jnp.asarray(W)), "dense_array")
+    Pm = np.zeros((6, 6), np.float32)
+    Pm[np.arange(6), perm] = 1.0
+    return s, (M @ Pm) @ W
+
+
+TEXT_Q = ("RELATIONAL(join(A, B, left_on=key, right_on=key)) "
+          "|> ARRAY(matmul(_, W))")
+
+
+def _handbuilt(s):
+    isl = s.islands
+    return isl.array.matmul(
+        isl.array.scope(isl.relational.join("A", "B", left_on="key",
+                                            right_on="key")), "W")
+
+
+# ---------------------------------------------------------------------------
+# scope nodes in the IR
+# ---------------------------------------------------------------------------
+
+def test_scope_builds_boundary_node():
+    q = scope("array", relational.select("A", column="value", lo=0.0))
+    assert q.op == SCOPE_OP and q.island == "array"
+    assert q.inputs[0].island == "relational"
+    # Island.scope and the free function agree
+    q2 = array.scope(relational.select("A", column="value", lo=0.0))
+    assert signature(q) == signature(q2)
+
+
+def test_scope_rejects_unknown_island():
+    with pytest.raises(ValueError, match="available"):
+        scope("warehouse", relational.count("A"))
+
+
+def test_scope_candidates_are_model_native():
+    assert scope_candidates("array") == ("dense_array",)
+    assert scope_candidates("relational") == ("columnar",)
+    assert scope_candidates("text") == ("kv_sparse",)
+    assert scope_candidates("stream") == ("stream",)
+    assert scope_candidates("degenerate:kv_sparse") == ("kv_sparse",)
+    assert island_kind("degenerate:columnar") == "columnar"
+
+
+def test_scope_changes_signature():
+    plain = array.count(relational.select("A", column="value", lo=0.0))
+    scoped = array.count(scope("array",
+                               relational.select("A", column="value",
+                                                 lo=0.0)))
+    assert signature(plain) != signature(scoped)
+    assert ".scope[](" in signature_text(scoped)
+    # stable across rebuilds (plan cache / monitor keying)
+    again = array.count(scope("array",
+                              relational.select("A", column="value",
+                                                lo=0.0)))
+    assert signature(scoped) == signature(again)
+
+
+# ---------------------------------------------------------------------------
+# planner: the boundary cast is planned and charged
+# ---------------------------------------------------------------------------
+
+def test_planner_places_boundary_on_island_model():
+    s, _ = _cross_island_session()
+    q = _handbuilt(s)
+    ranked = dp_plans(q, s.catalog, max_plans=8)
+    descs = {p.describe(q) for _, p in ranked}
+    # the boundary node always lands on the array island's model-native
+    # engine; the relational fragment always stays columnar
+    for _, p in ranked:
+        d = p.describe(q)
+        assert "scope@dense_array" in d and "join@columnar" in d
+    assert "join@columnar scope@dense_array matmul@dense_array" in descs
+
+
+def test_boundary_cast_is_charged():
+    s, _ = _cross_island_session()
+    q = _handbuilt(s)
+    best = enumerate_plans(q, s.catalog)[0]
+    assert estimate_casts(q, best, s.catalog) > 0.0
+
+
+def test_dp_matches_exhaustive_on_scoped_query():
+    s, _ = _cross_island_session()
+    q = _handbuilt(s)
+    dp = dp_plans(q, s.catalog, max_plans=16)
+    ex = exhaustive_plans(q, s.catalog)
+    assert dp[0][1].key == ex[0][1].key
+    assert dp[0][0] == pytest.approx(ex[0][0])
+
+
+def test_identity_scope_merges_for_free():
+    # scoping a relational subtree INTO relational adds no cast candidates:
+    # the boundary merges with its child's container
+    q_plain = relational.count(relational.select("A", column="value", lo=0.0))
+    q_scoped = relational.count(
+        scope("relational", relational.select("A", column="value", lo=0.0)))
+    plans_p = enumerate_plans(q_plain)
+    plans_s = enumerate_plans(q_scoped)
+    assert {p.describe(q_plain) for p in plans_p} == \
+        {p.describe(q_scoped).replace(" scope@columnar", "")
+         for p in plans_s}
+
+
+# ---------------------------------------------------------------------------
+# executor: boundary executes as a migration, result matches the reference
+# ---------------------------------------------------------------------------
+
+def test_cross_island_executes_correctly_both_modes():
+    s, ref = _cross_island_session()
+    q = _handbuilt(s)
+    plan = enumerate_plans(q, s.catalog)[0]
+    seq = execute_plan(q, plan, s.catalog)
+    con = execute_plan(q, plan, s.catalog, concurrent=True)
+    np.testing.assert_allclose(np.asarray(seq.value.data), ref,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(con.value.data), ref,
+                               rtol=1e-4, atol=1e-4)
+    # the boundary moved real bytes through the migrator
+    assert seq.cast_bytes > 0 and seq.n_casts >= 1
+
+
+def test_scope_never_feeds_op_observations():
+    s, _ = _cross_island_session()
+    q = _handbuilt(s)
+    plan = enumerate_plans(q, s.catalog)[0]
+    res = execute_plan(q, plan, s.catalog)
+    assert all(op != SCOPE_OP for _, op, _, _ in res.node_obs)
+    assert any(op == "join" for _, op, _, _ in res.node_obs)
+
+
+# ---------------------------------------------------------------------------
+# qlang: the paper's textual surface round-trips parse -> plan -> execute
+# ---------------------------------------------------------------------------
+
+def test_textual_equals_handbuilt_signature():
+    s, _ = _cross_island_session()
+    assert signature(bigdawg(TEXT_Q), s.catalog) == \
+        signature(_handbuilt(s), s.catalog)
+
+
+def test_paper_nested_syntax():
+    s, _ = _cross_island_session()
+    nested = bigdawg("BIGDAWG(ARRAY(matmul(RELATIONAL("
+                     "join(A, B, left_on=key, right_on=key)), W)))")
+    assert signature(nested, s.catalog) == \
+        signature(bigdawg(TEXT_Q), s.catalog)
+
+
+def test_textual_literals_and_strings():
+    q = bigdawg("RELATIONAL(select(A, column='value', lo=-0.5, hi=2))")
+    node = q  # select (no boundary: relational block over a relational op)
+    assert node.op == "select"
+    assert node.attrs == {"column": "value", "lo": -0.5, "hi": 2}
+    # bare-word kwarg == quoted string
+    q2 = bigdawg("RELATIONAL(select(A, column=value, lo=-0.5, hi=2))")
+    assert signature(q) == signature(q2)
+
+
+def test_textual_bare_ref_block_is_a_cast():
+    q = bigdawg("ARRAY(A)")
+    assert q.op == SCOPE_OP and q.island == "array"
+
+
+def test_textual_degenerate_island():
+    q = bigdawg("DEGENERATE:kv_sparse(tfidf(T))")
+    assert q.island == "degenerate:kv_sparse"
+
+
+def test_parse_errors_carry_vocabulary():
+    with pytest.raises(QueryParseError, match="available islands"):
+        bigdawg("WAREHOUSE(count(A))")
+    # unknown operator surfaces the island's op list (satellite: the error
+    # path must teach the vocabulary)
+    with pytest.raises(AttributeError, match="tfidf"):
+        bigdawg("TEXT(frobnicate(A))")
+    with pytest.raises(QueryParseError, match="placeholder"):
+        bigdawg("ARRAY(count(_))")
+    with pytest.raises(QueryParseError, match="never consumed"):
+        bigdawg("RELATIONAL(count(A)) |> ARRAY(count(W))")
+    with pytest.raises(QueryParseError, match="trailing"):
+        bigdawg("ARRAY(count(A)) whoops")
+    with pytest.raises(QueryParseError, match="ISLAND"):
+        bigdawg("count(A)")
+    with pytest.raises(QueryParseError, match="keyword"):
+        bigdawg("ARRAY(scale(A, 2.0))")
+
+
+def test_island_error_lists_ops_attribute_api():
+    with pytest.raises(AttributeError, match="window_agg"):
+        stream.frobnicate("S")
+    with pytest.raises(AttributeError, match="available operators"):
+        text.matmul  # noqa: B018 — text island has spmm, not matmul
+    with pytest.raises(ValueError, match="available operators"):
+        relational._build("no_such_op", "A")
+
+
+# ---------------------------------------------------------------------------
+# Session front door
+# ---------------------------------------------------------------------------
+
+def test_session_execute_returns_structured_result():
+    s, ref = _cross_island_session()
+    res = s.execute(TEXT_Q, mode="training")
+    assert isinstance(res, Result)
+    np.testing.assert_allclose(np.asarray(res.value.data), ref,
+                               rtol=1e-4, atol=1e-4)
+    # provenance names BOTH islands, per node and in the island roll-up
+    assert res.islands == ("relational", "array")
+    assert res.provenance[0].startswith("relational.join@")
+    assert f"array.{SCOPE_OP}@dense_array" in res.provenance
+    assert any(p.startswith("array.matmul@") for p in res.provenance)
+    assert " -> " in res.describe()
+    # per-node timings cover every post-order position
+    assert set(res.per_node_seconds) == {0, 1, 2}
+    assert all(t >= 0.0 for t in res.per_node_seconds.values())
+    assert res.cast_bytes > 0 and res.mode == "training"
+    assert res.report is not None and res.report.sig == res.sig
+
+
+def test_session_text_and_handbuilt_share_plan_cache():
+    s, _ = _cross_island_session()
+    r1 = s.execute(TEXT_Q, mode="training")
+    r2 = s.execute(_handbuilt(s))          # auto -> production, same sig
+    assert r2.mode == "production"
+    assert r2.sig == r1.sig and r2.plan_key == r1.plan_key
+
+
+def test_session_warm_restart(tmp_path):
+    path = str(tmp_path / "monitor.json")
+    s, ref = _cross_island_session(path)
+    s.execute(TEXT_Q, mode="training")
+    s.persist()
+    s2, _ = _cross_island_session(path)
+    res = s2.execute(TEXT_Q)
+    assert res.mode == "production"        # zero plan enumerations
+    np.testing.assert_allclose(np.asarray(res.value.data), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_connect_rejects_conflicting_args():
+    bd = BigDAWG()
+    with pytest.raises(ValueError, match="existing instance"):
+        connect("x.json", bigdawg=bd)
+    assert connect(bigdawg=bd).bigdawg is bd
+
+
+def test_session_server_wraps_queryserver():
+    s, _ = _cross_island_session()
+    srv = s.server(max_pending=3)
+    assert isinstance(srv, QueryServer)
+    assert srv.bd is s.bigdawg and srv.max_pending == 3
+    rep = srv.submit(s.parse(TEXT_Q))
+    assert isinstance(rep, Report)
+    assert srv.stats["requests"] == 1
+
+
+def test_islands_namespace_degenerate():
+    s, _ = _cross_island_session()
+    isl = s.islands.degenerate("dense_array")
+    assert isl.name == "degenerate:dense_array"
+    with pytest.raises(ValueError, match="engines"):
+        s.islands.degenerate("oracle")
+
+
+# ---------------------------------------------------------------------------
+# bounded admission (QueryServer(max_pending=N))
+# ---------------------------------------------------------------------------
+
+class _SlowBD:
+    """Stand-in middleware whose execute blocks long enough that a bounded
+    server must shed the rest of the batch."""
+
+    def __init__(self, delay=0.25):
+        self.delay = delay
+        self.calls = 0
+        self._lock = threading.Lock()
+
+    def execute(self, query, mode="auto"):
+        with self._lock:
+            self.calls += 1
+        time.sleep(self.delay)
+        return Report(result=None, plan_key="0:dense_array",
+                      mode="production", seconds=self.delay,
+                      cast_bytes=0.0, sig="s", cache_hit=True)
+
+
+def test_max_pending_sheds_overflow():
+    bd = _SlowBD()
+    srv = QueryServer(bd, max_pending=1)
+    out = srv.submit_many(["q"] * 5, workers=4)
+    assert len(out) == 5
+    assert isinstance(out[0], Report)          # first request always admitted
+    shed = [r for r in out if isinstance(r, Shed)]
+    assert len(shed) == 4 and srv.stats["shed"] == 4
+    assert all(r.query == "q" and r.reason == "max_pending" for r in shed)
+    assert bd.calls == 1 and srv.stats["requests"] == 1
+    # capacity is released once in-flight work drains: a later batch admits
+    out2 = srv.submit_many(["q2"] * 2, workers=2)
+    assert isinstance(out2[0], Report)
+
+
+def test_max_pending_unbounded_by_default():
+    srv = QueryServer(_SlowBD(delay=0.0))
+    out = srv.submit_many(["q"] * 6, workers=3)
+    assert all(isinstance(r, Report) for r in out)
+    assert srv.stats["shed"] == 0
+
+
+def test_serve_summary_counts_shed():
+    srv = QueryServer(_SlowBD(), max_pending=1)
+    summary = srv.serve(["q"] * 4, workers=4)
+    assert summary["shed"] == 3
+    # rps counts served requests only
+    assert summary["rps"] == pytest.approx(1 / summary["seconds"], rel=0.2)
+
+
+def test_max_pending_validation():
+    with pytest.raises(ValueError, match="max_pending"):
+        QueryServer(_SlowBD(), max_pending=0)
+
+
+def test_sequential_batch_occupies_the_shared_bound():
+    # a workers<=1 batch must reserve in-flight slots too, or a concurrent
+    # batch on another thread could jointly exceed max_pending
+    release, started = threading.Event(), threading.Event()
+
+    class _BlockingBD:
+        def execute(self, query, mode="auto"):
+            started.set()
+            release.wait(5)
+            return Report(result=None, plan_key="0:dense_array",
+                          mode="production", seconds=0.0, cast_bytes=0.0,
+                          sig="s", cache_hit=True)
+
+    srv = QueryServer(_BlockingBD(), max_pending=1)
+    t = threading.Thread(target=lambda: srv.submit_many(["q"], workers=1))
+    t.start()
+    try:
+        assert started.wait(5)
+        out = srv.submit_many(["q2"] * 3, workers=2)
+        assert all(isinstance(r, Shed) for r in out)
+        assert srv.stats["shed"] == 3
+    finally:
+        release.set()
+        t.join()
+
+
+# ---------------------------------------------------------------------------
+# degenerate islands through the full train -> cache -> serve path
+# ---------------------------------------------------------------------------
+
+def _degenerate_session(state_path=None):
+    rng = np.random.default_rng(1)
+    M = rng.normal(size=(12, 6)).astype(np.float32)
+    W = rng.normal(size=(6, 5)).astype(np.float32)
+    s = connect(state_path)
+    s.register("M", DenseTensor(jnp.asarray(M)), "dense_array")
+    s.register("Wd", DenseTensor(jnp.asarray(W)), "dense_array")
+    return s, M @ W
+
+
+def test_degenerate_train_then_production():
+    s, ref = _degenerate_session()
+    isl = s.islands.degenerate("dense_array")
+    q = isl.matmul(isl.select("M", lo=-10.0, hi=10.0), "Wd")
+    r1 = s.execute(q, mode="training")
+    np.testing.assert_allclose(np.asarray(r1.value.data), ref,
+                               rtol=1e-4, atol=1e-4)
+    # every node pinned to the one engine, by construction
+    assert all(p.endswith("@dense_array") for p in r1.provenance)
+    assert r1.islands == ("degenerate:dense_array",)
+    r2 = s.execute(q)
+    assert r2.mode == "production" and r2.report.cache_hit
+
+
+def test_degenerate_served_warm_through_queryserver(tmp_path):
+    path = str(tmp_path / "monitor.json")
+    s, ref = _degenerate_session(path)
+    isl = s.islands.degenerate("dense_array")
+    mk = lambda: isl.matmul(isl.select("M", lo=-10.0, hi=10.0), "Wd")
+    srv = s.server()
+    srv.warm([mk()])
+    srv.persist()
+    # fresh process on the same state: production from the persisted cache
+    s2, _ = _degenerate_session(path)
+    srv2 = s2.server()
+    reports = srv2.submit_many([mk() for _ in range(4)], workers=2)
+    assert all(r.mode == "production" for r in reports)
+    assert srv2.stats["trainings"] == 0 and srv2.stats["requests"] == 4
+    np.testing.assert_allclose(np.asarray(reports[-1].result.data), ref,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_degenerate_scoped_into_array_island():
+    # a degenerate fragment consumed by a standard island crosses a boundary
+    # like any other island pair
+    s, ref = _degenerate_session()
+    q = bigdawg("ARRAY(count(DEGENERATE:dense_array(matmul(M, Wd))))")
+    r = s.execute(q, mode="training")
+    assert "degenerate:dense_array" in r.islands and "array" in r.islands
+    assert int(r.value.data) == ref.size
