@@ -15,11 +15,16 @@ from repro.core.planner import (Plan, enumerate_plans, find_containers,
                                 exhaustive_plans, estimate_sizes,
                                 estimate_sizes_shapes)
 from repro.core.monitor import Monitor, usage_snapshot
+from repro.core.errors import (BigDAWGError, EngineDown, Overloaded,
+                               PlanInfeasible, QueryParseError,
+                               is_engine_failure)
+from repro.core.health import CircuitBreaker, EngineHealth
 from repro.core.executor import (execute_plan, ExecutionResult, topo_levels,
                                  host_pool)
-from repro.core.middleware import (BigDAWG, CachedPlan, Report,
+from repro.core.middleware import (BigDAWG, CachedPlan, Report, masked_sig,
                                    default_plan_cache_path)
-from repro.core.qlang import QueryParseError, bigdawg
+from repro.core.qlang import bigdawg
+from repro.core.reqpool import RequestPool
 from repro.core.api import IslandNamespace, Result, Session, connect
 
 __all__ = [
@@ -33,7 +38,9 @@ __all__ = [
     "plan_cost", "dp_plans", "exhaustive_plans", "estimate_sizes",
     "estimate_sizes_shapes", "Monitor", "usage_snapshot", "execute_plan",
     "ExecutionResult", "topo_levels", "host_pool", "BigDAWG", "CachedPlan",
-    "Report", "default_plan_cache_path",
-    "QueryParseError", "bigdawg", "IslandNamespace", "Result", "Session",
+    "Report", "default_plan_cache_path", "masked_sig",
+    "BigDAWGError", "EngineDown", "Overloaded", "PlanInfeasible",
+    "QueryParseError", "is_engine_failure", "CircuitBreaker", "EngineHealth",
+    "RequestPool", "bigdawg", "IslandNamespace", "Result", "Session",
     "connect",
 ]

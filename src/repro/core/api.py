@@ -41,15 +41,22 @@ one plan cache, and one monitor history.
 """
 from __future__ import annotations
 
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import islands as islands_mod
 from repro.core import qlang
 from repro.core.engines import ENGINES
+# the error taxonomy is part of the public API surface: sessions raise these
+# (re-exported here so `from repro.core.api import EngineDown` works)
+from repro.core.errors import (BigDAWGError, EngineDown, Overloaded,
+                               PlanInfeasible, QueryParseError)
+from repro.core.health import EngineHealth
 from repro.core.middleware import BigDAWG, Report, _plan_from_key
 from repro.core.monitor import Monitor
 from repro.core.ops import PolyOp
+from repro.core.reqpool import RequestPool
 
 
 class IslandNamespace:
@@ -93,6 +100,12 @@ class Result:
     islands: Tuple[str, ...]       # distinct islands, first-appearance order
     per_node_seconds: Dict[int, float] = field(default_factory=dict)
     report: Optional[Report] = None    # the raw middleware report
+    # -- resilience surface (meaningful when the middleware has a health
+    #    registry; defaults describe a healthy, unmasked serve) ------------
+    status: str = "ok"             # "ok" | "degraded"  (an Overloaded slot
+    #                                from submit_many carries "shed")
+    degraded: bool = False         # planned under an engine mask
+    failovers: int = 0             # EngineDown retries this request survived
 
     def describe(self) -> str:
         return " -> ".join(self.provenance)
@@ -110,7 +123,9 @@ def _result_from_report(query: PolyOp, rep: Report) -> Result:
                   seconds=rep.seconds, cast_bytes=rep.cast_bytes,
                   plan_key=rep.plan_key, provenance=provenance,
                   islands=tuple(seen), per_node_seconds=rep.per_node_seconds,
-                  report=rep)
+                  report=rep, status=getattr(rep, "status", "ok"),
+                  degraded=getattr(rep, "degraded", False),
+                  failovers=getattr(rep, "failovers", 0))
 
 
 class Session:
@@ -124,6 +139,11 @@ class Session:
     def __init__(self, bigdawg: BigDAWG):
         self.bigdawg = bigdawg
         self.islands = IslandNamespace()
+        # the session's request pool (PR 4 pattern, shared idiom with
+        # QueryServer/BatchServer): execute_async futures and map batches
+        # run here, NOT on the executor's host pool — request threads block
+        # on level barriers and would starve the pool running the levels
+        self._requests = RequestPool(thread_name_prefix="bigdawg-session")
 
     @property
     def catalog(self):
@@ -151,13 +171,46 @@ class Session:
             query = qlang.bigdawg(query)
         return _result_from_report(query, self.bigdawg.execute(query, mode))
 
-    def server(self, max_pending: Optional[int] = None):
+    def execute_async(self, query: Union[PolyOp, str], mode: str = "auto",
+                      workers: Optional[int] = None) -> "Future[Result]":
+        """``execute`` off the calling thread: returns a
+        ``concurrent.futures.Future`` resolving to the ``Result`` (or
+        carrying the structured ``BigDAWGError`` — ``EngineDown`` after
+        failover exhaustion, ``PlanInfeasible``, ... — via
+        ``future.exception()``).  A textual query is parsed EAGERLY, so a
+        ``QueryParseError`` raises here at the call site, not inside the
+        future — a syntactically-broken query should fail fast, not
+        asynchronously.  Futures run on the session's request pool
+        (``workers`` grows it); the middleware's per-signature locking makes
+        any interleaving safe."""
+        if isinstance(query, str):
+            query = qlang.bigdawg(query)
+        return self._requests.submit(self.execute, query, mode,
+                                     workers=workers)
+
+    def map(self, queries: Sequence[Union[PolyOp, str]], mode: str = "auto",
+            workers: Optional[int] = None) -> List[Result]:
+        """Execute a batch concurrently on the request pool and return the
+        ``Result``s in input order (``workers<=1`` runs sequentially).  All
+        textual queries are parsed up front — one malformed query fails the
+        whole batch before anything executes.  The first structured error
+        raised by a query propagates, input-order first."""
+        parsed = [qlang.bigdawg(q) if isinstance(q, str) else q
+                  for q in queries]
+        return self._requests.map_ordered(
+            lambda q: self.execute(q, mode), parsed, workers=workers)
+
+    def server(self, max_pending: Optional[int] = None,
+               latency_target_s: Optional[float] = None):
         """A ``QueryServer`` over this session's middleware — concurrent
         admission (``submit_many``/``serve``) with optional bounded
         admission: with ``max_pending=N``, batch overflow beyond N in-flight
-        requests is shed (``stats["shed"]``) instead of queued."""
+        requests is shed (``stats["shed"]``) instead of queued;
+        ``latency_target_s`` switches to the adaptive AIMD bound with
+        degrade-before-shed (see ``QueryServer``)."""
         from repro.runtime.server import QueryServer
-        return QueryServer(self.bigdawg, max_pending=max_pending)
+        return QueryServer(self.bigdawg, max_pending=max_pending,
+                           latency_target_s=latency_target_s)
 
     def persist(self) -> None:
         """Flush monitor DB, calibration and plan cache (waiting for
@@ -169,6 +222,7 @@ class Session:
 def connect(state_path: Optional[str] = None, *,
             monitor: Optional[Monitor] = None,
             bigdawg: Optional[BigDAWG] = None,
+            resilient: bool = False,
             **bigdawg_kwargs) -> Session:
     """Open a polystore session.
 
@@ -177,14 +231,20 @@ def connect(state_path: Optional[str] = None, *,
     so a second ``connect`` to the same path serves previously-trained
     signatures warm.  ``monitor`` passes a pre-built Monitor instead (e.g.
     with a custom ``decay``); ``bigdawg`` wraps an existing middleware
-    instance as-is.  Remaining keyword arguments go to ``BigDAWG`` —
-    ``train_plans``, ``explore_budget``, ``calibrate``, ``replan_factor``...
+    instance as-is.  ``resilient=True`` attaches a default
+    ``core.health.EngineHealth`` registry — per-engine circuit breakers with
+    failover re-planning (pass ``health=EngineHealth(...)`` instead to tune
+    thresholds or plug in a fault injector).  Remaining keyword arguments go
+    to ``BigDAWG`` — ``train_plans``, ``explore_budget``, ``calibrate``,
+    ``replan_factor``, ``health``...
     """
     if bigdawg is not None:
-        if state_path or monitor or bigdawg_kwargs:
+        if state_path or monitor or resilient or bigdawg_kwargs:
             raise ValueError("bigdawg= wraps an existing instance; it cannot "
                              "be combined with state_path/monitor/kwargs")
         return Session(bigdawg)
+    if resilient and "health" not in bigdawg_kwargs:
+        bigdawg_kwargs["health"] = EngineHealth()
     if monitor is None and state_path is not None:
         monitor = Monitor(state_path)
     return Session(BigDAWG(monitor=monitor, **bigdawg_kwargs))

@@ -64,6 +64,7 @@ import jax
 from repro.core.costmodel import (CostModel, container_elems, observed_nbytes,
                                   observed_shape)
 from repro.core.engines import ENGINES
+from repro.core.errors import EngineDown, is_engine_failure
 from repro.core.islands import ISLAND_KIND, island_kind
 from repro.core.migrator import Migrator
 from repro.core.ops import SCOPE_OP, PolyOp, Ref
@@ -265,7 +266,17 @@ def _deliver(query: PolyOp, result):
 def execute_plan(query: PolyOp, plan: Plan, catalog,
                  concurrent: bool = False,
                  cost_model: Optional[CostModel] = None,
-                 host_workers: Optional[int] = None) -> ExecutionResult:
+                 host_workers: Optional[int] = None,
+                 health=None) -> ExecutionResult:
+    """``health`` (a ``core.health.EngineHealth``) opts the run into the
+    resilience path: the registry's ``before_op`` hook fires ahead of every
+    engine op (the fault-injection seam), and any *engine* failure — an
+    exception ``errors.is_engine_failure`` classifies as infrastructure, in
+    the op itself or in an input cast onto the op's engine — feeds the
+    engine's circuit breaker and re-raises as ``EngineDown`` so the
+    middleware can fail over.  Query errors (bad column names, shape
+    mismatches) propagate unchanged: they would fail identically on every
+    engine, so retrying them elsewhere is never correct."""
     amap = plan.engine_map(query)
     migrator = Migrator(cost_model=cost_model)
     values: Dict[int, Any] = {}
@@ -290,11 +301,25 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
         identity."""
         eng = ENGINES[amap[node.uid]]
         tn = time.perf_counter()
-        args = _gather_args(node, eng, catalog, values, migrator)
-        out = args[0] if node.op == SCOPE_OP \
-            else eng.run(node.op, node.attrs, *args)
+        try:
+            if health is not None:
+                health.before_op(eng.name, node.op)
+            args = _gather_args(node, eng, catalog, values, migrator)
+            out = args[0] if node.op == SCOPE_OP \
+                else eng.run(node.op, node.attrs, *args)
+        except Exception as exc:
+            _engine_fail(exc, eng.name, node.op)
+            raise
         per_node[node.uid] = time.perf_counter() - tn
         return node.uid, out
+
+    def _engine_fail(exc: BaseException, engine: str, op: str):
+        """Failure attribution: infrastructure-shaped exceptions feed the
+        breaker and become EngineDown; anything else falls through to the
+        caller's bare re-raise (a query error, not an engine one)."""
+        if health is not None and is_engine_failure(exc):
+            health.record_failure(engine)
+            raise EngineDown(engine, op, exc) from exc
 
     if concurrent:
         lvls = topo_levels(query)
@@ -345,20 +370,27 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
             # mode's run_node timing); node_obs — what calibrates op rates —
             # starts after the gather, so learned throughputs stay pure op
             tg = time.perf_counter()
-            args = _gather_args(node, eng, catalog, values, migrator)
-            elems = sum(container_elems(a) for a in args)
-            tn = time.perf_counter()
-            if node.op == SCOPE_OP:
-                # island boundary: the migration above WAS the work (timed
-                # per hop by the migrator); the node is the identity, so no
-                # op observation — a ~0s "scope" rate would poison the
-                # engine-level mean the cost model falls back to
-                out = args[0]
-            else:
-                out = eng.run(node.op, node.attrs, *args)
-                _block(out)
-                node_obs.append((eng.name, node.op, elems,
-                                 time.perf_counter() - tn))
+            try:
+                if health is not None:
+                    health.before_op(eng.name, node.op)
+                args = _gather_args(node, eng, catalog, values, migrator)
+                elems = sum(container_elems(a) for a in args)
+                tn = time.perf_counter()
+                if node.op == SCOPE_OP:
+                    # island boundary: the migration above WAS the work
+                    # (timed per hop by the migrator); the node is the
+                    # identity, so no op observation — a ~0s "scope" rate
+                    # would poison the engine-level mean the cost model
+                    # falls back to
+                    out = args[0]
+                else:
+                    out = eng.run(node.op, node.attrs, *args)
+                    _block(out)
+                    node_obs.append((eng.name, node.op, elems,
+                                     time.perf_counter() - tn))
+            except Exception as exc:
+                _engine_fail(exc, eng.name, node.op)
+                raise
             per_node[node.uid] = time.perf_counter() - tg
             values[node.uid] = out
 

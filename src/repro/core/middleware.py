@@ -43,6 +43,16 @@ plan cache and the stats counters are guarded here, and exploration runs
 off-path, so the whole middleware admits multi-threaded traffic (see
 ``runtime.server.QueryServer.submit_many``).
 
+**Resilient serving.**  Constructed with a ``core.health.EngineHealth``
+registry, ``execute`` runs through a failover driver: every request plans
+under the current circuit-breaker mask, an ``EngineDown`` mid-plan feeds the
+engine's breaker and retries (first burning the breaker's failure threshold
+on the incumbent path, then — breaker open, engine masked — re-running the
+cheap k=1 DP around the dead engine), and masked plans are cached and
+monitored under a mask-suffixed signature so the incumbent's history stays
+pure and recovery (the breaker's half-open probe succeeding) restores it
+verbatim.  Reports then carry ``status``/``degraded``/``failovers``.
+
 The plan cache (winning plan + predicted cost + alternate keys) persists
 beside the monitor DB (``<monitor>.plans.json``, atomic JSON via
 ``ioutil``), so a restarted production process serves previously-trained
@@ -55,17 +65,30 @@ import os
 import threading
 import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
+from repro.core.errors import EngineDown, PlanInfeasible
 from repro.core.executor import ExecutionResult, execute_plan, host_pool
+from repro.core.health import EngineHealth
 from repro.core.ioutil import atomic_json_dump, load_json
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
 from repro.core.planner import (Plan, dp_plans, estimate_sizes_shapes,
                                 plan_cost)
 from repro.core.signature import signature
+
+# separator between a signature and the engine mask it was served under:
+# masked (failover/degraded) plans live in the plan cache and the monitor
+# under "sig@!engine+engine", so the UNMASKED signature's history and cache
+# entry stay pure — when the breaker closes again, monitor.best(sig) still
+# names the incumbent and recovery restores it verbatim
+MASK_SEP = "@!"
+
+
+def masked_sig(sig: str, mask: FrozenSet[str]) -> str:
+    return sig + MASK_SEP + "+".join(sorted(mask))
 
 
 def _plan_from_key(plan_key: str) -> Plan:
@@ -142,6 +165,12 @@ class Report:
     # (position-keyed like plan keys and size feedback, so it survives query
     # rebuilds; the Session API surfaces it as Result.per_node_seconds)
     per_node_seconds: Dict[int, float] = field(default_factory=dict)
+    # -- resilience surface (populated when the middleware has a health
+    #    registry; defaults describe the non-resilient path) ---------------
+    status: str = "ok"       # "ok" | "degraded" ("shed" is stamped by the
+    #                          server on Overloaded results, never here)
+    degraded: bool = False   # served under an engine mask (failover/degrade)
+    failovers: int = 0       # EngineDown retries this request survived
 
 
 def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
@@ -166,9 +195,16 @@ class BigDAWG:
                  calibrate: bool = False,
                  plan_cache_path: Optional[str] = None,
                  replan_factor: float = REPLAN_FACTOR,
-                 explore_budget: float = EXPLORE_BUDGET):
+                 explore_budget: float = EXPLORE_BUDGET,
+                 health: Optional[EngineHealth] = None):
         self.catalog: Dict[str, CatalogEntry] = {}
         self.monitor = monitor or Monitor()
+        # optional per-engine circuit-breaker registry: when present, every
+        # execute() runs through the failover driver (_execute_resilient) —
+        # tripped engines are masked out of planning, EngineDown retries
+        # re-plan, successes/stragglers feed the breakers
+        self.health = health
+        self.failovers = 0
         self.train_plans = train_plans
         # run each candidate plan this many times during training and record
         # only the last — first-run jit/compile cost would otherwise bias the
@@ -239,7 +275,11 @@ class BigDAWG:
                                       "predicted_s": e.predicted_s,
                                       "alternates": [p.key
                                                      for p in e.alternates]}
-                                for sig, e in self.plan_cache.items()}}
+                                for sig, e in self.plan_cache.items()
+                                # masked (degraded) entries are transient —
+                                # tied to this process's breaker state, they
+                                # must not warm-start a healthy restart
+                                if MASK_SEP not in sig}}
         atomic_json_dump(path, blob)
 
     def load_plan_cache(self, path: str):
@@ -296,13 +336,15 @@ class BigDAWG:
             # honest per-node timings to the cost model (sequential only)
             for _ in range(self.train_repeats):
                 res = execute_plan(query, plan, self.catalog,
-                                   cost_model=self.cost_model)
+                                   cost_model=self.cost_model,
+                                   health=self.health)
             self.cost_model.observe_execution(res)
             # the RECORDED measurement uses concurrent dispatch — the same
             # mode production executes in, so every seconds value a
             # Monitor.best() comparison sees is from one dispatch mode
             res = execute_plan(query, plan, self.catalog, concurrent=True,
-                               cost_model=self.cost_model)
+                               cost_model=self.cost_model,
+                               health=self.health)
             self.monitor.record(sig, plan.key, res.seconds,
                                 cast_bytes=res.cast_bytes, usage=usage,
                                 sizes=res.size_obs, shapes=res.shape_obs)
@@ -470,7 +512,7 @@ class BigDAWG:
                 self.plan_cache.pop(sig, None)
             return self._train(query, sig)
         res = execute_plan(query, plan, self.catalog, concurrent=True,
-                           cost_model=self.cost_model)
+                           cost_model=self.cost_model, health=self.health)
         self.monitor.record(sig, plan_key, res.seconds,
                             cast_bytes=res.cast_bytes, usage=usage,
                             sizes=res.size_obs, shapes=res.shape_obs)
@@ -613,25 +655,141 @@ class BigDAWG:
                                          if not f.done()]
         return done
 
+    # -- resilient serving ---------------------------------------------------
+    def _serve_masked(self, query: PolyOp, sig: str,
+                      mask: FrozenSet[str]) -> Report:
+        """Failover/degraded serve: plan and execute with ``mask`` engines
+        excluded.  The plan comes from a mask-keyed cache entry (first
+        request under a given mask pays one cheap k=1 DP; the rest of the
+        outage serves cached) and the measurement is recorded under the
+        mask-keyed monitor signature — the unmasked signature's history
+        never sees degraded runs, so when the breaker closes,
+        ``monitor.best(sig)`` still names the pre-failure incumbent and the
+        half-open probe restores it verbatim.  Raises ``PlanInfeasible``
+        when the mask leaves some op with no engine."""
+        mkey = masked_sig(sig, mask)
+        with self._cache_lock:
+            entry = self.plan_cache.get(mkey)
+            hit = entry is not None
+        if entry is None:
+            ranked = dp_plans(query, self.catalog, max_plans=1,
+                              cost_model=self.cost_model,
+                              measured_sizes=self.monitor.measured_sizes(sig),
+                              measured_shapes=self.monitor.measured_shapes(
+                                  sig),
+                              mask=mask)
+            cost, plan = ranked[0]
+            entry = CachedPlan(plan, cost)
+            with self._cache_lock:
+                entry = self.plan_cache.setdefault(mkey, entry)
+        res = execute_plan(query, entry.plan, self.catalog, concurrent=True,
+                           cost_model=self.cost_model, health=self.health)
+        self.monitor.record(mkey, entry.plan.key, res.seconds,
+                            cast_bytes=res.cast_bytes,
+                            usage=usage_snapshot(),
+                            sizes=res.size_obs, shapes=res.shape_obs)
+        with self._stats_lock:
+            self.serve_seconds += res.seconds
+        return Report(res.value, entry.plan.key, "production", res.seconds,
+                      res.cast_bytes, sig, cache_hit=hit,
+                      predicted_s=entry.predicted_s,
+                      per_node_seconds=_pos_seconds(query, res))
+
+    def _feed_health(self, rep: Report) -> None:
+        """Feed one successful serve to the health registry: the executed
+        plan's per-node (engine, seconds) pairs drive the per-engine
+        straggler detectors and reset/close the breakers."""
+        try:
+            pairs = _plan_from_key(rep.plan_key).assignment
+        except ValueError:
+            return
+        self.health.after_plan(
+            (eng, rep.per_node_seconds.get(pos, 0.0)) for pos, eng in pairs)
+
+    def _execute_resilient(self, query: PolyOp, sig: str, mode: str,
+                           degrade: bool) -> Report:
+        """The failover driver (requires ``self.health``): plan under the
+        current breaker mask, execute, and on ``EngineDown`` retry — the
+        failed attempt fed the engine's breaker, so retries first burn the
+        breaker's failure threshold on the incumbent path and then (breaker
+        open, engine masked) re-plan around the dead engine.  Bounded: once
+        every breaker could have tripped, the last ``EngineDown`` is
+        surfaced (everything is down).  ``degrade`` additionally masks every
+        non-always-up engine — the server's graceful-degradation path under
+        overload."""
+        health = self.health
+        limit = 1 + sum(br.failure_threshold
+                        for br in health.breakers.values())
+        failovers = 0
+        while True:
+            mask, probes = health.mask_for_request()
+            if degrade:
+                mask = frozenset(mask | health.degrade_mask())
+            try:
+                rep = self._serve_masked(query, sig, mask) if mask \
+                    else self._dispatch(query, sig, mode)
+            except EngineDown:
+                failovers += 1
+                with self._stats_lock:
+                    self.failovers += 1
+                if failovers >= limit:
+                    raise
+                continue
+            except PlanInfeasible:
+                if degrade:
+                    # the degrade mask (on top of tripped breakers) left
+                    # some op with no engine — degrading was too aggressive
+                    # for this query; retry with the breaker mask alone
+                    degrade = False
+                    continue
+                raise
+            finally:
+                health.release_probes(probes)
+            self._feed_health(rep)
+            rep.failovers = failovers
+            rep.degraded = bool(mask)
+            rep.status = "degraded" if mask else "ok"
+            return rep
+
+    @property
+    def breaker_trips(self) -> int:
+        """Lifetime circuit-breaker trips across engines (0 without a
+        health registry) — surfaced as ``QueryServer.stats["breaker_trips"]``."""
+        return self.health.trips() if self.health is not None else 0
+
     # -- public API ----------------------------------------------------------
-    def execute(self, query: PolyOp, mode: str = "auto") -> Report:
+    def _dispatch(self, query: PolyOp, sig: str, mode: str) -> Report:
+        """The paper's phase protocol (caller holds the signature lock)."""
+        if mode == "training":
+            return self._train(query, sig)
+        if mode == "production":
+            return self._production(query, sig)
+        if mode == "auto":
+            known, _, _ = self.monitor.best(sig)
+            return self._production(query, sig) if known else \
+                self._train(query, sig)
+        raise ValueError(mode)
+
+    def execute(self, query: PolyOp, mode: str = "auto", *,
+                degrade: bool = False) -> Report:
         """Thread-safe entry point.  Requests for the SAME signature are
         serialized on a per-signature lock — two cold requests racing in
         ``auto`` mode train exactly once: the loser blocks, then re-checks
         the monitor inside the lock and serves the winner's fresh plan.
         Requests for different signatures hold different locks and
-        train/serve fully in parallel."""
+        train/serve fully in parallel.
+
+        With a health registry (``BigDAWG(health=...)``) the request runs
+        through the failover driver: tripped engines are masked out of
+        planning, ``EngineDown`` mid-plan retries (re-planning around the
+        dead engine once its breaker opens), and the Report carries
+        ``status``/``degraded``/``failovers``.  ``degrade=True`` (the
+        server's overload path) plans on the always-up engine set only."""
         sig = signature(query, self.catalog)
         with self._sig_lock(sig):
-            if mode == "training":
-                return self._train(query, sig)
-            if mode == "production":
-                return self._production(query, sig)
-            if mode == "auto":
-                known, _, _ = self.monitor.best(sig)
-                return self._production(query, sig) if known else \
-                    self._train(query, sig)
-        raise ValueError(mode)
+            if self.health is not None:
+                return self._execute_resilient(query, sig, mode, degrade)
+            return self._dispatch(query, sig, mode)
 
     def run_background_queue(self, query_by_sig: Dict[str, PolyOp]):
         """Re-explore queued alternate plans 'when the system is

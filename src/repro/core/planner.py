@@ -18,14 +18,18 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.core.costmodel import (CostModel, container_elems,
                                   container_kind_nbytes,
                                   kind_nbytes_from_logical)
+from repro.core.errors import PlanInfeasible
 from repro.core.islands import ISLANDS, scope_candidates
 from repro.core.engines import ENGINES
 from repro.core.ops import SCOPE_OP, PolyOp, Ref
+
+# the empty engine mask (planning with every engine available)
+NO_MASK: FrozenSet[str] = frozenset()
 
 _DEFAULT_COST_MODEL: Optional[CostModel] = None
 
@@ -61,14 +65,26 @@ class Plan:
                         for i, n in enumerate(query.nodes()))
 
 
-def node_candidates(node: PolyOp) -> Sequence[str]:
+def node_candidates(node: PolyOp,
+                    mask: FrozenSet[str] = NO_MASK) -> Sequence[str]:
+    """Engines that can run ``node``, minus any in ``mask`` (tripped
+    breakers / a degrade mask — see ``core.health``).  Raises
+    ``PlanInfeasible`` when the mask eats the whole candidate set: no
+    engine assignment containing this node can exist."""
     if node.op == SCOPE_OP:
         # an island boundary materializes on the target island's model-native
         # engines only — the DP's cast edge into this node is therefore the
         # inter-island cast, priced like any other edge (multi-hop routed,
         # sized per hop) by cast_seconds
-        return scope_candidates(node.island)
-    return ISLANDS[node.island].candidates(node.op)
+        cands = scope_candidates(node.island)
+    else:
+        cands = ISLANDS[node.island].candidates(node.op)
+    if not mask:
+        return cands
+    alive = [e for e in cands if e not in mask]
+    if not alive:
+        raise PlanInfeasible(node.op, node.island, masked=tuple(cands))
+    return alive
 
 
 @dataclass
@@ -253,7 +269,8 @@ class PlanContainer:
 def plan_containers(query: PolyOp, catalog=None,
                     sizes: Optional[Dict[int, float]] = None,
                     shapes: Optional[Dict[int, Optional[Tuple[int, ...]]]]
-                    = None) -> List[PlanContainer]:
+                    = None,
+                    mask: FrozenSet[str] = NO_MASK) -> List[PlanContainer]:
     """Containers over the query's TREE UNFOLDING: ownership is tracked per
     post-order *occurrence*, not per node uid, so shared subtrees (which the
     executor and ``plan_cost`` both account once per occurrence) contract to
@@ -270,7 +287,7 @@ def plan_containers(query: PolyOp, catalog=None,
         child_pos = [(visit(i), i) for i in node.inputs
                      if isinstance(i, PolyOp)]
         pos = next(counter)                    # == post-order walk position
-        cands = tuple(node_candidates(node))
+        cands = tuple(node_candidates(node, mask))
         ci_own = None
         edges: List[Tuple[int, float, Optional[Tuple[int, ...]]]] = []
         for p, inp in child_pos:
@@ -314,8 +331,8 @@ def _intra_cost(c: PlanContainer, engine: str, sizes, catalog,
 def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
              cost_model: Optional[CostModel] = None,
              measured_sizes: Optional[Dict[int, float]] = None,
-             measured_shapes: Optional[Dict[int, Tuple[int, ...]]] = None
-             ) -> List[Tuple[float, Plan]]:
+             measured_shapes: Optional[Dict[int, Tuple[int, ...]]] = None,
+             mask: FrozenSet[str] = NO_MASK) -> List[Tuple[float, Plan]]:
     """Exact k-best DP over the container tree: for every container and engine
     choice, combine the k cheapest child subplans through the cast edge cost.
     Covers the full container-assignment product (no truncation bias).
@@ -326,12 +343,17 @@ def dp_plans(query: PolyOp, catalog=None, max_plans: int = 16,
     intermediate format.  ``measured_sizes`` / ``measured_shapes`` (from
     ``Monitor.measured_sizes`` / ``measured_shapes``) replace rule-derived
     estimates with actual intermediate sizes and shapes wherever the
-    signature has execution history."""
+    signature has execution history.
+
+    ``mask`` excludes engines from every candidate set (failover
+    re-planning around tripped circuit breakers); a mask that leaves some
+    op with no engine raises ``PlanInfeasible``."""
     cm = cost_model or default_cost_model()
     sizes, shapes = estimate_sizes_shapes(query, catalog,
                                           measured=measured_sizes,
                                           measured_shapes=measured_shapes)
-    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes)
+    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes,
+                                 mask=mask)
     k = max(1, max_plans)
 
     pos_owner: Dict[int, int] = {}
@@ -411,14 +433,18 @@ def exhaustive_plans(query: PolyOp, catalog=None,
                      cost_model: Optional[CostModel] = None,
                      measured_sizes: Optional[Dict[int, float]] = None,
                      measured_shapes: Optional[Dict[int, Tuple[int, ...]]]
-                     = None) -> List[Tuple[float, Plan]]:
+                     = None,
+                     mask: FrozenSet[str] = NO_MASK
+                     ) -> List[Tuple[float, Plan]]:
     """Brute-force reference over the container assignment product, costed
-    with the same model — the DP must agree with this on small DAGs."""
+    with the same model — the DP must agree with this on small DAGs (masked
+    or not)."""
     cm = cost_model or default_cost_model()
     sizes, shapes = estimate_sizes_shapes(query, catalog,
                                           measured=measured_sizes,
                                           measured_shapes=measured_shapes)
-    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes)
+    containers = plan_containers(query, catalog, sizes=sizes, shapes=shapes,
+                                 mask=mask)
     pos_owner = {p: ci for ci, c in enumerate(containers) for p in c.positions}
     nodes = query.nodes()
     out, seen = [], set()

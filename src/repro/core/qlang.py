@@ -33,6 +33,23 @@ Grammar (recursive descent; whitespace-insensitive):
   (``column=value`` means the string ``"value"``); ``true``/``false`` parse
   as booleans.
 
+**SQL-style select (RELATIONAL blocks).**  The paper's §III examples write
+the relational fragment as literal SQL text; RELATIONAL blocks accept that
+surface too:
+
+    sql    :=  "select" ("*" | name ("," name)*) "from" (name | "_")
+               [ "where" cond ("and" cond)* ]
+    cond   :=  name ("<" | "<=" | ">" | ">=" | "=") number
+
+``bigdawg("RELATIONAL(select * from A where v >= 0.5)")`` compiles to the
+SAME ``relational.select(A, column=v, lo=0.5)`` IR the attribute API builds
+— signature-identical, so both surfaces share plans and monitor history.
+Conditions on one column fold into one select node's ``lo``/``hi`` bounds
+(``=`` pins both); a non-star column list appends a ``project``.  Bounds
+are closed intervals (the columnar engine's select is inclusive), so strict
+``<``/``>`` compile to the closed bound — exact for the continuous-valued
+columns the demo data uses.
+
 Errors carry position context; an unknown operator raises the island's
 available op list (via ``Island.__getattr__``), an unknown island names the
 registered islands.
@@ -42,6 +59,9 @@ from __future__ import annotations
 import re
 from typing import Dict, List, Optional, Tuple
 
+# QueryParseError now lives in the unified BigDAWGError taxonomy
+# (core.errors); re-exported here, its historical home, for back-compat
+from repro.core.errors import QueryParseError
 from repro.core.islands import ISLANDS, Island, scope
 from repro.core.ops import PolyOp, Ref
 
@@ -51,16 +71,13 @@ _TOKEN = re.compile(r"""
   | (?P<lparen>\()
   | (?P<rparen>\))
   | (?P<comma>,)
+  | (?P<star>\*)
+  | (?P<cmp><=|>=|<|>)
   | (?P<eq>=)
   | (?P<string>'[^']*'|"[^"]*")
   | (?P<number>-?\d+(?:\.\d*)?(?:[eE][+-]?\d+)?)
   | (?P<name>[A-Za-z_][A-Za-z0-9_]*(?::[A-Za-z0-9_]+)?)
 """, re.VERBOSE)
-
-
-class QueryParseError(ValueError):
-    """A qlang query failed to parse; the message carries the offset and a
-    caret-annotated excerpt of the source text."""
 
 
 def _tokenize(text: str) -> List[Tuple[str, str, int]]:
@@ -209,6 +226,9 @@ class _Parser:
         if kind == "name":
             if val == "_":
                 return self._placeholder(island, pos)
+            if val == "select" and (self._peek("star") or self._peek("name")):
+                # the paper's literal SQL surface: select ... from ...
+                return self._parse_sql_select(island, pos)
             if self._peek("lparen"):
                 self._next()
                 if _is_island_token(val):    # nested block -> boundary node
@@ -229,6 +249,82 @@ class _Parser:
                 f"(e.g. lo={val})"))
         raise QueryParseError(_fmt_err(self.text, pos,
                                        f"unexpected token {val!r}"))
+
+    def _parse_sql_select(self, island: Island, pos: int):
+        """``select (*|cols) from table [where col <op> num [and ...]]`` —
+        the §III literal text, compiled onto the existing relational ops
+        (see the module docstring).  Only the RELATIONAL island carries this
+        surface; per-column bounds fold into one ``select`` node each, and
+        a non-star column list becomes a trailing ``project``."""
+        if island.name != "relational":
+            raise QueryParseError(_fmt_err(
+                self.text, pos,
+                f"literal 'select ... from ...' text is the RELATIONAL "
+                f"surface; inside {island.name.upper()}(...) use the "
+                f"operator form select(...)"))
+        cols: Optional[List[str]] = None
+        if self._peek("star"):
+            self._next()
+        else:
+            cols = [self._expect("name", "a column name or '*'")[1]]
+            while self._peek("comma"):
+                self._next()
+                cols.append(self._expect("name", "a column name")[1])
+        frm = self._expect("name", "'from'")
+        if frm[1].lower() != "from":
+            raise QueryParseError(_fmt_err(
+                self.text, frm[2], f"expected 'from', got {frm[1]!r}"))
+        tbl = self._expect("name", "a table name (or '_')")
+        node = self._placeholder(island, tbl[2]) if tbl[1] == "_" \
+            else Ref(tbl[1])
+        nxt = self._peek("name")
+        if nxt is not None and nxt[1].lower() == "where":
+            self._next()
+            # column -> [lo, hi]; repeated bounds tighten (max lo, min hi)
+            bounds: Dict[str, List[Optional[float]]] = {}
+            order: List[str] = []
+            while True:
+                col = self._expect("name", "a column name")[1]
+                optok = self._peek()
+                if optok is None or optok[0] not in ("cmp", "eq"):
+                    got = repr(optok[1]) if optok else "end of query"
+                    p = optok[2] if optok else len(self.text)
+                    raise QueryParseError(_fmt_err(
+                        self.text, p,
+                        f"expected a comparison (<, <=, >, >=, =), "
+                        f"got {got}"))
+                self._next()
+                op = optok[1]
+                numtok = self._expect("number", "a numeric bound")
+                v = float(numtok[1]) if any(c in numtok[1] for c in ".eE") \
+                    else int(numtok[1])
+                if col not in bounds:
+                    bounds[col] = [None, None]
+                    order.append(col)
+                b = bounds[col]
+                if op in (">", ">="):
+                    b[0] = v if b[0] is None else max(b[0], v)
+                elif op in ("<", "<="):
+                    b[1] = v if b[1] is None else min(b[1], v)
+                else:                                   # '=' pins both
+                    b[0] = v if b[0] is None else max(b[0], v)
+                    b[1] = v if b[1] is None else min(b[1], v)
+                conj = self._peek("name")
+                if conj is not None and conj[1].lower() == "and":
+                    self._next()
+                    continue
+                break
+            for col in order:
+                lo, hi = bounds[col]
+                kw: Dict[str, object] = {"column": col}
+                if lo is not None:
+                    kw["lo"] = lo
+                if hi is not None:
+                    kw["hi"] = hi
+                node = island.select(node, **kw)
+        if cols is not None:
+            node = island.project(node, columns=cols)
+        return node
 
     def _parse_call(self, island: Island, opname: str, pos: int):
         args, kwargs = [], {}

@@ -1,6 +1,8 @@
 from repro.runtime.trainer import Trainer, SimulatedFailure
-from repro.runtime.server import BatchServer, QueryServer, Shed
-from repro.runtime.fault import FailureInjector, StragglerDetector
+from repro.runtime.server import BatchServer, Overloaded, QueryServer, Shed
+from repro.runtime.fault import (EngineFaultInjector, FailureInjector,
+                                 StragglerDetector)
 
 __all__ = ["Trainer", "SimulatedFailure", "BatchServer", "QueryServer",
-           "Shed", "FailureInjector", "StragglerDetector"]
+           "Shed", "Overloaded", "EngineFaultInjector", "FailureInjector",
+           "StragglerDetector"]

@@ -9,12 +9,17 @@ that was optimal under training-time conditions is re-evaluated).
 from __future__ import annotations
 
 import math
+import threading
+import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
 
 
 class SimulatedFailure(RuntimeError):
-    pass
+    # injected faults stand in for real infrastructure failures, so the
+    # executor's errors.is_engine_failure classifier must treat them as
+    # breaker-feedable (unlike, say, a KeyError from a bad query)
+    engine_failure = True
 
 
 @dataclass
@@ -26,6 +31,56 @@ class FailureInjector:
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise SimulatedFailure(f"injected node failure at step {step}")
+
+
+class EngineFaultInjector:
+    """Engine-level fault source for the resilience path: plugged into
+    ``core.health.EngineHealth(injector=...)``, its ``before_op`` hook fires
+    in the executor just before every engine op, so a benchmark or test can
+    take an engine down (or make it pathologically slow) MID-SERVE without
+    touching engine code.
+
+        inj = EngineFaultInjector()
+        health = EngineHealth(injector=inj)
+        ...
+        inj.fail_engine("kv_sparse")          # ops now raise SimulatedFailure
+        inj.slow_engine("dense_array", 0.05)  # ops now sleep 50 ms first
+        inj.recover("kv_sparse")              # back to healthy
+
+    Thread-safe: the serve path reads the fault maps under the same lock the
+    control calls mutate them under."""
+
+    def __init__(self):
+        self._down: Set[str] = set()
+        self._slow: Dict[str, float] = {}
+        self._lock = threading.Lock()
+        self.faults_fired = 0
+
+    def fail_engine(self, engine: str):
+        with self._lock:
+            self._down.add(engine)
+
+    def slow_engine(self, engine: str, seconds: float):
+        with self._lock:
+            self._slow[engine] = seconds
+
+    def recover(self, engine: str):
+        with self._lock:
+            self._down.discard(engine)
+            self._slow.pop(engine, None)
+
+    def before_op(self, engine: str, op: str = ""):
+        with self._lock:
+            down = engine in self._down
+            delay = self._slow.get(engine, 0.0)
+            if down or delay:
+                self.faults_fired += 1
+        if down:
+            raise SimulatedFailure(
+                f"injected outage on engine {engine!r}"
+                + (f" (op {op!r})" if op else ""))
+        if delay:
+            time.sleep(delay)
 
 
 @dataclass

@@ -27,19 +27,27 @@ measurements keep the monitor's plan ranking honest.
 from many threads (the middleware serializes same-signature requests on a
 per-signature lock, so a cold signature trains exactly once under any
 admission pattern; stats updates are lock-guarded), and
-``submit_many``/``serve`` drive a dedicated request thread pool so callers
-get multi-threaded admission without managing threads themselves.  The
-request pool is NOT the executor's host pool: request threads block on
+``submit_many``/``serve`` drive a shared ``core.reqpool.RequestPool`` so
+callers get multi-threaded admission without managing threads themselves.
+The request pool is NOT the executor's host pool: request threads block on
 level barriers, and parking them on the pool that runs the levels could
 starve it.  Exploration runs off the request path (background host-pool
 tasks), so ``stats["seconds"]`` — summed per-request wall time across
 request threads — contains zero exploration time.
+
+**Adaptive shedding** (``latency_target_s=``): instead of a fixed
+``max_pending``, the in-flight bound tracks measured serve latency with the
+classic AIMD rule — every completion under the target grows the bound by
+one, a completion over it halves the bound — so admission follows what the
+engines can actually sustain (queue-based load leveling).  Between the
+adaptive bound and twice the bound, requests are admitted *degraded*
+(planned on the always-up engine set via the middleware's health registry)
+before anything is shed: the graceful-degradation rung of the ladder.
 """
 from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
@@ -47,15 +55,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import Overloaded
+from repro.core.reqpool import RequestPool
 
-@dataclass(frozen=True)
-class Shed:
-    """A request rejected by bounded admission (``QueryServer(max_pending=N)``
-    with N requests already in flight): the query was never executed.  Takes
-    the rejected request's slot in ``submit_many``'s in-order result list so
-    callers can retry exactly what was dropped."""
-    query: Any
-    reason: str = "max_pending"
+# The pre-taxonomy name for a shed request's result slot.  ``Overloaded``
+# (a BigDAWGError) plays the same role with the same ``query``/``reason``
+# attributes, so the old name is a deprecated alias — ``isinstance(r, Shed)``
+# and ``Shed(q)`` both keep working.
+Shed = Overloaded
 
 
 @dataclass
@@ -84,6 +91,10 @@ class BatchServer:
         self.tokens = np.zeros((slots,), np.int32)
         self.stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0,
                       "decode_seconds": 0.0}
+        # guards slot state + the shared cache scatter; prefill COMPUTE runs
+        # pool-parallel in serve(), attachment is serialized here
+        self._slot_lock = threading.Lock()
+        self._requests = RequestPool(thread_name_prefix="bigdawg-prefill")
 
     # -- slot management -----------------------------------------------------
     def _free_slots(self):
@@ -117,20 +128,30 @@ class BatchServer:
                                                 start)
         self.cache = jax.tree.map(place, self.cache, cache_rows)
 
+    def _prefill_compute(self, req: Request):
+        """The pure-compute half of a prefill (no shared state): safe to run
+        on a request-pool worker while other prefills compute beside it."""
+        tok = jnp.asarray(req.prompt[None, :], jnp.int32)
+        return self.prefill_fn(self.params, tok)
+
+    def _attach(self, slot: int, req: Request, logits, cache_rows) -> None:
+        """The stateful half: scatter the prefilled cache rows into the
+        batch cache and activate the slot (serialized on the slot lock)."""
+        with self._slot_lock:
+            self._write_rows(cache_rows, slot, len(req.prompt))
+            first = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(first)
+            self.tokens[slot] = first
+            self.pos[slot] = len(req.prompt)
+            self.active[slot] = req
+            self.stats["prefills"] += 1
+
     def submit(self, req: Request) -> bool:
         free = self._free_slots()
         if not free:
             return False
-        slot = free[0]
-        tok = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, cache_rows, pos = self.prefill_fn(self.params, tok)
-        self._write_rows(cache_rows, slot, len(req.prompt))
-        first = int(jnp.argmax(logits[0]))
-        req.out_tokens.append(first)
-        self.tokens[slot] = first
-        self.pos[slot] = len(req.prompt)
-        self.active[slot] = req
-        self.stats["prefills"] += 1
+        logits, cache_rows, pos = self._prefill_compute(req)
+        self._attach(free[0], req, logits, cache_rows)
         return True
 
     # -- decode ----------------------------------------------------------------
@@ -166,6 +187,30 @@ class BatchServer:
             steps += 1
         return requests
 
+    def serve(self, requests: List[Request], workers: Optional[int] = None,
+              max_steps: int = 10000):
+        """``run`` with pool-parallel prefill: each admission wave computes
+        its prefills concurrently on the shared request pool (the pure JAX
+        calls overlap via async dispatch + GIL release), then attaches them
+        to free slots on the caller thread — decode still advances all
+        active slots together.  ``workers<=1`` degrades to ``run``'s
+        sequential admission."""
+        pending = list(requests)
+        steps = 0
+        while (pending or self.active) and steps < max_steps:
+            free = self._free_slots()
+            wave = pending[:len(free)]
+            if wave:
+                del pending[:len(wave)]
+                outs = self._requests.map_ordered(self._prefill_compute,
+                                                  wave, workers)
+                for slot, req, (logits, cache_rows, _pos) in zip(
+                        free, wave, outs):
+                    self._attach(slot, req, logits, cache_rows)
+            self.step()
+            steps += 1
+        return requests
+
 
 class QueryServer:
     """Production-facing polystore front end over a ``BigDAWG`` instance.
@@ -181,32 +226,50 @@ class QueryServer:
     **Bounded admission.**  With ``max_pending=N``, batch admission
     (``submit_many``/``serve``) keeps at most N requests in flight at once:
     a request arriving while N are outstanding is *shed* — its result slot
-    holds a ``Shed`` marker, ``stats["shed"]`` counts it, and the request is
-    never executed (load-shedding backpressure instead of an unbounded
-    queue; ROADMAP PR 4 follow-on).  ``max_pending=None`` (default) admits
-    everything, the pre-PR-5 behavior.  Direct ``submit`` calls bypass the
-    bound: the caller already owns a thread and blocking it is the natural
-    backpressure there.
+    holds an ``Overloaded`` marker, ``stats["shed"]`` counts it, and the
+    request is never executed (load-shedding backpressure instead of an
+    unbounded queue; ROADMAP PR 4 follow-on).  ``max_pending=None``
+    (default) admits everything, the pre-PR-5 behavior.  Direct ``submit``
+    calls bypass the bound: the caller already owns a thread and blocking
+    it is the natural backpressure there.
+
+    **Adaptive shedding.**  ``latency_target_s=T`` replaces the fixed bound
+    with an AIMD one keyed to measured serve latency: the bound grows by 1
+    after each completion whose latency EWMA sits under T and halves when
+    the EWMA overshoots, floored at 1 and capped at ``max_pending`` (when
+    given).  Requests landing between the bound and twice the bound are
+    admitted *degraded* — executed with the middleware's degrade mask
+    (always-up engines only; requires ``BigDAWG(health=...)``) — so the
+    server sheds only after degrading, and ``stats["degraded"]`` counts the
+    slow-but-alive serves.
     """
 
     # default size of the request admission pool (submit_many/serve)
-    DEFAULT_REQUEST_WORKERS = 4
+    DEFAULT_REQUEST_WORKERS = RequestPool.DEFAULT_WORKERS
 
-    def __init__(self, bigdawg, max_pending: Optional[int] = None):
+    def __init__(self, bigdawg, max_pending: Optional[int] = None,
+                 latency_target_s: Optional[float] = None):
         self.bd = bigdawg
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if latency_target_s is not None and latency_target_s <= 0:
+            raise ValueError(f"latency_target_s must be > 0, got "
+                             f"{latency_target_s}")
         self.max_pending = max_pending
+        self.latency_target_s = latency_target_s
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
                       "replans": 0, "explorations": 0, "shed": 0,
-                      "seconds": 0.0}
+                      "seconds": 0.0, "degraded": 0, "failovers": 0,
+                      "breaker_trips": 0, "latency_ewma": 0.0}
         self._pending = 0          # batch-admitted requests still in flight
+        # adaptive in-flight bound (AIMD; only consulted when
+        # latency_target_s is set) and the serve-latency EWMA driving it
+        self._bound = float(max_pending or 2 * self.DEFAULT_REQUEST_WORKERS)
+        self._lat_ewma = 0.0
         self._stats_lock = threading.Lock()
         # lazily-built request pool (NOT the executor host pool — request
         # threads block on level barriers); grows, never shrinks
-        self._request_pool: Optional[ThreadPoolExecutor] = None
-        self._request_pool_size = 0
-        self._pool_lock = threading.Lock()
+        self._requests = RequestPool()
 
     def warm(self, queries) -> int:
         """Admission/warmup: train every query shape once so production
@@ -224,12 +287,17 @@ class QueryServer:
         background explorations first, so their measurements are included."""
         self.bd.persist()
 
-    def submit(self, query):
+    def submit(self, query, degrade: bool = False):
         """Admit one request (safe from any thread).  The measured seconds
         cover the serve path only — background exploration the serve may
-        have scheduled runs off-path and is never in this timing."""
+        have scheduled runs off-path and is never in this timing.
+        ``degrade=True`` (the adaptive-shedding middle rung) executes under
+        the middleware's degrade mask — always-up engines only."""
         t0 = time.perf_counter()
-        rep = self.bd.execute(query, mode="auto")
+        if degrade:
+            rep = self.bd.execute(query, mode="auto", degrade=True)
+        else:     # plain call keeps pre-taxonomy BigDAWG stand-ins working
+            rep = self.bd.execute(query, mode="auto")
         dt = time.perf_counter() - t0
         with self._stats_lock:
             self.stats["requests"] += 1
@@ -242,33 +310,59 @@ class QueryServer:
                 self.stats["replans"] += 1
             if rep.explored:
                 self.stats["explorations"] += 1
+            if getattr(rep, "degraded", False):
+                self.stats["degraded"] += 1
+            self.stats["failovers"] += getattr(rep, "failovers", 0)
+            self.stats["breaker_trips"] = getattr(self.bd, "breaker_trips", 0)
+            if self.latency_target_s is not None:
+                # AIMD on the in-flight bound, driven by the latency EWMA:
+                # under target -> +1 (up to max_pending when given), over ->
+                # halve (floor 1).  Training requests are excluded — a cold
+                # signature's plan-enumeration time says nothing about
+                # steady-state serve latency
+                if rep.mode != "training":
+                    a = 0.2
+                    self._lat_ewma = dt if self._lat_ewma == 0.0 \
+                        else (1 - a) * self._lat_ewma + a * dt
+                    self.stats["latency_ewma"] = self._lat_ewma
+                    if self._lat_ewma <= self.latency_target_s:
+                        cap = float(self.max_pending) if self.max_pending \
+                            else float("inf")
+                        self._bound = min(cap, self._bound + 1.0)
+                    else:
+                        self._bound = max(1.0, self._bound / 2.0)
         return rep
 
-    def _pool(self, workers: int) -> ThreadPoolExecutor:
-        with self._pool_lock:
-            if self._request_pool is None or self._request_pool_size < workers:
-                # a superseded pool is not shut down (in-flight submits may
-                # still hold it); its idle threads park until process exit
-                self._request_pool = ThreadPoolExecutor(
-                    max_workers=workers, thread_name_prefix="bigdawg-request")
-                self._request_pool_size = workers
-            return self._request_pool
-
-    def _try_admit(self) -> bool:
-        """Reserve an in-flight slot for one batch request, or shed.  The
-        check-and-increment is atomic under the stats lock, so concurrent
-        ``submit_many`` batches can never jointly exceed ``max_pending``."""
+    def _try_admit(self) -> Optional[str]:
+        """Reserve an in-flight slot for one batch request: ``"admit"``
+        (serve normally), ``"degrade"`` (adaptive middle rung: serve on the
+        always-up engines), or ``None`` (shed).  The check-and-increment is
+        atomic under the stats lock, so concurrent ``submit_many`` batches
+        can never jointly exceed the bound."""
         with self._stats_lock:
+            if self.latency_target_s is not None:
+                bound = max(1, int(self._bound))
+                if self._pending < bound:
+                    self._pending += 1
+                    return "admit"
+                # degrade before shedding — but only when the middleware
+                # can actually plan a degraded serve (health registry)
+                if self._pending < 2 * bound \
+                        and getattr(self.bd, "health", None) is not None:
+                    self._pending += 1
+                    return "degrade"
+                self.stats["shed"] += 1
+                return None
             if self.max_pending is not None \
                     and self._pending >= self.max_pending:
                 self.stats["shed"] += 1
-                return False
+                return None
             self._pending += 1
-            return True
+            return "admit"
 
-    def _admitted_submit(self, q):
+    def _admitted_submit(self, q, degrade: bool = False):
         try:
-            return self.submit(q)
+            return self.submit(q, degrade=degrade)
         finally:
             with self._stats_lock:
                 self._pending -= 1
@@ -283,18 +377,26 @@ class QueryServer:
 
         With ``max_pending=N`` on the server, a request arriving while N
         batch requests are in flight is rejected *without blocking*: its
-        slot in the returned list is a ``Shed`` marker and ``stats["shed"]``
-        is bumped (see the class docstring)."""
+        slot in the returned list is an ``Overloaded`` marker and
+        ``stats["shed"]`` is bumped.  With ``latency_target_s`` the bound is
+        the AIMD one, and overflow below twice the bound is served degraded
+        instead of shed (see the class docstring)."""
         queries = list(queries)
         workers = workers or self.DEFAULT_REQUEST_WORKERS
+        shed_reason = "latency_target" if self.latency_target_s is not None \
+            else "max_pending"
         if workers <= 1 or len(queries) <= 1:
             # sequential admission still reserves an in-flight slot per
             # request: the bound is shared across batches, and a concurrent
             # submit_many on another thread must see this one's occupancy
             # (alone, a sequential batch never exceeds one slot)
-            return [self._admitted_submit(q) if self._try_admit()
-                    else Shed(q) for q in queries]
-        pool = self._pool(workers)
+            out = []
+            for q in queries:
+                adm = self._try_admit()
+                out.append(Overloaded(q, shed_reason) if adm is None else
+                           self._admitted_submit(q, degrade=adm == "degrade"))
+            return out
+        pool = self._requests.pool(workers)
         # the pool only grows (in-flight submits may hold the old one), so a
         # smaller `workers` must be enforced here or a 4-wide pool would run
         # a workers=2 batch 4 wide — and misreport every thread-count sweep.
@@ -306,25 +408,28 @@ class QueryServer:
         for q in queries:
             # shed BEFORE the worker-width gate: a full server must reject
             # immediately, not park the caller until a slot frees
-            if not self._try_admit():
-                futures.append(Shed(q))
+            adm = self._try_admit()
+            if adm is None:
+                futures.append(Overloaded(q, shed_reason))
                 continue
             gate.acquire()
-            fut = pool.submit(self._admitted_submit, q)
+            fut = pool.submit(self._admitted_submit, q,
+                              degrade=adm == "degrade")
             fut.add_done_callback(lambda _f: gate.release())
             futures.append(fut)
-        return [f if isinstance(f, Shed) else f.result() for f in futures]
+        return [f if isinstance(f, Overloaded) else f.result()
+                for f in futures]
 
     def serve(self, queries: Iterable, workers: Optional[int] = None) -> Dict:
         """Drive a traffic batch through ``submit_many`` and summarize it:
         ``{"reports", "seconds" (wall), "rps", "shed", "workers"}`` — the
         requests/sec figure ``benchmarks/fig_concurrent_serving.py`` tracks
         (``rps`` counts served requests only; ``shed`` says how many of this
-        batch bounded admission rejected)."""
+        batch admission control rejected)."""
         t0 = time.perf_counter()
         reports = self.submit_many(queries, workers=workers)
         wall = time.perf_counter() - t0
-        shed = sum(1 for r in reports if isinstance(r, Shed))
+        shed = sum(1 for r in reports if isinstance(r, Overloaded))
         return {"reports": reports, "seconds": wall,
                 "rps": (len(reports) - shed) / max(wall, 1e-9),
                 "shed": shed,

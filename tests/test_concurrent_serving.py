@@ -254,7 +254,12 @@ def test_dispatch_overhead_learned_and_persisted(tmp_path):
     assert cm2.dispatch_overhead_s() == pytest.approx(4e-4)
 
 
-def test_auto_gate_measures_dispatch_overhead_on_first_concurrent_run():
+def test_auto_gate_measures_dispatch_overhead_on_first_concurrent_run(
+        monkeypatch):
+    # the gate only runs when the host pool exists; on a 1-core machine the
+    # default pool size is 1 and concurrent dispatch stays inline, so pin a
+    # multi-worker pool for this test
+    monkeypatch.setenv("REPRO_HOST_WORKERS", "4")
     bd = _bd()
     q = array.matmul(array.tfidf(relational.select("waves", column="value",
                                                    lo=0.0)),
