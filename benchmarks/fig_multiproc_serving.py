@@ -1,0 +1,224 @@
+"""Multi-process serving: requests/sec through a ``ProcPool`` of 1/2/4
+worker processes on warm signature traffic, plus sharded scatter–gather
+vs single-worker execution and a worker-kill recovery probe (ISSUE 7
+tentpole figure).
+
+The in-process serving stack (fig_concurrent_serving) overlaps only where
+engine ops release the GIL; every pure-Python step — planning, signature
+hashing, plan-cache lookups, merges — serializes client threads.  The pool
+breaks that ceiling by fanning requests across N interpreters, each a full
+middleware stack sharing plans through the monitor/plan-cache files.
+
+Entries:
+
+  * ``warm_procsK``      — S pre-trained signatures, R requests admitted
+                           from a fixed 4-thread client through
+                           ``QueryServer(pool)``; ``rps_speedup_vs_1`` is
+                           the headline.  Process scaling needs processor
+                           scaling: on a host with >=4 CPUs the 4-worker
+                           pool must clear 2x the 1-worker rps (asserted);
+                           on smaller hosts the numbers are recorded as
+                           measured — ``host_cpus`` says which regime a
+                           checked-in JSON came from, and the CI gate reads
+                           it before judging the speedup.
+  * ``scatter_vs_single`` — one row-range sharded sort executed as per-shard
+                           fragments + k-way merge (``scatter="always"``)
+                           vs whole on one worker (``"never"``), results
+                           compared for equality.
+  * ``fault_recovery``   — SIGKILL a worker mid-request; every request must
+                           still serve (respawn + retry), zero lost.
+
+Run: PYTHONPATH=src python benchmarks/fig_multiproc_serving.py [--fast]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import ColumnarTable, DenseTensor, array, relational
+from repro.core.procpool import ProcPool
+from repro.runtime.fault import WorkerKillInjector
+from repro.runtime.server import QueryServer
+
+HOST_CPUS = os.cpu_count() or 1
+CLIENT_THREADS = 4
+N_SIGS = 4
+
+
+def make_data(rows: int):
+    rng = np.random.default_rng(7)
+    return {
+        "T": ColumnarTable({"key": rng.integers(0, 64, rows).astype(np.int32),
+                            "value": rng.normal(size=rows).astype(np.float32)}),
+        "U": ColumnarTable({"key": np.arange(64, dtype=np.int32),
+                            "w": rng.normal(size=64).astype(np.float32)}),
+        "M": DenseTensor(rng.normal(size=(rows // 64, 16)).astype(np.float32)),
+        "W": DenseTensor(rng.normal(size=(16, 8)).astype(np.float32)),
+    }
+
+
+def register_all(target, data):
+    target.register("T", data["T"], "columnar")
+    target.register("U", data["U"], "columnar")
+    target.register("M", data["M"], "dense_array")
+    target.register("W", data["W"], "dense_array")
+
+
+def query(i: int):
+    return [
+        lambda: relational.sort("T", by="value"),
+        lambda: relational.groupby_sum("T", key="key", value="value",
+                                       num_groups=64),
+        lambda: relational.join("T", "U", left_on="key", right_on="key"),
+        lambda: array.matmul("M", "W"),
+    ][i % N_SIGS]()
+
+
+def traffic(requests: int):
+    return [query(i) for i in range(requests)]
+
+
+def main(fast: bool = False):
+    fast = fast or "--fast" in sys.argv
+    rows = 20_000 if fast else 120_000
+    requests = 12 if fast else 48
+    shard_rows = 60_000 if fast else 400_000
+    proc_counts = (1, 2) if fast else (1, 2, 4)
+
+    data = make_data(rows)
+    report = {}
+
+    with tempfile.TemporaryDirectory() as tmp:
+        state = os.path.join(tmp, "monitor.json")
+
+        # -- warm serving at 1/2/4 worker processes -------------------------
+        base_rps = None
+        for procs in proc_counts:
+            pool = ProcPool(procs, state_path=state, train_plans=2,
+                            train_repeats=1)
+            try:
+                register_all(pool, data)
+                srv = QueryServer(pool)
+                # first pool trains (persisting each signature as it goes);
+                # later pools start warm from the shared files — but every
+                # WORKER must serve warm, so round the warmup over the pool
+                srv.warm([query(i) for i in range(N_SIGS)])
+                srv.submit_many(traffic(2 * procs * N_SIGS),
+                                workers=CLIENT_THREADS)      # per-worker warm
+                t0 = time.perf_counter()
+                reps = srv.submit_many(traffic(requests),
+                                       workers=CLIENT_THREADS)
+                wall = time.perf_counter() - t0
+                assert all(r.mode == "production" for r in reps), \
+                    "warm round hit a training serve"
+            finally:
+                pool.close()
+            rps = len(reps) / max(wall, 1e-9)
+            if base_rps is None:
+                base_rps = rps
+            report[f"warm_procs{procs}"] = {
+                "processes": procs,
+                "client_threads": CLIENT_THREADS,
+                "requests": len(reps),
+                "seconds": round(wall, 6),
+                "rps": round(rps, 3),
+                "rps_speedup_vs_1": round(rps / base_rps, 3),
+                "host_cpus": HOST_CPUS,
+            }
+            e = report[f"warm_procs{procs}"]
+            print(f"# warm procs={procs} requests={e['requests']} "
+                  f"rps={e['rps']:.2f} speedup={e['rps_speedup_vs_1']:.2f}x",
+                  file=sys.stderr, flush=True)
+
+        # process scaling needs processor scaling — only judged where the
+        # host can physically deliver it
+        if HOST_CPUS >= 4 and "warm_procs4" in report:
+            sp = report["warm_procs4"]["rps_speedup_vs_1"]
+            assert sp >= 2.0, \
+                f"4-worker pool only {sp:.2f}x vs 1 on a {HOST_CPUS}-CPU host"
+
+    # -- sharded scatter–gather vs single-worker ----------------------------
+    rng = np.random.default_rng(11)
+    big = ColumnarTable(
+        {"key": rng.integers(0, 64, shard_rows).astype(np.int32),
+         "value": rng.normal(size=shard_rows).astype(np.float32)})
+    procs = min(2 if fast else 4, max(proc_counts))
+    pool = ProcPool(procs, train_plans=2, train_repeats=1, scatter="never")
+    try:
+        pool.register("B", big, "columnar", shards=procs)
+        q = relational.sort("B", by="value")
+        single_rep = pool.execute(q, mode="training")
+        t0 = time.perf_counter()
+        single_rep = pool.execute(q)
+        single_s = time.perf_counter() - t0
+        pool.scatter = "always"
+        scat_rep = pool.execute(q, mode="training")
+        t0 = time.perf_counter()
+        scat_rep = pool.execute(q)
+        scat_s = time.perf_counter() - t0
+        matches = bool(np.allclose(
+            np.asarray(scat_rep.result.columns["value"]),
+            np.asarray(single_rep.result.columns["value"])))
+        assert matches, "scatter-gather result diverged from single-worker"
+        assert scat_rep.shards == procs
+    finally:
+        pool.close()
+    report["scatter_vs_single"] = {
+        "processes": procs,
+        "shards": procs,
+        "rows": shard_rows,
+        "seconds": round(scat_s, 6),
+        "seconds_single": round(single_s, 6),
+        "speedup_vs_single": round(single_s / max(scat_s, 1e-9), 3),
+        "matches_single_worker": matches,
+        "host_cpus": HOST_CPUS,
+    }
+    e = report["scatter_vs_single"]
+    print(f"# scatter shards={e['shards']} rows={e['rows']} "
+          f"scatter={e['seconds']:.3f}s single={e['seconds_single']:.3f}s "
+          f"speedup={e['speedup_vs_single']:.2f}x matches={matches}",
+          file=sys.stderr, flush=True)
+
+    # -- worker-kill recovery: zero lost requests ---------------------------
+    inj = WorkerKillInjector(kill_on_dispatch=2)
+    pool = ProcPool(2, train_plans=2, train_repeats=1, retries=1,
+                    kill_injector=inj)
+    served = 0
+    t0 = time.perf_counter()
+    try:
+        register_all(pool, data)
+        kill_requests = 6
+        for i in range(kill_requests):
+            rep = pool.execute(query(i))
+            served += 1 if rep.result is not None else 0
+    finally:
+        fault_wall = time.perf_counter() - t0
+        kills, respawns = inj.kills, pool.respawns
+        trips = pool.breaker_trips
+        pool.close()
+    assert kills >= 1 and respawns >= 1 and served == kill_requests
+    report["fault_recovery"] = {
+        "requests": kill_requests,
+        "served": served,
+        "kills": kills,
+        "respawns": respawns,
+        "breaker_trips": trips,
+        "seconds": round(fault_wall, 6),
+        "host_cpus": HOST_CPUS,
+    }
+    e = report["fault_recovery"]
+    print(f"# fault kills={e['kills']} respawns={e['respawns']} "
+          f"served={e['served']}/{e['requests']}",
+          file=sys.stderr, flush=True)
+
+    print(json.dumps(report, indent=1))
+    return report
+
+
+if __name__ == "__main__":
+    main()

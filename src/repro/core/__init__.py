@@ -25,6 +25,9 @@ from repro.core.middleware import (BigDAWG, CachedPlan, Report, masked_sig,
                                    default_plan_cache_path)
 from repro.core.qlang import bigdawg
 from repro.core.reqpool import RequestPool
+from repro.core.shardplan import (ScatterGather, ShardInfo, analyze,
+                                  analyze_catalog, run_scatter_gather)
+from repro.core.procpool import ProcPool, worker_channel
 from repro.core.api import IslandNamespace, Result, Session, connect
 
 __all__ = [
@@ -41,6 +44,7 @@ __all__ = [
     "Report", "default_plan_cache_path", "masked_sig",
     "BigDAWGError", "EngineDown", "Overloaded", "PlanInfeasible",
     "QueryParseError", "is_engine_failure", "CircuitBreaker", "EngineHealth",
-    "RequestPool", "bigdawg", "IslandNamespace", "Result", "Session",
-    "connect",
+    "RequestPool", "bigdawg", "ScatterGather", "ShardInfo", "analyze",
+    "analyze_catalog", "run_scatter_gather", "ProcPool", "worker_channel",
+    "IslandNamespace", "Result", "Session", "connect",
 ]

@@ -113,9 +113,16 @@ class Result:
 
 def _result_from_report(query: PolyOp, rep: Report) -> Result:
     nodes = query.nodes()
-    amap = dict(_plan_from_key(rep.plan_key).assignment)
-    provenance = tuple(f"{n.island}.{n.op}@{amap[i]}"
-                       for i, n in enumerate(nodes))
+    if getattr(rep, "shards", 0):
+        # scatter–gather result: plan_key describes ONE shard fragment
+        # (possibly scope-wrapped, so its node positions need not align
+        # with the query's) — per-node provenance is not meaningful for
+        # the merged whole
+        provenance: Tuple[str, ...] = ()
+    else:
+        amap = dict(_plan_from_key(rep.plan_key).assignment)
+        provenance = tuple(f"{n.island}.{n.op}@{amap[i]}"
+                           for i, n in enumerate(nodes))
     seen: Dict[str, None] = {}
     for n in nodes:
         seen.setdefault(n.island)
@@ -149,11 +156,15 @@ class Session:
     def catalog(self):
         return self.bigdawg.catalog
 
-    def register(self, name: str, obj, engine: str) -> "Session":
+    def register(self, name: str, obj, engine: str,
+                 shards: Optional[int] = None) -> "Session":
         """Home a container on an engine under ``name`` (casting it to the
-        engine's native data model if needed).  Returns the session, so
-        registrations chain."""
-        self.bigdawg.register(name, obj, engine)
+        engine's native data model if needed).  ``shards=N`` additionally
+        row-range splits the table for scatter–gather execution (shard
+        parts are registered as ``name#i``; on a ``processes=`` session
+        part ``i`` lives only on worker ``i % processes``).  Returns the
+        session, so registrations chain."""
+        self.bigdawg.register(name, obj, engine, shards=shards)
         return self
 
     def parse(self, text: str) -> PolyOp:
@@ -218,11 +229,27 @@ class Session:
         the same path starts warm."""
         self.bigdawg.persist()
 
+    def close(self) -> None:
+        """Release backend resources: a ``processes=`` session stops its
+        worker pool; an in-process session is a no-op.  Sessions are also
+        context managers (``with connect(processes=4) as s: ...``)."""
+        closer = getattr(self.bigdawg, "close", None)
+        if closer is not None:
+            closer()
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
 
 def connect(state_path: Optional[str] = None, *,
             monitor: Optional[Monitor] = None,
             bigdawg: Optional[BigDAWG] = None,
             resilient: bool = False,
+            processes: Optional[int] = None,
             **bigdawg_kwargs) -> Session:
     """Open a polystore session.
 
@@ -237,7 +264,21 @@ def connect(state_path: Optional[str] = None, *,
     thresholds or plug in a fault injector).  Remaining keyword arguments go
     to ``BigDAWG`` — ``train_plans``, ``explore_budget``, ``calibrate``,
     ``replan_factor``, ``health``...
+
+    ``processes=N`` backs the session with a ``core.procpool.ProcPool`` —
+    N worker processes each running a full middleware stack, sharing plans
+    and monitor history through the ``state_path`` files, with sharded
+    scatter–gather execution for ``register(..., shards=)`` tables.  Close
+    the session (or use it as a context manager) to stop the workers.
     """
+    if processes is not None and processes > 1:
+        if bigdawg is not None or monitor is not None:
+            raise ValueError("processes= builds its own per-worker "
+                             "middleware; it cannot be combined with "
+                             "bigdawg=/monitor=")
+        from repro.core.procpool import ProcPool
+        return Session(ProcPool(processes=processes, state_path=state_path,
+                                resilient=resilient, **bigdawg_kwargs))
     if bigdawg is not None:
         if state_path or monitor or resilient or bigdawg_kwargs:
             raise ValueError("bigdawg= wraps an existing instance; it cannot "

@@ -184,6 +184,20 @@ def _col_groupby_sum(attrs, t: ColumnarTable):
     return ColumnarTable({"key": jnp.arange(nseg, dtype=jnp.int32), "sum": s})
 
 
+def _col_sort(attrs, t: ColumnarTable):
+    """ORDER BY ``attrs["by"]`` (stable).  Output is COMPACTED — invalid rows
+    are dropped, not carried — which is what makes the scatter–gather merge
+    for this op a pure k-way ordered merge of per-shard runs.  Columns stay
+    numpy for the same host-pool reasons as the join."""
+    by = attrs["by"]
+    valid = np.asarray(t.valid)
+    cols = {c: np.asarray(v) for c, v in t.columns.items()}
+    if not valid.all():
+        cols = {c: v[valid] for c, v in cols.items()}
+    order = np.argsort(cols[by], kind="stable")
+    return ColumnarTable({c: v[order] for c, v in cols.items()})
+
+
 def _col_join(attrs, a: ColumnarTable, b: ColumnarTable):
     """Sort-merge equi-join (eager; dynamic output size).
 
@@ -422,6 +436,7 @@ ENGINES: Dict[str, Engine] = {
     "columnar": Engine("columnar", "columnar", {
         "count": _col_count, "distinct": _col_distinct, "select": _col_select,
         "project": _col_project, "groupby_sum": _col_groupby_sum,
+        "sort": _col_sort,
         "join": _col_join, "matmul": _col_matmul, "haar": _col_haar,
         "bin_hist": _col_bin_hist, "tfidf": _col_tfidf, "knn": _col_knn,
     }),

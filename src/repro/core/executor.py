@@ -254,7 +254,15 @@ def _gather_args(node: PolyOp, eng, catalog, values, migrator):
 
 def _deliver(query: PolyOp, result):
     """Deliver in the root island's data model (location transparency: the
-    caller sees the island model regardless of which engine produced it)."""
+    caller sees the island model regardless of which engine produced it).
+
+    A 0-d dense result — an aggregate scalar (``count``) — is delivered
+    as-is on every island: a scalar has no data-model home, and every
+    engine's aggregate already emits the same shape, so the scatter–gather
+    ``sum`` merge sees one uniform container regardless of root island."""
+    if getattr(result, "kind", None) == "dense" \
+            and getattr(result.data, "ndim", None) == 0:
+        return result
     want = island_kind(query.island)
     if getattr(result, "kind", want) != want:
         from repro.core import cast as castmod
@@ -408,3 +416,27 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
                            migrator.n_casts, plan, per_node, node_obs,
                            list(migrator.events), n_levels, size_obs,
                            shape_obs)
+
+
+def merge_shard_results(merge: str, parts, by: Optional[str] = None):
+    """Gather step of partitioned (scatter–gather) execution: reassemble the
+    per-shard fragment results the workers returned.  Returns ``(container,
+    merge_seconds)``.
+
+    Deliberately numpy-only (the ``tables`` merge primitives): the gather
+    runs in the procpool MASTER, which must never initialize the XLA backend
+    — the workers own the device.  ``merge`` is one of ``"concat"`` (row-wise
+    ops), ``"sum"`` (decomposable aggregates), or ``"kmerge"`` (k-way ordered
+    merge on sort column ``by``); see ``core.shardplan`` for which ops map to
+    which."""
+    from repro.core import tables
+    t0 = time.perf_counter()
+    if merge == "concat":
+        out = tables.concat_shards(parts)
+    elif merge == "sum":
+        out = tables.sum_shards(parts)
+    elif merge == "kmerge":
+        out = tables.kmerge_shards(parts, by)
+    else:
+        raise ValueError(f"unknown merge kind {merge!r}")
+    return out, time.perf_counter() - t0

@@ -119,10 +119,18 @@ class EngineHealth:
                  straggler_z: float = 6.0, straggler_warmup: int = 8,
                  straggler_min_s: float = 0.0,
                  always_up: Tuple[str, ...] = DEFAULT_ALWAYS_UP,
-                 time_fn=time.monotonic, injector=None):
+                 time_fn=time.monotonic, injector=None,
+                 channels: Optional[Iterable[str]] = None):
+        # ``channels`` overrides the default per-engine registry: the
+        # procpool master tracks WORKER PROCESSES ("worker:0", ...) through
+        # the same breaker protocol — a dead worker is an engine failure one
+        # level up the stack
+        self._failure_threshold = failure_threshold
+        self._cooldown_s = cooldown_s
+        names = tuple(channels) if channels is not None else tuple(ENGINES)
         self.breakers: Dict[str, CircuitBreaker] = {
             name: CircuitBreaker(name, failure_threshold, cooldown_s)
-            for name in ENGINES}
+            for name in names}
         # built lazily per engine (StragglerDetector lives in runtime.fault;
         # importing it at module scope would couple core to runtime)
         self._stragglers: Dict[str, object] = {}
@@ -134,11 +142,32 @@ class EngineHealth:
         # false trip fails over AWAY from the fastest engine.  Set it around
         # the serving latency target; 0.0 keeps the pure-z behavior
         self._straggler_min_s = straggler_min_s
-        self._steps: Dict[str, int] = {name: 0 for name in ENGINES}
+        self._steps: Dict[str, int] = {name: 0 for name in names}
         self.always_up = tuple(always_up)
         self.time_fn = time_fn
         self.injector = injector
         self._lock = threading.Lock()
+
+    # -- registry management ------------------------------------------------
+    def ensure_channel(self, name: str):
+        """Add a breaker channel on demand (procpool worker respawns can
+        mint fresh channel names); a no-op when it already exists."""
+        with self._lock:
+            if name not in self.breakers:
+                self.breakers[name] = CircuitBreaker(
+                    name, self._failure_threshold, self._cooldown_s)
+                self._steps[name] = 0
+
+    def reset(self, name: str):
+        """Force a channel back to CLOSED with a clean failure run — used
+        after a worker respawn: the REPLACEMENT process is healthy, and
+        making it re-earn trust through the half-open probe would shed
+        requests at a fully recovered worker."""
+        with self._lock:
+            br = self.breakers[name]
+            br.state = CLOSED
+            br.consecutive_failures = 0
+            br.probe_inflight = False
 
     # -- executor-facing hooks ---------------------------------------------
     def before_op(self, engine: str, op: str = ""):

@@ -94,6 +94,7 @@ relational = Island("relational", {
     "count": ["columnar", "dense_array", "kv_sparse"],
     "distinct": ["columnar", "dense_array", "kv_sparse"],
     "groupby_sum": ["columnar"],
+    "sort": ["columnar"],
     "join": ["columnar"],
     "matmul": ["columnar", "dense_array"],
     "haar": ["columnar", "dense_array"],

@@ -72,7 +72,8 @@ from repro.core.engines import ENGINES
 from repro.core.errors import EngineDown, PlanInfeasible
 from repro.core.executor import ExecutionResult, execute_plan, host_pool
 from repro.core.health import EngineHealth
-from repro.core.ioutil import atomic_json_dump, load_json
+from repro.core.ioutil import (atomic_json_dump, file_version, load_json,
+                               load_json_versioned)
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
 from repro.core.planner import (Plan, dp_plans, estimate_sizes_shapes,
@@ -171,6 +172,10 @@ class Report:
     #                          server on Overloaded results, never here)
     degraded: bool = False   # served under an engine mask (failover/degrade)
     failovers: int = 0       # EngineDown retries this request survived
+    # scatter–gather: number of shard fragments this result was merged from
+    # (0 = ordinary unsharded execution; plan_key then describes one
+    # fragment's plan — fragments share a node structure with the query)
+    shards: int = 0
 
 
 def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
@@ -198,6 +203,9 @@ class BigDAWG:
                  explore_budget: float = EXPLORE_BUDGET,
                  health: Optional[EngineHealth] = None):
         self.catalog: Dict[str, CatalogEntry] = {}
+        # name -> shardplan.ShardInfo for tables registered with shards=N
+        # (the shard parts live in the catalog as "name#i")
+        self.sharded: Dict[str, "shardplan.ShardInfo"] = {}
         self.monitor = monitor or Monitor()
         # optional per-engine circuit-breaker registry: when present, every
         # execute() runs through the failover driver (_execute_resilient) —
@@ -243,6 +251,9 @@ class BigDAWG:
         self._explore_guard = threading.Lock()
         self._explore_inflight: set = set()
         self._explore_futures: List = []
+        # cross-process plan-cache sharing: stamp of the file we last
+        # read/wrote (reload_plan_cache_if_changed polls it)
+        self._plan_cache_version = None
         if self.plan_cache_path and os.path.exists(self.plan_cache_path):
             self.load_plan_cache(self.plan_cache_path)
 
@@ -251,9 +262,25 @@ class BigDAWG:
             return self._sig_locks.setdefault(sig, threading.RLock())
 
     # -- catalog -----------------------------------------------------------
-    def register(self, name: str, obj, engine: str):
+    def register(self, name: str, obj, engine: str,
+                 shards: Optional[int] = None):
+        """Home ``obj`` on ``engine`` under ``name``.  With ``shards=N`` the
+        object is ALSO split into N contiguous row-range parts registered as
+        ``name#0 .. name#N-1`` (each homed/cast like any registration), and
+        the shard registry records the decomposition — what
+        ``shardplan.analyze`` consults to offer scatter–gather execution."""
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine}")
+        if shards is not None:
+            from repro.core import shardplan, tables
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+            parts = tables.shard_rows(obj, shards)   # split BEFORE the home
+            info = shardplan.ShardInfo(              # cast: row semantics
+                shards, obj.kind, shardplan.nrows_of(obj))   # follow the src
+            for i, part in enumerate(parts):
+                self.register(shardplan.shard_name(name, i), part, engine)
+            self.sharded[name] = info
         if ENGINES[engine].kind != obj.kind:
             from repro.core import cast as castmod
             from repro.core.tables import device_ready
@@ -265,10 +292,19 @@ class BigDAWG:
         self.catalog[name] = CatalogEntry(name, obj, engine)
 
     # -- plan-cache persistence ---------------------------------------------
-    def save_plan_cache(self, path: Optional[str] = None):
+    def save_plan_cache(self, path: Optional[str] = None,
+                        merge: Optional[bool] = None):
+        """Persist the plan cache atomically.  With ``merge`` (default: the
+        monitor's ``shared`` flag, so procpool workers merge automatically)
+        the current file is read first and signatures this process has no
+        local entry for are carried through — concurrent workers training
+        DIFFERENT signatures never drop each other's entries; the same
+        signature resolves last-writer-wins."""
         path = path or self.plan_cache_path
         if not path:
             return
+        if merge is None:
+            merge = self.monitor.shared
         with self._cache_lock:     # snapshot: concurrent trainings of other
             blob = {"format": 2,   # signatures keep mutating the dict
                     "entries": {sig: {"plan": e.plan.key,
@@ -280,7 +316,58 @@ class BigDAWG:
                                 # tied to this process's breaker state, they
                                 # must not warm-start a healthy restart
                                 if MASK_SEP not in sig}}
-        atomic_json_dump(path, blob)
+            if merge:
+                try:
+                    cur = load_json(path)
+                except (OSError, ValueError):
+                    cur = None
+                if isinstance(cur, dict):
+                    for sig, ent in cur.get("entries", {}).items():
+                        if sig not in self.plan_cache:
+                            blob["entries"][sig] = ent
+            atomic_json_dump(path, blob)
+            self._plan_cache_version = file_version(path)
+
+    def reload_plan_cache_if_changed(self) -> bool:
+        """Cross-process read path: adopt plan-cache entries other workers
+        have persisted since we last read/wrote the file.  Local entries are
+        never clobbered (this process's live pin/alternate state wins);
+        adopted entries arrive ``restored=True`` so their first serve
+        re-syncs the prediction to this process's runtime.  One ``stat``
+        when nothing changed."""
+        path = self.plan_cache_path
+        if not path:
+            return False
+        with self._cache_lock:
+            blob, ver = load_json_versioned(path, self._plan_cache_version)
+            if blob is None:
+                return False
+            self._plan_cache_version = ver
+            adopted = False
+            for sig, ent in (blob.get("entries", {})
+                             if isinstance(blob, dict) else {}).items():
+                if sig in self.plan_cache:
+                    continue
+                try:
+                    alts = tuple(_plan_from_key(k)
+                                 for k in ent.get("alternates", []) or [])
+                    self.plan_cache[sig] = CachedPlan(
+                        _plan_from_key(ent["plan"]),
+                        float(ent.get("predicted_s", 0.0)),
+                        restored=True, alternates=alts)
+                    adopted = True
+                except (ValueError, KeyError, TypeError) as exc:
+                    warnings.warn(f"plan cache {path}: skipping bad shared "
+                                  f"entry {sig!r}: {exc}")
+            return adopted
+
+    def reload_shared(self) -> bool:
+        """Poll both shared-state files (monitor DB + plan cache) for changes
+        by other processes — the procpool worker calls this before serving
+        each request (two ``stat`` calls on the idle path)."""
+        m = self.monitor.reload_if_changed()
+        p = self.reload_plan_cache_if_changed()
+        return m or p
 
     def load_plan_cache(self, path: str):
         """Load a persisted plan cache, skipping (with a warning) any entry a
@@ -292,6 +379,7 @@ class BigDAWG:
             warnings.warn(f"plan cache {path}: unreadable ({exc}); "
                           f"starting cold")
             return
+        self._plan_cache_version = file_version(path)
         entries = blob.get("entries", {}) if isinstance(blob, dict) else {}
         for sig, ent in entries.items():
             try:

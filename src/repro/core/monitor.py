@@ -73,9 +73,8 @@ import time
 from dataclasses import dataclass, field, asdict
 from typing import Dict, Optional, Tuple
 
-import jax
-
-from repro.core.ioutil import atomic_json_dump, load_json
+from repro.core.ioutil import (atomic_json_dump, file_version, load_json,
+                               load_json_versioned)
 
 
 def _ema_alpha(n: int, decay: float) -> float:
@@ -110,6 +109,8 @@ class PlanStats:
 
 
 def usage_snapshot() -> Dict[str, float]:
+    import jax     # deferred: keeps Monitor importable/usable (with explicit
+                   # usage=) in processes that never touch the device runtime
     ru = resource.getrusage(resource.RUSAGE_SELF)
     return {
         "devices": float(jax.device_count()),
@@ -137,9 +138,19 @@ class Monitor:
     DECAY = 0.2           # newest-sample floor weight for all running means
 
     def __init__(self, path: Optional[str] = None,
-                 decay: Optional[float] = None):
+                 decay: Optional[float] = None, shared: bool = False):
         self.path = path
         self.decay = self.DECAY if decay is None else float(decay)
+        # shared=True: this monitor's file is co-owned by other processes
+        # (the procpool workers).  save() then MERGES into the current file
+        # instead of overwriting it, and ``reload_if_changed`` adopts other
+        # writers' signatures.  Ownership is per-signature: a signature this
+        # process has recorded itself (``_local_sigs``) is ours — our stats
+        # win on save and a reload never clobbers them; everything else is
+        # adopted from the file (last writer wins per signature).
+        self.shared = bool(shared)
+        self._local_sigs: set = set()
+        self._file_version = None
         self.db: Dict[str, Dict[str, PlanStats]] = {}
         # sig -> {post-order position: [mean logical bytes, n]} — actual
         # intermediate sizes, fed back into estimate_sizes on re-plans
@@ -176,6 +187,7 @@ class Monitor:
     def _apply(self, rec) -> None:
         """Apply one queued observation to the history dicts (lock held)."""
         sig, plan_key, seconds, cast_bytes, extra, usage, sizes, shapes = rec
+        self._local_sigs.add(sig)
         entry = self.db.setdefault(sig, {}).setdefault(plan_key, PlanStats())
         entry.record(seconds, usage, cast_bytes, extra, decay=self.decay)
         if sizes:
@@ -258,10 +270,17 @@ class Monitor:
                 else None
 
     # -- persistence ---------------------------------------------------------
-    def save(self, path: Optional[str] = None):
+    def save(self, path: Optional[str] = None, merge: Optional[bool] = None):
+        """Persist atomically.  With ``merge`` (default: ``self.shared``) the
+        current file is read first and signatures this process never recorded
+        are carried through — concurrent writers only ever lose a signature
+        race to a LATER writer of that same signature, never to an unrelated
+        save (last-writer-wins per signature, no dropped entries)."""
         path = path or self.path
         if not path:
             return
+        if merge is None:
+            merge = self.shared
         with self._lock:
             self.flush()
             blob = {
@@ -273,21 +292,62 @@ class Monitor:
                 "shapes": {sig: {str(pos): list(s) for pos, s in store.items()}
                            for sig, store in self.shapes.items()},
             }
-        atomic_json_dump(path, blob)
+            if merge:
+                try:
+                    cur = load_json(path)
+                except (OSError, ValueError):
+                    cur = None
+                if isinstance(cur, dict) and "plans" in cur:
+                    for section in ("plans", "sizes", "shapes"):
+                        for sig, entry in cur.get(section, {}).items():
+                            if sig not in self._local_sigs:
+                                blob[section][sig] = entry
+            atomic_json_dump(path, blob)
+            self._file_version = file_version(path)
 
-    def load(self, path: str):
-        blob = load_json(path)
+    def reload_if_changed(self, path: Optional[str] = None) -> bool:
+        """Cross-process read path: if another process has replaced the file
+        since we last read/wrote it, adopt its entries for every signature
+        this process has not recorded itself.  One ``stat`` when nothing
+        changed.  Returns True when new state was adopted."""
+        path = path or self.path
+        if not path:
+            return False
+        with self._lock:
+            blob, ver = load_json_versioned(path, self._file_version)
+            if blob is None:
+                return False
+            self._file_version = ver
+            self.flush()
+            db, sizes, shapes = self._parse_blob(blob)
+            changed = False
+            for src, dst in ((db, self.db), (sizes, self.sizes),
+                             (shapes, self.shapes)):
+                for sig, entry in src.items():
+                    if sig not in self._local_sigs:
+                        dst[sig] = entry
+                        changed = True
+            return changed
+
+    @staticmethod
+    def _parse_blob(blob):
         if isinstance(blob, dict) and "plans" in blob:      # format >= 2
             plans, sizes = blob["plans"], blob.get("sizes", {})
             shapes = blob.get("shapes", {})                 # format >= 3
         else:                       # format 1: bare {sig: {plan_key: stats}}
             plans, sizes, shapes = blob, {}, {}
+        db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
+              for sig, pls in plans.items()}
+        sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
+                       for pos, m in store.items()}
+                 for sig, store in sizes.items()}
+        shapes = {sig: {int(pos): tuple(int(d) for d in s)
+                        for pos, s in store.items()}
+                  for sig, store in shapes.items()}
+        return db, sizes, shapes
+
+    def load(self, path: str):
+        blob = load_json(path)
         with self._lock:
-            self.db = {sig: {pk: PlanStats(**st) for pk, st in pls.items()}
-                       for sig, pls in plans.items()}
-            self.sizes = {sig: {int(pos): [float(m[0]), int(m[1])]
-                                for pos, m in store.items()}
-                          for sig, store in sizes.items()}
-            self.shapes = {sig: {int(pos): tuple(int(d) for d in s)
-                                 for pos, s in store.items()}
-                           for sig, store in shapes.items()}
+            self.db, self.sizes, self.shapes = self._parse_blob(blob)
+            self._file_version = file_version(path)

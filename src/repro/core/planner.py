@@ -17,6 +17,7 @@ phase (paper §III-C-3).
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
@@ -507,6 +508,69 @@ def enumerate_plans(query: PolyOp, catalog=None, max_plans: int = 16,
     return [p for _, p in dp_plans(query, catalog, max_plans, cost_model,
                                    measured_sizes=measured_sizes,
                                    measured_shapes=measured_shapes)]
+
+
+# ---------------------------------------------------------------------------
+# scatter–gather pricing (partitioned execution over row-range shards)
+# ---------------------------------------------------------------------------
+
+# master-side merge throughput (numpy concat / sum / heap merge) and the
+# per-fragment pickle+pipe round-trip floor — both deliberately coarse: the
+# decision they gate (scatter vs single worker) only needs the right order
+# of magnitude, and the procpool can override per deployment
+MERGE_BYTES_PER_S = 2e9
+IPC_OVERHEAD_S = 2e-3
+
+
+@dataclass
+class ScatterGatherPrice:
+    """Predicted seconds for both execution shapes of one sharded query —
+    what ``procpool`` compares to choose scatter–gather vs a single worker."""
+    sharded_s: float
+    unsharded_s: float
+    fragment_s: float        # one fragment on one worker
+    merge_s: float           # master-side gather
+    ipc_s: float             # total dispatch round-trip overhead
+
+    @property
+    def worthwhile(self) -> bool:
+        return self.sharded_s < self.unsharded_s
+
+
+def price_scatter_gather(query: PolyOp, fragment: PolyOp, catalog=None,
+                         n_shards: int = 1, workers: int = 1,
+                         cost_model: Optional[CostModel] = None,
+                         measured_sizes: Optional[Dict[int, float]] = None,
+                         measured_shapes: Optional[Dict[int, Tuple[int, ...]]]
+                         = None,
+                         ipc_overhead_s: float = IPC_OVERHEAD_S,
+                         merge_bytes_per_s: float = MERGE_BYTES_PER_S
+                         ) -> ScatterGatherPrice:
+    """Price the scatter–gather plan shape against the unsharded best plan.
+
+    The fragment's cost comes from the same k-best DP, run against the
+    per-shard catalog entries (``A#i`` is ~1/N the rows of ``A``, so the DP's
+    size rules price the smaller operands naturally).  Fragments run on
+    distinct workers, so wall-clock fragment time is one fragment per round
+    of ``workers`` concurrent shards; the gather adds the merged payload over
+    the master's merge throughput, and each dispatched fragment pays one IPC
+    round-trip."""
+    cm = cost_model or default_cost_model()
+    unsharded = dp_plans(query, catalog, max_plans=1, cost_model=cm,
+                         measured_sizes=measured_sizes,
+                         measured_shapes=measured_shapes)[0][0]
+    fragment_s = dp_plans(fragment, catalog, max_plans=1,
+                          cost_model=cm)[0][0]
+    sizes, _ = estimate_sizes_shapes(query, catalog, measured=measured_sizes,
+                                     measured_shapes=measured_shapes)
+    root_bytes = sizes[query.nodes()[-1].uid]
+    rounds = math.ceil(n_shards / max(1, workers))
+    merge_s = root_bytes / max(merge_bytes_per_s, 1.0)
+    ipc_s = n_shards * ipc_overhead_s
+    sharded = rounds * fragment_s + merge_s + ipc_s
+    return ScatterGatherPrice(sharded_s=sharded, unsharded_s=unsharded,
+                              fragment_s=fragment_s, merge_s=merge_s,
+                              ipc_s=ipc_s)
 
 
 def estimate_casts(query: PolyOp, plan: Plan, catalog=None,

@@ -1,0 +1,586 @@
+"""Multi-process serving: a master/worker pool that breaks the GIL ceiling.
+
+BigDAWG's middleware is itself a *process* architecture — each engine is an
+independent server process and the middleware "dispatches query fragments to
+[them] and reassembles results".  Our in-process serving stack (PR 4/6) gets
+real concurrency only where engine ops release the GIL; every pure-Python
+planning or merge step still serializes request threads.  ``ProcPool`` is
+the process-level answer: a master that owns NO engine state fans requests
+out to N worker processes, each a full ``BigDAWG`` middleware stack with its
+own XLA runtime and host pool.
+
+Design points:
+
+* **spawn, not fork.**  The XLA runtime is not fork-safe; every worker is a
+  fresh interpreter that builds its own middleware from a picklable spec.
+  The master never initializes the backend at all — its merge/gather path is
+  numpy-only (``tables.concat_shards``/``sum_shards``/``kmerge_shards``).
+* **pickle-framed pipe RPC.**  One duplex ``multiprocessing.Pipe`` per
+  worker; messages are ``(kind, rid, *payload)`` tuples and replies are
+  ``("ok"|"err", rid, payload)``.  Replies are matched on ``rid`` — a stale
+  reply from a timed-out predecessor request is discarded, never mis-
+  delivered.  Per-worker locks serialize each pipe; different workers serve
+  concurrently, so ``QueryServer.submit_many`` admission fans across
+  processes.
+* **shared persistence, not shared memory.**  Workers converge through the
+  monitor DB / plan-cache files: every worker opens the monitor with
+  ``shared=True`` (merge-on-save: last-writer-wins *per signature*, no
+  dropped entries) and polls ``reload_shared()`` before each request (one
+  ``stat`` when nothing changed), so a signature trained by worker 0 is
+  served warm by worker 1 without any master-side plan state.
+* **worker death is an engine failure one level up.**  The master tracks
+  workers through the same ``EngineHealth`` breaker registry engines use,
+  on channels ``worker:<i>``.  A dead/hung worker records a breaker failure
+  (threshold 1 — process death is conclusive), is respawned with its full
+  registration log replayed, and the breaker is force-``reset`` (the
+  replacement is healthy; re-earning trust through a half-open probe would
+  shed requests at a recovered worker).  The in-flight request is retried
+  on the replacement; exhaustion surfaces a clean ``EngineDown`` — never a
+  hang, never a lost request.
+* **sharded scatter–gather.**  ``register(..., shards=N)`` row-range splits
+  a table; part ``i`` is homed ONLY on worker ``i % processes`` (the full
+  table goes everywhere).  A query whose ``shardplan.analyze`` decomposition
+  exists — and which ``planner.price_scatter_gather`` prices as worthwhile —
+  runs as per-shard fragments on the owning workers in parallel and is
+  reassembled by the decomposition's merge (concat / sum / k-way ordered
+  merge) in the master.  A shard fragment retries on the SAME worker index
+  after a respawn: only that worker holds the shard's rows.
+
+``ProcPool`` duck-types the middleware surface the serving stack consumes —
+``execute(query, mode, degrade=)`` returning a ``Report``, ``register``,
+``persist``, ``health``, ``breaker_trips``, ``catalog`` — so
+``QueryServer(bd, processes=N)`` and ``connect(processes=N)`` drop it in
+without touching the admission logic.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import pickle
+import threading
+import time
+from dataclasses import replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import shardplan, tables
+from repro.core.engines import ENGINES
+from repro.core.errors import (BigDAWGError, EngineDown, Overloaded,
+                               PlanInfeasible, QueryParseError)
+from repro.core.health import EngineHealth
+from repro.core.ops import PolyOp
+from repro.core.shardplan import ShardInfo, shard_name
+from repro.core.signature import signature
+
+
+def worker_channel(idx: int) -> str:
+    """Breaker-registry channel name for worker ``idx``."""
+    return f"worker:{idx}"
+
+
+class _WorkerDied(Exception):
+    """Internal: the pipe/process under an RPC went away (EOF, broken pipe,
+    dead process, or a hung request past its timeout)."""
+
+    def __init__(self, idx: int):
+        super().__init__(f"worker {idx} died")
+        self.idx = idx
+
+
+# -- worker side --------------------------------------------------------------
+
+def _portable_exc(exc: BaseException) -> BaseException:
+    """An exception safe to pickle back over the pipe.
+
+    The structured taxonomy is rebuilt field-by-field (BigDAWGError
+    subclasses format their message from attributes, so default pickling
+    by ``args`` would misconstruct them; an ``EngineDown.cause`` may not
+    pickle at all).  Anything else round-trips as-is when picklable, else
+    degrades to a ``RuntimeError`` carrying the repr."""
+    if isinstance(exc, EngineDown):
+        return EngineDown(exc.engine, exc.op)
+    if isinstance(exc, PlanInfeasible):
+        return PlanInfeasible(exc.op, exc.island, exc.masked)
+    if isinstance(exc, Overloaded):
+        return Overloaded(exc.query, exc.reason)
+    if isinstance(exc, QueryParseError):
+        return QueryParseError(str(exc))
+    try:
+        pickle.loads(pickle.dumps(exc))
+        return exc
+    except Exception:
+        return RuntimeError(f"{type(exc).__name__}: {exc}")
+
+
+def _portable_report(rep) -> Any:
+    """Report with its result's array leaves rebased to numpy — device
+    buffers must not cross the process boundary."""
+    return replace(rep, result=tables.host_copy(rep.result))
+
+
+def _worker_main(widx: int, conn, spec: Dict[str, Any]) -> None:
+    """Worker process entry point: build a full middleware stack from the
+    picklable ``spec`` and serve the RPC loop until ``stop``/EOF.
+
+    The monitor is opened ``shared=True`` so saves merge (per-signature
+    last-writer-wins) instead of clobbering sibling workers, and
+    ``reload_shared()`` runs before every execute so plans trained by
+    siblings are served warm here.  A training serve persists immediately —
+    that is the publication step of the cross-process warm path."""
+    # deferred so the spawn bootstrap stays import-light until we commit
+    from repro.core.middleware import BigDAWG
+    from repro.core.monitor import Monitor
+
+    state_path = spec.get("state_path")
+    kwargs = dict(spec.get("bigdawg_kwargs") or {})
+    if spec.get("resilient"):
+        kwargs.setdefault("health", EngineHealth())
+    bd = BigDAWG(monitor=Monitor(state_path, shared=bool(state_path)),
+                 **kwargs)
+    shared = bool(state_path)
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        kind, rid = msg[0], msg[1]
+        try:
+            if kind == "execute":
+                query, mode, degrade = msg[2], msg[3], msg[4]
+                if shared:
+                    bd.reload_shared()
+                rep = bd.execute(query, mode, degrade=degrade)
+                if shared and rep.mode == "training":
+                    bd.monitor.save()
+                    bd.save_plan_cache()
+                conn.send(("ok", rid, _portable_report(rep)))
+            elif kind == "register":
+                name, obj, engine = msg[2], msg[3], msg[4]
+                bd.register(name, obj, engine)
+                conn.send(("ok", rid, None))
+            elif kind == "persist":
+                bd.persist()
+                conn.send(("ok", rid, None))
+            elif kind == "ping":
+                conn.send(("ok", rid, os.getpid()))
+            elif kind == "stop":
+                conn.send(("ok", rid, None))
+                break
+            else:
+                conn.send(("err", rid,
+                           RuntimeError(f"unknown message kind {kind!r}")))
+        except BaseException as exc:          # noqa: BLE001 — RPC boundary
+            try:
+                conn.send(("err", rid, _portable_exc(exc)))
+            except (OSError, BrokenPipeError):
+                break
+    conn.close()
+
+
+def _monitor_hammer(path: str, private_sig: str, shared_sig: str,
+                    rounds: int, seed: int) -> None:
+    """Spawn target for the persistence-contention test: hammer one shared
+    monitor DB with interleaved merge-saves and reloads.  Lives here (not in
+    the test module) because spawn pickles targets by import path.
+
+    Each process records ``rounds`` observations under its OWN signature
+    plus the contended ``shared_sig``, saving after every record — the
+    merge-on-save protocol must keep every private signature intact and
+    resolve the shared one last-writer-wins, with zero torn reads."""
+    from repro.core.monitor import Monitor
+
+    m = Monitor(path, shared=True)
+    usage = {"cpu": 0.5, "mem_frac": 0.1}
+    for r in range(rounds):
+        m.reload_if_changed()
+        m.record(private_sig, f"0:plan{seed}", 0.001 * (r + 1), usage=usage)
+        m.record(shared_sig, f"0:writer{seed}", 0.001 * (seed + 1),
+                 usage=usage)
+        m.save()
+        time.sleep(0.001 * ((seed + r) % 3))
+
+
+# -- master side --------------------------------------------------------------
+
+class _Worker:
+    """Master-side handle: process + pipe + the lock serializing its RPCs."""
+
+    __slots__ = ("idx", "proc", "conn", "lock")
+
+    def __init__(self, idx, proc, conn):
+        self.idx = idx
+        self.proc = proc
+        self.conn = conn
+        self.lock = threading.Lock()
+
+
+class ProcPool:
+    """Master of N worker processes — see the module docstring.
+
+    ``scatter`` controls the sharded path: ``"auto"`` (default) asks
+    ``planner.price_scatter_gather`` per signature, ``"always"``/``"never"``
+    force it.  ``retries`` bounds how many replacement workers one request
+    may try after deaths before surfacing ``EngineDown``.
+    ``kill_injector`` (``runtime.fault.WorkerKillInjector``) is the fault
+    seam: fired after every execute dispatch with the target's pid.
+    """
+
+    def __init__(self, processes: int = 2,
+                 state_path: Optional[str] = None, *,
+                 resilient: bool = False,
+                 request_timeout_s: float = 120.0,
+                 start_timeout_s: float = 300.0,
+                 retries: int = 1,
+                 scatter: str = "auto",
+                 health: Optional[EngineHealth] = None,
+                 kill_injector=None,
+                 **bigdawg_kwargs):
+        if processes < 1:
+            raise ValueError(f"processes must be >= 1, got {processes}")
+        if scatter not in ("auto", "always", "never"):
+            raise ValueError(f"scatter must be auto|always|never, "
+                             f"got {scatter!r}")
+        import multiprocessing
+        self._ctx = multiprocessing.get_context("spawn")
+        self.n = processes
+        self.state_path = state_path
+        self._spec = {"state_path": state_path, "resilient": resilient,
+                      "bigdawg_kwargs": dict(bigdawg_kwargs)}
+        self.request_timeout_s = request_timeout_s
+        self.start_timeout_s = start_timeout_s
+        self.retries = retries
+        self.scatter = scatter
+        self.kill_injector = kill_injector
+        # worker-death breakers: threshold 1 — a dead process is conclusive
+        self.health = health or EngineHealth(
+            failure_threshold=1,
+            channels=[worker_channel(i) for i in range(processes)])
+        # master-side registry: the replay log (respawn re-registers), the
+        # catalog mirror (signatures + scatter pricing), the shard registry
+        self._registrations: List[Tuple[str, Any, str, Optional[int]]] = []
+        self.catalog: Dict[str, Any] = {}
+        self.sharded: Dict[str, ShardInfo] = {}
+        self._scatter_cache: Dict[str, bool] = {}
+        self._cost_model = None            # built lazily for pricing
+        self._rid = itertools.count(1)
+        self._rr = itertools.count()
+        self._lock = threading.Lock()      # guards workers[] swaps
+        self.respawns = 0
+        self.dispatches = 0
+        self.scatter_serves = 0
+        self._closed = False
+        self.workers: List[_Worker] = [self._spawn(i)
+                                       for i in range(processes)]
+
+    # -- lifecycle -----------------------------------------------------------
+    def _spawn(self, idx: int) -> _Worker:
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(target=_worker_main,
+                                 args=(idx, child, self._spec),
+                                 daemon=True, name=f"bigdawg-worker-{idx}")
+        proc.start()
+        child.close()
+        return _Worker(idx, proc, parent)
+
+    def _respawn(self, idx: int, dead: _Worker) -> None:
+        """Replace a dead worker: breaker failure -> fresh process -> replay
+        the registration log -> breaker reset.  Guarded so concurrent
+        requests that watched the same death respawn exactly once — the
+        loser finds ``workers[idx]`` already replaced and just retries."""
+        with self._lock:
+            if self.workers[idx] is not dead:
+                return                     # another thread already replaced it
+            ch = worker_channel(idx)
+            self.health.ensure_channel(ch)
+            self.health.record_failure(ch)
+            try:
+                dead.conn.close()
+            except OSError:
+                pass
+            if dead.proc.is_alive():
+                dead.proc.terminate()
+            dead.proc.join(timeout=10)
+            h = self._spawn(idx)
+            # replay BEFORE publishing the handle: no request may overtake
+            # the catalog rebuild on the fresh process
+            for name, obj, engine, target in self._registrations:
+                if target is None or target == idx:
+                    self._rpc(h, "register", name, obj, engine,
+                              timeout=self.start_timeout_s)
+            self.workers[idx] = h
+            self.respawns += 1
+            # the replacement is healthy — don't make it re-earn trust
+            # through a half-open probe
+            self.health.reset(ch)
+
+    def close(self) -> None:
+        """Stop every worker (idempotent; also runs via ``atexit`` through
+        ``QueryServer``/``Session`` owners calling it explicitly)."""
+        if self._closed:
+            return
+        self._closed = True
+        for h in self.workers:
+            try:
+                self._rpc(h, "stop", timeout=5.0)
+            except (_WorkerDied, Exception):   # noqa: BLE001 — best effort
+                pass
+            try:
+                h.conn.close()
+            except OSError:
+                pass
+        for h in self.workers:
+            h.proc.join(timeout=5)
+            if h.proc.is_alive():
+                h.proc.terminate()
+                h.proc.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- RPC core ------------------------------------------------------------
+    def _rpc(self, h: _Worker, kind: str, *payload,
+             timeout: Optional[float] = None):
+        """One framed request/reply on a worker's pipe.  Raises
+        ``_WorkerDied`` on EOF/broken pipe/dead process/timeout; re-raises
+        the worker's transported exception on an ``err`` reply.  Replies are
+        rid-matched: a buffered reply to an earlier timed-out request is
+        discarded here rather than mis-delivered."""
+        rid = next(self._rid)
+        timeout = self.request_timeout_s if timeout is None else timeout
+        with h.lock:
+            try:
+                h.conn.send((kind, rid) + payload)
+            except (OSError, BrokenPipeError, ValueError):
+                raise _WorkerDied(h.idx) from None
+            if self.kill_injector is not None and kind == "execute":
+                # fault seam: the request is now in flight on that process
+                self.kill_injector.on_dispatch(h.idx, h.proc.pid)
+            deadline = time.monotonic() + timeout
+            while True:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    # hung worker: indistinguishable from dead at this layer
+                    # — kill it so the respawn starts from a clean slate
+                    if h.proc.is_alive():
+                        h.proc.terminate()
+                    raise _WorkerDied(h.idx)
+                if h.conn.poll(min(0.1, remaining)):
+                    try:
+                        status, r_rid, out = h.conn.recv()
+                    except (EOFError, OSError):
+                        raise _WorkerDied(h.idx) from None
+                    if r_rid != rid:
+                        continue           # stale reply — discard, keep waiting
+                    if status == "ok":
+                        return out
+                    raise out
+                if not h.proc.is_alive():
+                    # one last poll: a reply can be buffered past death
+                    if not h.conn.poll(0.2):
+                        raise _WorkerDied(h.idx)
+
+    # -- registration --------------------------------------------------------
+    def register(self, name: str, obj, engine: str,
+                 shards: Optional[int] = None) -> None:
+        """Mirror of ``BigDAWG.register`` across the pool.  The full table
+        goes to every worker; with ``shards=N`` part ``i`` additionally goes
+        ONLY to worker ``i % processes`` under ``name#i`` — the placement
+        the scatter path dispatches against."""
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine}")
+        obj = tables.host_copy(obj)
+        if shards is not None:
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+            parts = tables.shard_rows(obj, shards)
+            self.sharded[name] = ShardInfo(shards, obj.kind,
+                                           shardplan.nrows_of(obj))
+            self._scatter_cache.clear()
+            for i, part in enumerate(parts):
+                self._register_one(shard_name(name, i), part, engine,
+                                   target=i % self.n)
+        self._register_one(name, obj, engine, target=None)
+
+    def _register_one(self, name: str, obj, engine: str,
+                      target: Optional[int]) -> None:
+        from repro.core.middleware import CatalogEntry
+        # log first: any respawn from here on replays this entry itself
+        self._registrations.append((name, obj, engine, target))
+        self.catalog[name] = CatalogEntry(name, obj, engine)
+        for idx in range(self.n):
+            if target is not None and target != idx:
+                continue
+            h = self.workers[idx]
+            try:
+                self._rpc(h, "register", name, obj, engine,
+                          timeout=self.start_timeout_s)
+            except _WorkerDied:
+                self._respawn(idx, h)      # replay delivers this entry too
+
+    @classmethod
+    def from_bigdawg(cls, bd, processes: int, **kwargs) -> "ProcPool":
+        """Lift an in-process middleware into a pool: same state paths (so
+        the workers inherit its persisted monitor/plan-cache warmth), same
+        catalog (shard placements preserved), same resilience posture."""
+        pool = cls(processes=processes, state_path=bd.monitor.path,
+                   resilient=bd.health is not None,
+                   train_plans=bd.train_plans,
+                   explore_budget=bd.explore_budget, **kwargs)
+        part_target: Dict[str, int] = {}
+        for name, info in bd.sharded.items():
+            pool.sharded[name] = info
+            for i in range(info.n_shards):
+                part_target[shard_name(name, i)] = i % processes
+        for name, entry in bd.catalog.items():
+            pool._register_one(name, tables.host_copy(entry.obj),
+                               entry.engine, part_target.get(name))
+        return pool
+
+    # -- serving -------------------------------------------------------------
+    @property
+    def breaker_trips(self) -> int:
+        return self.health.trips()
+
+    def persist(self) -> None:
+        """Ask every worker to flush its monitor/calibration/plan-cache —
+        the merge-on-save protocol interleaves them safely."""
+        for idx in range(self.n):
+            h = self.workers[idx]
+            try:
+                self._rpc(h, "persist")
+            except _WorkerDied:
+                self._respawn(idx, h)      # nothing to retry: a dead worker's
+                #                            unflushed deltas died with it
+
+    def ping(self) -> List[Optional[int]]:
+        """Liveness probe: worker pids (None where a worker had to be
+        respawned to answer)."""
+        out: List[Optional[int]] = []
+        for idx in range(self.n):
+            h = self.workers[idx]
+            try:
+                out.append(self._rpc(h, "ping", timeout=self.start_timeout_s))
+            except _WorkerDied:
+                self._respawn(idx, h)
+                out.append(None)
+        return out
+
+    def execute(self, query: PolyOp, mode: str = "auto", *,
+                degrade: bool = False):
+        """The serving entry point ``QueryServer``/``Session`` call.
+        Scatter–gather when the query decomposes over sharded registrations
+        and the pricing says it pays; otherwise round-robin to one worker.
+        Worker death is retried on a respawned replacement up to
+        ``retries`` times, then surfaces as ``EngineDown`` — requests are
+        never lost to a crash and never hang past the timeout."""
+        if self._closed:
+            raise RuntimeError("ProcPool is closed")
+        sg = shardplan.analyze_catalog(query, self.sharded)
+        if sg is not None and self._scatter_worthwhile(query, sg):
+            return self._execute_scatter(sg, mode, degrade)
+        return self._execute_one(query, mode, degrade)
+
+    def _execute_one(self, query: PolyOp, mode: str, degrade: bool):
+        idx = next(self._rr) % self.n
+        for _attempt in range(self.retries + 1):
+            h = self.workers[idx]
+            try:
+                self.dispatches += 1
+                rep = self._rpc(h, "execute", query, mode, degrade)
+            except _WorkerDied:
+                self._respawn(idx, h)
+                continue
+            self.health.record_success(worker_channel(idx))
+            return rep
+        raise EngineDown(worker_channel(idx), "execute")
+
+    def _execute_scatter(self, sg, mode: str, degrade: bool):
+        """Fan the decomposition's fragments to their owning workers in
+        parallel, merge in the master (numpy-only).  Fragment ``i`` is
+        pinned to worker ``i % n`` — the only process holding shard ``i``'s
+        rows — so a death retries the SAME index after respawn."""
+        t0 = time.perf_counter()
+        reps: List[Any] = [None] * sg.n_shards
+        errs: List[Optional[BaseException]] = [None] * sg.n_shards
+
+        def run(i: int) -> None:
+            frag = sg.fragment(i)
+            idx = i % self.n
+            for _attempt in range(self.retries + 1):
+                h = self.workers[idx]
+                try:
+                    self.dispatches += 1
+                    reps[i] = self._rpc(h, "execute", frag, mode, degrade)
+                except _WorkerDied:
+                    self._respawn(idx, h)
+                    continue
+                except BaseException as exc:   # noqa: BLE001 — worker error
+                    errs[i] = exc
+                    return
+                self.health.record_success(worker_channel(idx))
+                return
+            errs[i] = EngineDown(worker_channel(idx), f"shard {i}")
+
+        if self.n == 1:
+            for i in range(sg.n_shards):
+                run(i)
+        else:
+            threads = [threading.Thread(target=run, args=(i,), daemon=True)
+                       for i in range(sg.n_shards)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        err = next((e for e in errs if e is not None), None)
+        if err is not None:
+            raise err
+        from repro.core.executor import merge_shard_results
+        merged, _merge_s = merge_shard_results(
+            sg.merge, [r.result for r in reps], by=sg.merge_by)
+        self.scatter_serves += 1
+        first = reps[0]
+        return replace(
+            first, result=merged,
+            seconds=time.perf_counter() - t0,
+            cast_bytes=float(sum(r.cast_bytes for r in reps)),
+            mode="training" if any(r.mode == "training" for r in reps)
+            else "production",
+            cache_hit=all(r.cache_hit for r in reps),
+            per_node_seconds=dict(first.per_node_seconds),
+            failovers=sum(getattr(r, "failovers", 0) for r in reps),
+            degraded=any(getattr(r, "degraded", False) for r in reps),
+            shards=sg.n_shards)
+
+    def _scatter_worthwhile(self, query: PolyOp, sg) -> bool:
+        """Gate the scatter path on the planner's price (cached per
+        signature).  Pricing is advisory: any modeling failure falls back
+        to scattering — the decomposition is already proven valid."""
+        if self.scatter == "always":
+            return True
+        if self.scatter == "never":
+            return False
+        sig = signature(query, self.catalog)
+        cached = self._scatter_cache.get(sig)
+        if cached is not None:
+            return cached
+        try:
+            from repro.core import planner
+            if self._cost_model is None:
+                from repro.core.costmodel import (CostModel,
+                                                  default_calibration_path)
+                self._cost_model = CostModel(
+                    default_calibration_path(self.state_path))
+            price = planner.price_scatter_gather(
+                query, sg.fragment(0), catalog=self.catalog,
+                n_shards=sg.n_shards, workers=self.n,
+                cost_model=self._cost_model)
+            ok = bool(price.worthwhile)
+        except Exception:                  # noqa: BLE001 — advisory only
+            ok = True
+        self._scatter_cache[sig] = ok
+        return ok

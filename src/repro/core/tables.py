@@ -11,11 +11,20 @@ consumer actually needs the device: wrapping them in ``jnp.asarray`` at
 creation would serialize every host-pool worker on the XLA transfer lock for
 data the next op may never touch on-device (see ``device_ready`` for the
 explicit homing used on long-lived catalog objects).
+Row-range sharding (the multi-process scatter–gather substrate) also lives
+here: ``shard_rows`` splits any container into N contiguous row-range parts,
+and the three merge primitives — ``concat_shards`` (row-wise ops),
+``sum_shards`` (decomposable aggregates: count, groupby_sum), and
+``kmerge_shards`` (k-way ordered merge of per-shard sorted tables) —
+reassemble per-shard results.  The merge helpers are deliberately
+numpy-only: they run in the MASTER process, which must never initialize the
+XLA backend (workers own the device; see ``core/procpool.py``).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -128,3 +137,173 @@ def device_ready(obj):
     if isinstance(obj, StreamBuffer):
         return StreamBuffer(jnp.asarray(obj.data), obj.t0)
     return obj
+
+
+def host_copy(obj):
+    """Numpy-leafed clone of a container — what the procpool master pickles
+    over the worker pipe (device arrays must not cross a process boundary,
+    and the master side stays off the XLA runtime entirely)."""
+    if isinstance(obj, ColumnarTable):
+        return ColumnarTable({c: np.asarray(v) for c, v in obj.columns.items()},
+                             valid=np.asarray(obj.valid))
+    if isinstance(obj, COOMatrix):
+        return COOMatrix(np.asarray(obj.rows), np.asarray(obj.cols),
+                         np.asarray(obj.vals), tuple(obj.shape))
+    if isinstance(obj, DenseTensor):
+        return DenseTensor(np.asarray(obj.data),
+                           valid_count=obj.valid_count, fill=obj.fill)
+    if isinstance(obj, StreamBuffer):
+        return StreamBuffer(np.asarray(obj.data), obj.t0)
+    return obj
+
+
+# -- row-range sharding -------------------------------------------------------
+
+def shard_bounds(nrows: int, n_shards: int) -> List[Tuple[int, int]]:
+    """N contiguous ``[lo, hi)`` row ranges covering ``nrows`` (remainder
+    spread over the leading shards, every shard non-degenerate when
+    ``nrows >= n_shards``)."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    base, rem = divmod(nrows, n_shards)
+    bounds, lo = [], 0
+    for i in range(n_shards):
+        hi = lo + base + (1 if i < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def shard_rows(obj, n_shards: int) -> list:
+    """Split a container into ``n_shards`` contiguous row-range parts.
+
+    Dense tensors and columnar tables shard on the leading axis, COO on the
+    row coordinate (rows re-based to each shard's origin), streams on the
+    window axis.  Concatenating the parts back (``concat_shards``) is the
+    identity.
+    """
+    if isinstance(obj, DenseTensor):
+        a = np.asarray(obj.data)
+        if a.ndim < 1:
+            raise ValueError("cannot row-shard a 0-d tensor")
+        if obj.valid_count not in (-1, a.size):
+            # a padded tensor's valid elements are not row-attributable, so
+            # per-shard counts could not reassemble to the true total
+            raise ValueError("cannot row-shard a padded DenseTensor")
+        return [DenseTensor(a[lo:hi], fill=obj.fill)
+                for lo, hi in shard_bounds(a.shape[0], n_shards)]
+    if isinstance(obj, ColumnarTable):
+        cols = {c: np.asarray(v) for c, v in obj.columns.items()}
+        valid = np.asarray(obj.valid)
+        return [ColumnarTable({c: v[lo:hi] for c, v in cols.items()},
+                              valid=valid[lo:hi])
+                for lo, hi in shard_bounds(obj.nrows, n_shards)]
+    if isinstance(obj, COOMatrix):
+        rows = np.asarray(obj.rows)
+        cols = np.asarray(obj.cols)
+        vals = np.asarray(obj.vals)
+        parts = []
+        for lo, hi in shard_bounds(obj.shape[0], n_shards):
+            m = (rows >= lo) & (rows < hi)
+            parts.append(COOMatrix((rows[m] - lo).astype(rows.dtype),
+                                   cols[m], vals[m],
+                                   (hi - lo, obj.shape[1])))
+        return parts
+    if isinstance(obj, StreamBuffer):
+        a = np.asarray(obj.data)
+        return [StreamBuffer(a[lo:hi], t0=obj.t0 + lo)
+                for lo, hi in shard_bounds(a.shape[0], n_shards)]
+    raise TypeError(f"cannot shard {type(obj).__name__}")
+
+
+# -- shard merges -------------------------------------------------------------
+
+def concat_shards(parts: Sequence):
+    """Reassemble row-wise per-shard results: row concatenation in shard
+    order (the inverse of ``shard_rows`` for every row-preserving op)."""
+    if not parts:
+        raise ValueError("no shard results to merge")
+    first = parts[0]
+    if isinstance(first, DenseTensor):
+        data = np.concatenate([np.asarray(p.data) for p in parts], axis=0)
+        vc = sum(p.valid_count for p in parts)
+        return DenseTensor(data, valid_count=vc, fill=first.fill)
+    if isinstance(first, ColumnarTable):
+        return ColumnarTable(
+            {c: np.concatenate([np.asarray(p.columns[c]) for p in parts])
+             for c in first.columns},
+            valid=np.concatenate([np.asarray(p.valid) for p in parts]))
+    if isinstance(first, COOMatrix):
+        rows, off = [], 0
+        for p in parts:
+            rows.append(np.asarray(p.rows) + off)
+            off += p.shape[0]
+        return COOMatrix(np.concatenate(rows).astype(np.asarray(first.rows).dtype),
+                         np.concatenate([np.asarray(p.cols) for p in parts]),
+                         np.concatenate([np.asarray(p.vals) for p in parts]),
+                         (off, max(p.shape[1] for p in parts)))
+    if isinstance(first, StreamBuffer):
+        return StreamBuffer(
+            np.concatenate([np.asarray(p.data) for p in parts], axis=0),
+            t0=first.t0)
+    raise TypeError(f"cannot concat-merge {type(first).__name__}")
+
+
+def sum_shards(parts: Sequence):
+    """Merge decomposable aggregates: element-wise sum over aligned shard
+    results.  Covers ``count`` (0-d DenseTensor per shard -> grand total) and
+    ``groupby_sum`` (every shard emits the full aligned key range
+    ``0..num_groups``, so group partial sums add position-wise)."""
+    if not parts:
+        raise ValueError("no shard results to merge")
+    first = parts[0]
+    if isinstance(first, DenseTensor):
+        data = np.asarray(parts[0].data)
+        for p in parts[1:]:
+            data = data + np.asarray(p.data)
+        return DenseTensor(data, valid_count=first.valid_count,
+                           fill=first.fill)
+    if isinstance(first, ColumnarTable):
+        key = np.asarray(first.columns["key"])
+        for p in parts[1:]:
+            if not np.array_equal(np.asarray(p.columns["key"]), key):
+                raise ValueError("sum-merge requires aligned group keys")
+        out = {"key": key}
+        for c in first.columns:
+            if c == "key":
+                continue
+            acc = np.asarray(first.columns[c])
+            for p in parts[1:]:
+                acc = acc + np.asarray(p.columns[c])
+            out[c] = acc
+        return ColumnarTable(out)
+    raise TypeError(f"cannot sum-merge {type(first).__name__}")
+
+
+def kmerge_shards(parts: Sequence, by: str):
+    """K-way ordered merge of per-shard SORTED columnar tables on column
+    ``by`` (classic heap merge: O(total rows * log k)).  Invalid rows are
+    compacted away first; ties preserve shard order (stable)."""
+    if not parts:
+        raise ValueError("no shard results to merge")
+    compact = []
+    for p in parts:
+        valid = np.asarray(p.valid)
+        cols = {c: np.asarray(v) for c, v in p.columns.items()}
+        if not valid.all():
+            cols = {c: v[valid] for c, v in cols.items()}
+        compact.append(cols)
+    names = list(compact[0])
+    offsets = np.cumsum([0] + [c[names[0]].shape[0] for c in compact])
+    def stream(cols, si):
+        # bound per shard (a bare genexp in the comprehension would
+        # late-bind si/cols to the last shard)
+        key = cols[by]
+        return ((key[i], si, offsets[si] + i) for i in range(key.shape[0]))
+
+    streams = [stream(cols, si) for si, cols in enumerate(compact)]
+    order = np.fromiter((flat for _, _, flat in heapq.merge(*streams)),
+                        dtype=np.int64)
+    merged = {c: np.concatenate([cols[c] for cols in compact])[order]
+              for c in names}
+    return ColumnarTable(merged)

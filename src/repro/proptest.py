@@ -1,0 +1,238 @@
+"""A minimal property-based testing shim with the hypothesis surface.
+
+``requirements.txt`` pins real hypothesis and CI installs it, but the test
+suite must run — not skip — in a bare environment where ``pip install`` is
+unavailable.  This module implements the exact decorator surface the tests
+use (``given`` / ``settings`` / ``strategies as st``) over a deterministic
+seeded RNG, so::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from repro.proptest import given, settings, strategies as st
+
+keeps every property test collecting AND executing either way.  Differences
+from real hypothesis, deliberately accepted:
+
+* no shrinking — a failure reports the raw falsifying example;
+* no example database — the seed is derived from the test's qualified name,
+  so runs are reproducible but do not remember past failures;
+* draws are independent per example (no swarm testing / coverage guidance).
+
+Supported strategies: ``integers``, ``floats``, ``booleans``,
+``sampled_from``, ``just``, ``one_of``, ``lists``, ``tuples``, plus
+``.map``/``.filter`` combinators and the ``@st.composite`` builder.
+``settings`` honors ``max_examples`` and ignores the rest (``deadline``,
+``database``...), matching how the suite calls it.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+from functools import wraps
+from typing import Any, Callable, Iterable, Sequence
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+_MAX_FILTER_TRIES = 1000
+
+
+class SearchStrategy:
+    """Base strategy: ``example(rng)`` draws one value."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example(self, rng):
+        return self.fn(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(_MAX_FILTER_TRIES):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise RuntimeError("filter predicate rejected every candidate")
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        # bias toward the boundaries — that is where off-by-ones live, and
+        # without shrinking the boundary cases must be drawn directly
+        r = rng.random()
+        if r < 0.08:
+            return self.lo
+        if r < 0.16:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, *, allow_nan=False,
+                 allow_infinity=False, width=64):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            return self.lo
+        if r < 0.10:
+            return self.hi
+        if r < 0.15 and self.lo <= 0.0 <= self.hi:
+            return 0.0
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, strats: Iterable[SearchStrategy]):
+        self.strats = list(strats)
+
+    def example(self, rng):
+        return rng.choice(self.strats).example(rng)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, *, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strats: SearchStrategy):
+        self.strats = strats
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strats)
+
+
+class _CompositeStrategy(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        return self.fn(lambda strat: strat.example(rng),
+                       *self.args, **self.kwargs)
+
+
+def _composite(fn):
+    @wraps(fn)
+    def builder(*args, **kwargs):
+        return _CompositeStrategy(fn, args, kwargs)
+    return builder
+
+
+class _Strategies:
+    """The ``hypothesis.strategies`` namespace subset the suite imports."""
+    integers = staticmethod(_Integers)
+    floats = staticmethod(_Floats)
+    booleans = staticmethod(_Booleans)
+    sampled_from = staticmethod(_SampledFrom)
+    just = staticmethod(_Just)
+    lists = staticmethod(_Lists)
+    composite = staticmethod(_composite)
+
+    @staticmethod
+    def one_of(*strats):
+        return _OneOf(strats)
+
+    @staticmethod
+    def tuples(*strats):
+        return _Tuples(*strats)
+
+
+strategies = _Strategies()
+st = strategies
+
+
+class settings:                              # noqa: N801 — hypothesis surface
+    """Decorator carrying ``max_examples`` to the ``given`` runner.  Works
+    in either stacking order (settings-outside-given is what the suite
+    uses); unknown knobs (``deadline=None``...) are accepted and ignored."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._proptest_max_examples = self.max_examples
+        return fn
+
+
+def given(*strats: SearchStrategy):
+    """Run the wrapped test once per drawn example.  The RNG seed derives
+    from the test's qualified name, so a run is reproducible and a failure
+    message names the falsifying example explicitly."""
+
+    def deco(fn):
+        @wraps(fn)
+        def runner(*args, **kwargs):         # signature intentionally empty:
+            # pytest must not mistake the property's drawn params for
+            # fixtures (``__wrapped__`` is deleted below for the same
+            # reason — it would expose fn's signature through inspect)
+            n = getattr(runner, "_proptest_max_examples",
+                        getattr(fn, "_proptest_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (run {i + 1}/{n}) for "
+                        f"{fn.__qualname__}: args={drawn!r}") from exc
+        del runner.__wrapped__
+        # pytest unwraps property tests through fn.hypothesis.inner_test
+        # (the real library's handle shape) — mirror it exactly
+        runner.hypothesis = type("inner", (), {"inner_test": fn})()
+        return runner
+
+    return deco

@@ -1,8 +1,8 @@
 from repro.runtime.trainer import Trainer, SimulatedFailure
 from repro.runtime.server import BatchServer, Overloaded, QueryServer, Shed
 from repro.runtime.fault import (EngineFaultInjector, FailureInjector,
-                                 StragglerDetector)
+                                 StragglerDetector, WorkerKillInjector)
 
 __all__ = ["Trainer", "SimulatedFailure", "BatchServer", "QueryServer",
            "Shed", "Overloaded", "EngineFaultInjector", "FailureInjector",
-           "StragglerDetector"]
+           "StragglerDetector", "WorkerKillInjector"]

@@ -248,7 +248,18 @@ class QueryServer:
     DEFAULT_REQUEST_WORKERS = RequestPool.DEFAULT_WORKERS
 
     def __init__(self, bigdawg, max_pending: Optional[int] = None,
-                 latency_target_s: Optional[float] = None):
+                 latency_target_s: Optional[float] = None,
+                 processes: Optional[int] = None):
+        # ``processes=N`` lifts the middleware into a core.procpool.ProcPool
+        # — N worker processes each owning a full middleware stack, sharing
+        # plans through the monitor/plan-cache files — so batch admission
+        # fans across interpreters instead of threads under one GIL.  The
+        # pool duck-types the middleware surface (execute/persist/health/
+        # breaker_trips), so the admission logic below is unchanged.
+        if processes is not None and processes > 1:
+            from repro.core.procpool import ProcPool
+            if not isinstance(bigdawg, ProcPool):
+                bigdawg = ProcPool.from_bigdawg(bigdawg, processes)
         self.bd = bigdawg
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
@@ -286,6 +297,13 @@ class QueryServer:
         for components constructed without a path).  Waits for in-flight
         background explorations first, so their measurements are included."""
         self.bd.persist()
+
+    def close(self) -> None:
+        """Shut down a process-pool backend (no-op for the in-process
+        middleware): stops every worker after their pipes drain."""
+        closer = getattr(self.bd, "close", None)
+        if closer is not None:
+            closer()
 
     def submit(self, query, degrade: bool = False):
         """Admit one request (safe from any thread).  The measured seconds

@@ -4,10 +4,13 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-# property tests need hypothesis (in requirements.txt; CI installs it) — a
-# bare environment must still collect the suite cleanly
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+# property tests prefer real hypothesis (in requirements.txt; CI installs
+# it); a bare environment falls back to the vendored shim with the same
+# decorator surface — the properties RUN either way, never skip
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.proptest import given, settings, strategies as st
 
 from repro.core import (BigDAWG, COOMatrix, ColumnarTable, DenseTensor,
                         ENGINES, Monitor, array, relational, text,

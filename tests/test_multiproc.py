@@ -1,0 +1,604 @@
+"""Multi-process serving battery: the ProcPool master/worker stack, sharded
+scatter–gather correctness (property-based), worker-kill fault recovery, and
+multi-process persistence contention.
+
+Property tests run ≥200 examples each and execute IN-PROCESS against
+``shardplan.run_scatter_gather`` (the sequential reference the pool shares
+its ``gather`` with) — spawning a pool per drawn example would test process
+startup, not the merge algebra.  The pool itself is exercised by the
+module-scoped fixture tests below them, including the same equivalence
+checks end-to-end across real worker processes.
+"""
+import multiprocessing
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.proptest import given, settings, strategies as st
+
+from repro.core import shardplan
+from repro.core import tables as T
+from repro.core.errors import EngineDown, PlanInfeasible
+from repro.core.islands import array, relational, scope
+from repro.core.middleware import BigDAWG
+from repro.core.monitor import Monitor
+from repro.core.planner import (dp_plans, exhaustive_plans,
+                                price_scatter_gather)
+from repro.core.procpool import ProcPool, _monitor_hammer, worker_channel
+from repro.core.tables import COOMatrix, ColumnarTable, DenseTensor
+from repro.runtime.fault import WorkerKillInjector
+from repro.runtime.server import QueryServer
+
+ENGINE_NAMES = ("dense_array", "columnar", "kv_sparse", "stream")
+
+# bounded shape pools keep the jit cache small across 200+ examples
+_NROWS = (5, 8, 12, 16, 24)
+_NCOLS = (2, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# merge primitives (numpy-only master-side algebra)
+# ---------------------------------------------------------------------------
+
+def test_shard_bounds_cover_and_spread():
+    assert T.shard_bounds(10, 3) == [(0, 4), (4, 7), (7, 10)]
+    assert T.shard_bounds(2, 4) == [(0, 1), (1, 2), (2, 2), (2, 2)]
+    with pytest.raises(ValueError):
+        T.shard_bounds(10, 0)
+
+
+def test_shard_concat_roundtrip_all_kinds():
+    rng = np.random.RandomState(0)
+    dense = DenseTensor(rng.rand(11, 3))
+    col = ColumnarTable({"key": np.arange(11), "value": rng.rand(11)},
+                        valid=(np.arange(11) % 3 != 0))
+    coo = COOMatrix(np.array([0, 3, 7, 10]), np.array([1, 0, 2, 1]),
+                    np.array([1.0, 2.0, 3.0, 4.0]), (11, 3))
+    stream = T.StreamBuffer(rng.rand(11, 4), t0=5)
+    for obj in (dense, col, coo, stream):
+        parts = T.shard_rows(obj, 3)
+        back = T.concat_shards(parts)
+        if isinstance(obj, DenseTensor):
+            assert np.allclose(np.asarray(back.data), np.asarray(obj.data))
+            assert back.valid_count == obj.valid_count
+        elif isinstance(obj, ColumnarTable):
+            for c in obj.columns:
+                assert np.allclose(np.asarray(back.columns[c]),
+                                   np.asarray(obj.columns[c]))
+            assert np.array_equal(np.asarray(back.valid),
+                                  np.asarray(obj.valid))
+        elif isinstance(obj, COOMatrix):
+            assert back.shape == obj.shape
+            assert np.array_equal(np.asarray(back.rows), np.asarray(obj.rows))
+            assert np.allclose(np.asarray(back.vals), np.asarray(obj.vals))
+        else:
+            assert np.allclose(np.asarray(back.data), np.asarray(obj.data))
+            assert back.t0 == obj.t0
+
+
+def test_shard_rows_rejects_padded_dense_and_0d():
+    with pytest.raises(ValueError):
+        T.shard_rows(DenseTensor(np.ones((6, 2)), valid_count=7), 2)
+    with pytest.raises(ValueError):
+        T.shard_rows(DenseTensor(np.float64(3.0)), 2)
+
+
+def test_kmerge_is_a_stable_ordered_merge():
+    a = ColumnarTable({"k": np.array([1.0, 3.0, 9.0]),
+                       "tag": np.array([10, 11, 12])})
+    b = ColumnarTable({"k": np.array([2.0, 3.0, 10.0]),
+                       "tag": np.array([20, 21, 22])},
+                      valid=np.array([True, True, False]))
+    out = T.kmerge_shards([a, b], by="k")
+    assert np.allclose(out.columns["k"], [1.0, 2.0, 3.0, 3.0, 9.0])
+    # the tied k=3.0 keeps shard order: shard 0's row first (stable)
+    assert list(out.columns["tag"]) == [10, 20, 11, 21, 12]
+
+
+def test_sum_merge_requires_aligned_keys():
+    a = ColumnarTable({"key": np.arange(3), "sum": np.ones(3)})
+    b = ColumnarTable({"key": np.arange(1, 4), "sum": np.ones(3)})
+    with pytest.raises(ValueError):
+        T.sum_shards([a, b])
+
+
+# ---------------------------------------------------------------------------
+# scatter–gather pricing
+# ---------------------------------------------------------------------------
+
+def _small_catalog_bd():
+    rng = np.random.RandomState(7)
+    bd = BigDAWG(train_plans=1, train_repeats=1)
+    bd.register("A", ColumnarTable({"key": rng.randint(0, 5, 24),
+                                    "value": rng.rand(24)}),
+                "columnar", shards=2)
+    bd.register("M", DenseTensor(rng.rand(24, 3)), "dense_array", shards=2)
+    bd.register("W", DenseTensor(rng.rand(3, 4)), "dense_array")
+    return bd
+
+
+def test_price_scatter_gather_shape_and_scaling():
+    bd = _small_catalog_bd()
+    q = array.matmul("M", "W")
+    sg = shardplan.analyze_catalog(q, bd.sharded)
+    assert sg is not None
+    p1 = price_scatter_gather(q, sg.fragment(0), catalog=bd.catalog,
+                              n_shards=2, workers=1)
+    p4 = price_scatter_gather(q, sg.fragment(0), catalog=bd.catalog,
+                              n_shards=2, workers=4)
+    assert p1.unsharded_s > 0 and p1.fragment_s > 0
+    # more workers -> fewer sequential rounds -> never slower
+    assert p4.sharded_s <= p1.sharded_s
+    assert p1.worthwhile == (p1.sharded_s < p1.unsharded_s)
+
+
+# ---------------------------------------------------------------------------
+# shardability analysis (conservative fallbacks)
+# ---------------------------------------------------------------------------
+
+def test_analyze_rejects_non_decomposable_shapes():
+    bd = _small_catalog_bd()
+    infos = bd.sharded
+    # global ops are not row-decomposable
+    assert shardplan.analyze_catalog(relational.distinct("A"), infos) is None
+    # sharded table on a replicated slot (join RIGHT side)
+    q = relational.join("A2", "A", left_on="key", right_on="key")
+    assert shardplan.analyze_catalog(q, infos) is None
+    # island boundary inside the sharded lineage
+    q = array.count(scope("array", relational.select(
+        "A", column="value", lo=0.0)))
+    assert shardplan.analyze_catalog(q, infos) is None
+    # aggregate below the root
+    q = relational.sort(relational.sort("A", by="value"), by="key")
+    assert shardplan.analyze_catalog(q, infos) is None
+    # no sharded leaves at all
+    assert shardplan.analyze_catalog(array.count("W"), infos) is None
+
+
+def test_analyze_accepts_the_decomposable_families():
+    bd = _small_catalog_bd()
+    infos = bd.sharded
+    cases = [
+        (array.matmul("M", "W"), "concat", True),
+        (array.count("M"), "sum", False),
+        (relational.sort("A", by="value"), "kmerge", False),
+        (relational.groupby_sum("A", key="key", value="value",
+                                num_groups=5), "sum", False),
+    ]
+    for q, merge, wrapped in cases:
+        sg = shardplan.analyze_catalog(q, infos)
+        assert sg is not None and sg.merge == merge
+        assert sg.wrap_scope == wrapped
+        frag = sg.fragment(0)
+        names = {r.name for r in frag.refs()}
+        assert any(n.endswith("#0") for n in names)
+
+
+# ---------------------------------------------------------------------------
+# PROPERTY 1: sharded scatter–gather == unsharded execution
+# ---------------------------------------------------------------------------
+
+_FAMILIES = ("matmul", "count", "scale", "add", "sort", "groupby",
+             "join", "select_sort", "project")
+
+
+def _assert_containers_equal(a, b):
+    assert type(a) is type(b)
+    if isinstance(a, DenseTensor):
+        assert np.asarray(a.data).shape == np.asarray(b.data).shape
+        assert np.allclose(np.asarray(a.data), np.asarray(b.data))
+        assert a.valid_count == b.valid_count
+    elif isinstance(a, ColumnarTable):
+        assert set(a.columns) == set(b.columns)
+        av, bv = np.asarray(a.valid), np.asarray(b.valid)
+        assert np.array_equal(av, bv)
+        for c in a.columns:
+            assert np.allclose(np.asarray(a.columns[c])[av],
+                               np.asarray(b.columns[c])[bv])
+    else:
+        raise AssertionError(f"unexpected container {type(a).__name__}")
+
+
+def _run_scatter_case(family, n, k, shards, seed):
+    rng = np.random.RandomState(seed)
+    bd = BigDAWG(train_plans=1, train_repeats=1)
+    if family in ("matmul", "count", "scale", "add"):
+        M = DenseTensor(rng.rand(n, k))
+        bd.register("M", M, "dense_array", shards=shards)
+        if family == "matmul":
+            bd.register("W", DenseTensor(rng.rand(k, 3)), "dense_array")
+            q = array.matmul("M", "W")
+        elif family == "count":
+            q = array.count("M")
+        elif family == "scale":
+            q = array.scale("M", factor=2.5)
+        else:
+            bd.register("M2", DenseTensor(rng.rand(n, k)), "dense_array",
+                        shards=shards)
+            q = array.add("M", "M2")
+    else:
+        A = ColumnarTable({"key": rng.randint(0, 4, n).astype(np.int32),
+                           "value": rng.rand(n)})
+        bd.register("A", A, "columnar", shards=shards)
+        if family == "sort":
+            q = relational.sort("A", by="value")
+        elif family == "groupby":
+            q = relational.groupby_sum("A", key="key", value="value",
+                                       num_groups=4)
+        elif family == "join":
+            B = ColumnarTable({"key": np.arange(4, dtype=np.int32),
+                               "w": rng.rand(4)})
+            bd.register("B", B, "columnar")
+            q = relational.join("A", "B", left_on="key", right_on="key")
+        elif family == "select_sort":
+            q = relational.sort(
+                relational.select("A", column="value", lo=0.3), by="value")
+        else:
+            q = relational.project("A", columns=["value"])
+
+    sg = shardplan.analyze_catalog(q, bd.sharded)
+    assert sg is not None and sg.n_shards == shards
+    full = bd.execute(q, mode="training").result
+    merged = shardplan.run_scatter_gather(
+        sg, lambda i, frag: bd.execute(frag, mode="training").result)
+    if family == "count":
+        assert int(np.asarray(merged.data)) == int(np.asarray(full.data))
+    elif family == "groupby":
+        assert np.array_equal(np.asarray(merged.columns["key"]),
+                              np.asarray(full.columns["key"]))
+        assert np.allclose(np.asarray(merged.columns["sum"]),
+                           np.asarray(full.columns["sum"]))
+    else:
+        _assert_containers_equal(T.host_copy(full), T.host_copy(merged))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.sampled_from(_FAMILIES), st.sampled_from(_NROWS),
+       st.sampled_from(_NCOLS), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_scatter_gather_equals_unsharded(family, n, k, shards, seed):
+    _run_scatter_case(family, n, k, shards, seed)
+
+
+# ---------------------------------------------------------------------------
+# PROPERTY 2: masked k=1 DP == exhaustive enumeration (shard placements too)
+# ---------------------------------------------------------------------------
+
+def _mask_pool():
+    """Every proper subset of the engine set (the full set is trivially
+    infeasible everywhere and tests nothing)."""
+    masks = []
+    for bits in range(2 ** len(ENGINE_NAMES) - 1):
+        masks.append(frozenset(e for i, e in enumerate(ENGINE_NAMES)
+                               if bits & (1 << i)))
+    return masks
+
+
+_MASKS = _mask_pool()
+
+
+def _query_pool(bd):
+    """Queries over the sharded catalog, including shard FRAGMENTS — the
+    placement-constrained form the pool plans per worker."""
+    qs = [
+        array.matmul("M", "W"),
+        array.count("M"),
+        relational.sort("A", by="value"),
+        relational.groupby_sum("A", key="key", value="value", num_groups=5),
+        relational.select("A", column="value", lo=0.2),
+        array.count(scope("array",
+                          relational.select("A", column="value", lo=0.0))),
+    ]
+    for q in (array.matmul("M", "W"), relational.sort("A", by="value")):
+        sg = shardplan.analyze_catalog(q, bd.sharded)
+        assert sg is not None
+        qs.extend(sg.fragment(i) for i in range(sg.n_shards))
+    return qs
+
+
+_DP_BD = _small_catalog_bd()
+_DP_QUERIES = _query_pool(_DP_BD)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, len(_DP_QUERIES) - 1),
+       st.integers(0, len(_MASKS) - 1))
+def test_masked_k1_dp_matches_exhaustive(qi, mi):
+    q, mask = _DP_QUERIES[qi], _MASKS[mi]
+    try:
+        dp = dp_plans(q, _DP_BD.catalog, max_plans=1, mask=mask)
+    except PlanInfeasible:
+        dp = None
+    try:
+        ex = exhaustive_plans(q, _DP_BD.catalog, mask=mask)
+    except PlanInfeasible:
+        ex = None
+    assert (dp is None) == (ex is None)
+    if dp is not None:
+        assert dp[0][0] == pytest.approx(ex[0][0], rel=1e-9, abs=1e-12)
+        for _, plan in [dp[0]]:
+            for _pos, eng in plan.assignment:
+                assert eng not in mask
+
+
+# ---------------------------------------------------------------------------
+# monitor / plan-cache shared persistence (in-process protocol checks)
+# ---------------------------------------------------------------------------
+
+def test_monitor_merge_save_preserves_other_writers(tmp_path):
+    path = str(tmp_path / "monitor.json")
+    usage = {"cpu": 0.1, "mem_frac": 0.1}
+    m1 = Monitor(path, shared=True)
+    m1.record("sig-one", "0:columnar", 0.01, usage=usage)
+    m1.save()
+    m2 = Monitor(path, shared=True)
+    m2.record("sig-two", "0:dense_array", 0.02, usage=usage)
+    m2.save()                    # must carry sig-one through
+    # m1 polls: adopts m2's signature (non-local) without losing its own
+    assert m1.reload_if_changed() is True
+    assert "sig-two" in m1.db and "sig-one" in m1.db
+    m1.record("sig-one", "0:columnar", 0.03, usage=usage)
+    m1.save()                    # must carry sig-two through
+    fresh = Monitor(path)
+    assert set(fresh.db) == {"sig-one", "sig-two"}
+    assert fresh.db["sig-one"]["0:columnar"].n == 2
+
+
+def test_plan_cache_merge_save_preserves_other_writers(tmp_path):
+    state = str(tmp_path / "monitor.json")
+    rng = np.random.RandomState(3)
+    A = ColumnarTable({"key": rng.randint(0, 3, 12), "value": rng.rand(12)})
+    M = DenseTensor(rng.rand(12, 2))
+    W = DenseTensor(rng.rand(2, 2))
+
+    bd1 = BigDAWG(monitor=Monitor(state, shared=True), train_plans=1,
+                  train_repeats=1)
+    bd1.register("A", A, "columnar")
+    bd1.execute(relational.sort("A", by="value"), mode="training")
+    bd1.monitor.save()
+    bd1.save_plan_cache()
+
+    bd2 = BigDAWG(monitor=Monitor(state, shared=True), train_plans=1,
+                  train_repeats=1)
+    bd2.register("M", M, "dense_array")
+    bd2.register("W", W, "dense_array")
+    bd2.execute(array.matmul("M", "W"), mode="training")
+    bd2.monitor.save()
+    bd2.save_plan_cache()        # bd1's signature must survive
+
+    bd3 = BigDAWG(monitor=Monitor(state), train_plans=1, train_repeats=1)
+    assert len(bd3.plan_cache) == 2
+    assert all(cp.restored for cp in bd3.plan_cache.values())
+    # bd1 adopts bd2's entry on poll without losing its own
+    assert bd1.reload_shared() is True
+    assert len(bd1.plan_cache) == 2
+
+
+def test_multiprocess_persistence_contention(tmp_path):
+    """N real processes hammer one monitor DB through atomic merge-saves and
+    versioned reloads: every private signature survives, the contended one
+    resolves last-writer-wins, and the final file parses clean (no torn
+    reads, no malformed entries)."""
+    path = str(tmp_path / "contended.json")
+    ctx = multiprocessing.get_context("spawn")
+    n_procs, rounds = 3, 6
+    procs = [ctx.Process(target=_monitor_hammer,
+                         args=(path, f"private-{i}", "shared-sig", rounds, i))
+             for i in range(n_procs)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+    final = Monitor(path)        # auto-loads; a torn file would raise here
+    for i in range(n_procs):
+        sig = f"private-{i}"
+        assert sig in final.db, f"dropped private signature {sig}"
+        stats = final.db[sig][f"0:plan{i}"]
+        # per-signature last-writer-wins: a sibling's save that read the
+        # file just before this process's final round may carry a stale
+        # copy of this section, so n can trail rounds — but never exceed
+        # it, never vanish, and never mix in another writer's plan keys
+        assert 1 <= stats.n <= rounds
+        assert set(final.db[sig]) == {f"0:plan{i}"}
+    assert "shared-sig" in final.db
+    winners = set(final.db["shared-sig"])
+    assert winners and winners <= {f"0:writer{i}" for i in range(n_procs)}
+
+
+# ---------------------------------------------------------------------------
+# the pool itself (module-scoped: spawn cost paid once)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pool_state(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("mpstate") / "monitor.json")
+
+
+@pytest.fixture(scope="module")
+def pool_data():
+    rng = np.random.RandomState(11)
+    return {
+        "A": ColumnarTable({"key": rng.randint(0, 5, 40).astype(np.int32),
+                            "value": rng.rand(40)}),
+        "M": DenseTensor(rng.rand(40, 3)),
+        "W": DenseTensor(rng.rand(3, 4)),
+    }
+
+
+def _register_all(target, data):
+    target.register("A", data["A"], "columnar", shards=2)
+    target.register("M", data["M"], "dense_array", shards=2)
+    target.register("W", data["W"], "dense_array")
+
+
+@pytest.fixture(scope="module")
+def pool(pool_state, pool_data):
+    p = ProcPool(2, state_path=pool_state, train_plans=2,
+                 scatter="always", request_timeout_s=120.0)
+    _register_all(p, pool_data)
+    yield p
+    p.close()
+
+
+@pytest.fixture(scope="module")
+def oracle(pool_data):
+    bd = BigDAWG(train_plans=2)
+    _register_all(bd, pool_data)
+    return bd
+
+
+_POOL_QUERIES = [
+    ("count", lambda: array.count("M")),
+    ("matmul", lambda: array.matmul("M", "W")),
+    ("sort", lambda: relational.sort("A", by="value")),
+    ("groupby", lambda: relational.groupby_sum("A", key="key",
+                                               value="value", num_groups=5)),
+]
+
+
+def test_pool_scatter_matches_oracle(pool, oracle):
+    for name, build in _POOL_QUERIES:
+        q = build()
+        rep = pool.execute(q, mode="training")
+        ref = oracle.execute(q, mode="training")
+        assert rep.shards == 2, name
+        got, want = T.host_copy(rep.result), T.host_copy(ref.result)
+        if isinstance(want, DenseTensor):
+            assert np.allclose(np.asarray(got.data),
+                               np.asarray(want.data)), name
+        else:
+            for c in want.columns:
+                assert np.allclose(np.asarray(got.columns[c]),
+                                   np.asarray(want.columns[c])), (name, c)
+    assert pool.scatter_serves >= len(_POOL_QUERIES)
+
+
+def test_pool_serves_warm_after_training(pool):
+    rep = pool.execute(array.matmul("M", "W"))
+    assert rep.mode == "production"
+    assert rep.shards == 2
+    assert rep.cache_hit
+
+
+def test_pool_persist_and_warm_restart(pool, pool_state, pool_data):
+    pool.persist()
+    restarted = ProcPool(1, state_path=pool_state, train_plans=2,
+                         scatter="always")
+    try:
+        _register_all(restarted, pool_data)
+        rep = restarted.execute(array.matmul("M", "W"))
+        assert rep.mode == "production"    # warm from the shared files
+        assert rep.shards == 2
+    finally:
+        restarted.close()
+
+
+def test_queryserver_over_pool_admission(pool):
+    srv = QueryServer(pool)
+    reports = srv.submit_many([array.matmul("M", "W") for _ in range(6)],
+                              workers=3)
+    assert len(reports) == 6
+    assert srv.stats["requests"] == 6
+    assert srv.stats["shed"] == 0
+    assert all(r.shards == 2 for r in reports)
+
+
+def test_unsharded_query_round_robins(pool):
+    # a query with no sharded leaves takes the ordinary single-worker path
+    rep = pool.execute(array.count("W"), mode="training")
+    assert rep.shards == 0
+    assert int(np.asarray(rep.result.data)) == 12
+
+
+# ---------------------------------------------------------------------------
+# worker-kill fault battery
+# ---------------------------------------------------------------------------
+
+def test_worker_kill_respawn_retry_and_clean_error(pool_data):
+    """SIGKILL a worker mid-request: the master must detect the death via
+    the breaker channel, respawn with the registration log replayed, and
+    either retry transparently (retries>=1) or surface a clean EngineDown
+    (retries=0) — zero hung requests, zero lost requests."""
+    inj = WorkerKillInjector(kill_on_dispatch=2)
+    p = ProcPool(2, train_plans=2, retries=1, kill_injector=inj,
+                 request_timeout_s=120.0)
+    try:
+        p.register("M", pool_data["M"], "dense_array")
+        p.register("W", pool_data["W"], "dense_array")
+        q = array.matmul("M", "W")
+        ref = p.execute(q, mode="training")        # dispatch 1: survives
+        rep = p.execute(q, mode="training")        # dispatch 2: kill lands
+        assert inj.kills == 1
+        assert p.respawns >= 1
+        assert p.breaker_trips >= 1                # death hit the breaker
+        assert np.allclose(np.asarray(rep.result.data),
+                           np.asarray(ref.result.data))
+        # the respawned worker keeps serving (registration replay worked)
+        for _ in range(2):
+            again = p.execute(q)
+            assert np.allclose(np.asarray(again.result.data),
+                               np.asarray(ref.result.data))
+        assert all(pid is not None for pid in p.ping())
+    finally:
+        p.close()
+
+    inj0 = WorkerKillInjector(kill_on_dispatch=1)
+    p0 = ProcPool(1, train_plans=2, retries=0, kill_injector=inj0,
+                  request_timeout_s=120.0)
+    try:
+        p0.register("M", pool_data["M"], "dense_array")
+        p0.register("W", pool_data["W"], "dense_array")
+        with pytest.raises(EngineDown) as exc:
+            p0.execute(q, mode="training")
+        assert worker_channel(0) in str(exc.value)
+        assert p0.respawns == 1
+        rep = p0.execute(q, mode="training")       # next request serves fine
+        assert np.asarray(rep.result.data).shape == (40, 4)
+    finally:
+        p0.close()
+
+
+# ---------------------------------------------------------------------------
+# API surface: connect(processes=) / QueryServer(processes=)
+# ---------------------------------------------------------------------------
+
+def test_connect_with_processes_session(tmp_path, pool_data):
+    from repro.core.api import connect
+    state = str(tmp_path / "session.json")
+    with connect(state, processes=2, train_plans=2,
+                 scatter="always") as s:
+        s.register("A", pool_data["A"], "columnar", shards=2)
+        s.register("M", pool_data["M"], "dense_array", shards=2)
+        s.register("W", pool_data["W"], "dense_array")
+        res = s.execute(array.matmul("M", "W"), mode="training")
+        assert res.value.data.shape == (40, 4)
+        assert res.report.shards == 2
+        assert res.provenance == ()        # fragment plans: no per-node map
+        res2 = s.execute(relational.sort("A", by="value"), mode="training")
+        assert np.all(np.diff(np.asarray(
+            res2.value.columns["value"])) >= 0)
+        s.persist()
+    # context-manager exit closed the pool
+    with pytest.raises(RuntimeError):
+        s.bigdawg.execute(array.count("M"))
+
+
+def test_queryserver_processes_kwarg(pool_data):
+    bd = BigDAWG(train_plans=2)
+    bd.register("M", pool_data["M"], "dense_array")
+    bd.register("W", pool_data["W"], "dense_array")
+    srv = QueryServer(bd, processes=2)
+    try:
+        assert isinstance(srv.bd, ProcPool)        # lifted via from_bigdawg
+        q = array.matmul("M", "W")
+        srv.warm([q])
+        rep = srv.submit(q)
+        assert np.asarray(rep.result.data).shape == (40, 4)
+        assert srv.stats["requests"] == 1
+    finally:
+        srv.close()
