@@ -1,0 +1,176 @@
+"""Plan-level kernel fusion: measure the warm-serve win from compiling a
+cached plan's same-engine chains into single jitted callables (ISSUE 8
+tentpole; core/fuseplan.py).
+
+The unfused executor pays one host round trip per node — argument gather,
+engine shim call, container wrap, async-dispatch bookkeeping — even when a
+whole chain is pure device math.  Fusion collapses each maximal dense-array
+chain into ONE jitted call, so a warm serve of an N-node plan makes
+``N - n_fused_nodes + n_segments`` dispatches instead of N.
+
+Two entries per width, both on the fig_host_parallel pipeline family:
+
+  pipeline_widthW       — the fig_host_parallel DAG verbatim (W branches of
+      select->haar->bin_hist->tfidf, dense add-reduction).  ``select`` is
+      columnar-homed and ``bin_hist`` is not fusable, so each branch's haar
+      stands alone (1-node chains stay unfused) and fusion captures the
+      tfidf+add reduction tree (2W-1 of the ~4W nodes): the realistic
+      partially-fusable case.
+  pipeline_dense_widthW — the same pipeline with the bin_hist stage dropped
+      and every array op planned dense: each branch's haar->tfidf chain plus
+      the whole add tree fuse into ONE segment (3W-1 nodes).  The
+      best-case bound for the dispatch-overhead claim.
+
+Per entry this emits JSON (serve times are medians over ``iters`` warm
+serves — training/compile excluded; both paths run the SAME plan under the
+level-concurrent executor, so the delta is purely fusion):
+
+  * ``unfused_s`` / ``fused_s``       — median warm serve seconds,
+  * ``rps_unfused`` / ``rps_fused``   — 1/median: warm serves per second,
+  * ``rps_speedup``                   — rps_fused / rps_unfused,
+  * ``dispatch_per_node_unfused_s`` / ``dispatch_per_node_fused_s``
+        — median serve seconds divided by node count: the per-node
+          dispatch overhead fusion is supposed to lower,
+  * ``n_segments`` / ``n_fused_nodes`` / ``fusion_fallbacks``.
+
+In full mode (not ``--fast``), when an XLA backend is live and no segment
+fell back, the pipeline_dense entries must clear >= 1.15x rps — the
+tentpole's acceptance bar.  Fast mode records honest numbers but asserts
+only equivalence-adjacent invariants (segments formed, zero fallbacks).
+
+Run: PYTHONPATH=src python benchmarks/fig_fusion.py [--fast]
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (BigDAWG, DenseTensor, array, execute_plan, fuse_plan,
+                        relational)
+from repro.core.planner import Plan
+try:                                     # repo root on sys.path (run.py)
+    from benchmarks.fig_host_parallel import pipeline_dag
+except ImportError:                      # invoked as a script from CI
+    from fig_host_parallel import pipeline_dag
+
+# only select is columnar-homed (relational island); every array op —
+# including the unfusable bin_hist seam — lands on dense_array, so segment
+# boundaries are dispatch seams, not cast seams (a columnar bin_hist would
+# serialize W casts inside the fused segment's single host task)
+_COLUMNAR_OPS = {"select"}
+
+SPEEDUP_BAR = 1.15
+
+
+def pipeline_dense_dag(width: int):
+    """The pipeline family's all-fusable variant: select feeds haar->tfidf
+    directly (no bin_hist seam), reduced by the dense add tree."""
+    def branch():
+        s = relational.select("waves", column="value", lo=0.0)
+        return array.tfidf(array.haar(s, levels=2))
+    outs = [branch() for _ in range(width)]
+    while len(outs) > 1:
+        outs = [array.add(a, b) if b is not None else a
+                for a, b in zip(outs[0::2],
+                                outs[1::2] + [None] * (len(outs) % 2))]
+    return outs[0]
+
+
+def fusion_plan(query) -> Plan:
+    """Columnar where the data model demands it, dense_array everywhere
+    else — the maximal-fusion assignment for the pipeline family."""
+    return Plan(tuple(
+        (i, "columnar" if n.op in _COLUMNAR_OPS else "dense_array")
+        for i, n in enumerate(query.nodes())))
+
+
+def _median_serve(query, plan, catalog, iters, fused=None):
+    execute_plan(query, plan, catalog, concurrent=True, fused=fused)  # warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        execute_plan(query, plan, catalog, concurrent=True, fused=fused)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def main(fast: bool = False):
+    fast = fast or "--fast" in sys.argv
+    iters = 3 if fast else 15
+    n, t = (16, 64) if fast else (96, 256)
+    widths = (2, 4) if fast else (4, 8)
+
+    rng = np.random.default_rng(0)
+    bd = BigDAWG()
+    bd.register("waves", DenseTensor(jnp.asarray(
+        rng.normal(size=(n, t)).astype(np.float32))), engine="dense_array")
+
+    backend = jax.default_backend()
+    report = {}
+    for family, build in (("pipeline", pipeline_dag),
+                          ("pipeline_dense", pipeline_dense_dag)):
+        for width in widths:
+            q = build(width)
+            plan = fusion_plan(q)
+            fused = fuse_plan(q, plan, bd.catalog, cost_model=bd.cost_model)
+            unfused_s = _median_serve(q, plan, bd.catalog, iters)
+            fused_s = _median_serve(q, plan, bd.catalog, iters, fused=fused)
+            res = execute_plan(q, plan, bd.catalog, concurrent=True,
+                               fused=fused)
+            n_nodes = len(q.nodes())
+            speedup = unfused_s / max(fused_s, 1e-9)
+            entry = {
+                "n_nodes": n_nodes,
+                "width": width,
+                "backend": backend,
+                "n_segments": len(fused.segments),
+                "n_fused_nodes": fused.n_fused_nodes,
+                "fusion_fallbacks": res.fusion_fallbacks,
+                "unfused_s": round(unfused_s, 6),
+                "fused_s": round(fused_s, 6),
+                "rps_unfused": round(1.0 / max(unfused_s, 1e-9), 2),
+                "rps_fused": round(1.0 / max(fused_s, 1e-9), 2),
+                "rps_speedup": round(speedup, 3),
+                "dispatch_per_node_unfused_s": round(unfused_s / n_nodes, 8),
+                "dispatch_per_node_fused_s": round(fused_s / n_nodes, 8),
+            }
+            report[f"{family}_width{width}"] = entry
+            print(f"# {family} width={width} nodes={n_nodes} "
+                  f"segments={len(fused.segments)} "
+                  f"fused_nodes={fused.n_fused_nodes} "
+                  f"unfused={unfused_s:.5f}s fused={fused_s:.5f}s "
+                  f"speedup={speedup:.2f}x", file=sys.stderr, flush=True)
+
+            # equivalence-adjacent invariants hold in every mode: segments
+            # really formed, nothing fell back, results fused == unfused
+            assert fused.segments and res.fusion_fallbacks == 0
+            base = execute_plan(q, plan, bd.catalog, concurrent=True)
+            np.testing.assert_allclose(
+                np.asarray(res.value.data, np.float32),
+                np.asarray(base.value.data, np.float32),
+                rtol=1e-5, atol=1e-5)
+
+    if not fast and backend is not None:
+        # the acceptance bar: on a live XLA backend the all-fusable family
+        # must clear >= 1.15x warm rps with strictly lower per-node overhead
+        for width in widths:
+            e = report[f"pipeline_dense_width{width}"]
+            if e["fusion_fallbacks"] == 0:
+                assert e["rps_speedup"] >= SPEEDUP_BAR, \
+                    f"pipeline_dense_width{width}: {e['rps_speedup']}x " \
+                    f"< {SPEEDUP_BAR}x"
+                assert (e["dispatch_per_node_fused_s"]
+                        < e["dispatch_per_node_unfused_s"])
+
+    print(json.dumps(report, indent=1))
+    return report
+
+
+if __name__ == "__main__":
+    main()

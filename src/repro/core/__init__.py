@@ -21,6 +21,8 @@ from repro.core.errors import (BigDAWGError, EngineDown, Overloaded,
 from repro.core.health import CircuitBreaker, EngineHealth
 from repro.core.executor import (execute_plan, ExecutionResult, topo_levels,
                                  host_pool)
+from repro.core.fuseplan import (FusedPlan, FusedSegment, fuse_plan,
+                                 query_fingerprint)
 from repro.core.middleware import (BigDAWG, CachedPlan, Report, masked_sig,
                                    default_plan_cache_path)
 from repro.core.qlang import bigdawg
@@ -40,7 +42,9 @@ __all__ = [
     "Plan", "enumerate_plans", "find_containers", "plan_containers",
     "plan_cost", "dp_plans", "exhaustive_plans", "estimate_sizes",
     "estimate_sizes_shapes", "Monitor", "usage_snapshot", "execute_plan",
-    "ExecutionResult", "topo_levels", "host_pool", "BigDAWG", "CachedPlan",
+    "ExecutionResult", "topo_levels", "host_pool", "FusedPlan",
+    "FusedSegment", "fuse_plan", "query_fingerprint",
+    "BigDAWG", "CachedPlan",
     "Report", "default_plan_cache_path", "masked_sig",
     "BigDAWGError", "EngineDown", "Overloaded", "PlanInfeasible",
     "QueryParseError", "is_engine_failure", "CircuitBreaker", "EngineHealth",

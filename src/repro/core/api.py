@@ -106,6 +106,9 @@ class Result:
     #                                from submit_many carries "shed")
     degraded: bool = False         # planned under an engine mask
     failovers: int = 0             # EngineDown retries this request survived
+    # position groups that executed as single compiled segments (plan-level
+    # kernel fusion; empty on training serves or with fuse=False)
+    fused_segments: Tuple[Tuple[int, ...], ...] = ()
 
     def describe(self) -> str:
         return " -> ".join(self.provenance)
@@ -132,7 +135,8 @@ def _result_from_report(query: PolyOp, rep: Report) -> Result:
                   islands=tuple(seen), per_node_seconds=rep.per_node_seconds,
                   report=rep, status=getattr(rep, "status", "ok"),
                   degraded=getattr(rep, "degraded", False),
-                  failovers=getattr(rep, "failovers", 0))
+                  failovers=getattr(rep, "failovers", 0),
+                  fused_segments=getattr(rep, "fused_segments", ()))
 
 
 class Session:
@@ -263,7 +267,8 @@ def connect(state_path: Optional[str] = None, *,
     failover re-planning (pass ``health=EngineHealth(...)`` instead to tune
     thresholds or plug in a fault injector).  Remaining keyword arguments go
     to ``BigDAWG`` — ``train_plans``, ``explore_budget``, ``calibrate``,
-    ``replan_factor``, ``health``...
+    ``replan_factor``, ``health``, ``fuse`` (plan-level kernel fusion of
+    warm serves, default on; ``fuse=False`` forces node-by-node dispatch)...
 
     ``processes=N`` backs the session with a ``core.procpool.ProcPool`` —
     N worker processes each running a full middleware stack, sharing plans

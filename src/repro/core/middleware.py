@@ -143,6 +143,12 @@ class CachedPlan:
     # budgeted exploration path executes in rotation
     alternates: Tuple[Plan, ...] = ()
     next_alt: int = 0        # rotation cursor (not persisted)
+    # the fusion pass's output for this entry's plan (fuseplan.FusedPlan),
+    # built lazily on the first fused serve and invalidated when the plan or
+    # the query's exact structure changes.  Runtime-only, like next_alt: the
+    # compiled callables live in fuseplan's process-wide cache, and a
+    # restarted process re-runs the (cheap) segmentation pass
+    fused: Any = None
 
 
 @dataclass
@@ -176,6 +182,13 @@ class Report:
     # (0 = ordinary unsharded execution; plan_key then describes one
     # fragment's plan — fragments share a node structure with the query)
     shards: int = 0
+    # position groups that executed as single compiled segments this serve
+    # (empty on training serves — calibration stays unfused — and when
+    # fusion is off, nothing was fusable, or every segment fell back)
+    fused_segments: Tuple[Tuple[int, ...], ...] = ()
+    # fused segments that failed to trace/compile/run this serve and were
+    # re-executed node-by-node (sticky: later serves skip the fused attempt)
+    fusion_fallbacks: int = 0
 
 
 def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
@@ -201,7 +214,8 @@ class BigDAWG:
                  plan_cache_path: Optional[str] = None,
                  replan_factor: float = REPLAN_FACTOR,
                  explore_budget: float = EXPLORE_BUDGET,
-                 health: Optional[EngineHealth] = None):
+                 health: Optional[EngineHealth] = None,
+                 fuse: bool = True, fusion_injector: Any = None):
         self.catalog: Dict[str, CatalogEntry] = {}
         # name -> shardplan.ShardInfo for tables registered with shards=N
         # (the shard parts live in the catalog as "name#i")
@@ -231,6 +245,17 @@ class BigDAWG:
         self.explorations = 0
         self.explore_seconds = 0.0
         self.serve_seconds = 0.0
+        # plan-level kernel fusion (core.fuseplan): production serves execute
+        # each cached plan's same-engine fusable chains as single jitted
+        # callables.  Safe to flip at runtime (the FusedPlan rides the cache
+        # entry; fuse=False simply stops passing it to the executor).
+        # fusion_injector (runtime.fault.FusionFaultInjector) is the
+        # compile-failure seam for the fallback fault tests
+        self.fuse = fuse
+        self.fusion_injector = fusion_injector
+        self.fused_serves = 0        # production serves with >=1 fused segment
+        self.fusion_segments = 0     # fused segments executed, lifetime
+        self.fusion_fallbacks = 0    # sticky fused->unfused fallbacks, lifetime
         # signature -> CachedPlan: production requests skip re-enumeration
         # and plan-key parsing entirely; persisted beside the monitor DB so
         # restarted processes serve warm
@@ -530,6 +555,41 @@ class BigDAWG:
         self.save_plan_cache()
         return True
 
+    def _fused_for(self, query: PolyOp, plan: Plan,
+                   entry: Optional[CachedPlan]):
+        """The FusedPlan to serve ``plan`` with (None when fusion is off).
+        Cached on the plan-cache entry and reused only when both the plan
+        key and the query's EXACT structural fingerprint still match —
+        signatures bin constant attrs, so two queries can share a signature
+        (and this entry) yet need differently-closed-over callables."""
+        if not self.fuse:
+            return None
+        from repro.core import fuseplan
+        fp = fuseplan.query_fingerprint(query)
+        with self._cache_lock:
+            f = entry.fused if entry is not None else None
+            if f is not None and f.plan_key == plan.key \
+                    and f.fingerprint == fp:
+                return f
+        f = fuseplan.fuse_plan(query, plan, self.catalog,
+                               cost_model=self.cost_model,
+                               injector=self.fusion_injector)
+        with self._cache_lock:
+            if entry is not None:
+                entry.fused = f
+        return f
+
+    def _note_fusion(self, res: ExecutionResult) -> None:
+        """Roll one serve's fusion outcome into the lifetime counters
+        (caller does NOT hold the stats lock)."""
+        if not res.fused_segments and not res.fusion_fallbacks:
+            return
+        with self._stats_lock:
+            if res.fused_segments:
+                self.fused_serves += 1
+                self.fusion_segments += len(res.fused_segments)
+            self.fusion_fallbacks += res.fusion_fallbacks
+
     def _production(self, query: PolyOp, sig: str) -> Report:
         usage = usage_snapshot()
         plan_key, stats, drifted = self.monitor.best(sig, usage)
@@ -600,14 +660,24 @@ class BigDAWG:
                 self.plan_cache.pop(sig, None)
             return self._train(query, sig)
         res = execute_plan(query, plan, self.catalog, concurrent=True,
-                           cost_model=self.cost_model, health=self.health)
-        self.monitor.record(sig, plan_key, res.seconds,
-                            cast_bytes=res.cast_bytes, usage=usage,
-                            sizes=res.size_obs, shapes=res.shape_obs)
-        after = self.monitor.known_plans(sig).get(plan_key)
-        measured = after.mean_seconds if after is not None and after.n \
-            else res.seconds
-        replanned = self._maybe_replan(query, sig, measured, entry)
+                           cost_model=self.cost_model, health=self.health,
+                           fused=self._fused_for(query, plan, entry))
+        self._note_fusion(res)
+        if res.fusion_cold_compiles:
+            # first serve of a fused segment signature at these shapes: the
+            # wall time includes trace+compile, a one-off.  Treat the serve
+            # as a warm-up — neither the plan's measured mean nor the
+            # divergence re-plan trigger may see the compile spike (sizes/
+            # shapes were already learned from the unfused training serves)
+            replanned = False
+        else:
+            self.monitor.record(sig, plan_key, res.seconds,
+                                cast_bytes=res.cast_bytes, usage=usage,
+                                sizes=res.size_obs, shapes=res.shape_obs)
+            after = self.monitor.known_plans(sig).get(plan_key)
+            measured = after.mean_seconds if after is not None and after.n \
+                else res.seconds
+            replanned = self._maybe_replan(query, sig, measured, entry)
         with self._stats_lock:
             self.serve_seconds += res.seconds
         explored_key = self._maybe_explore(query, sig, usage)
@@ -615,7 +685,9 @@ class BigDAWG:
                       res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
                       predicted_s=entry.predicted_s,
                       explored=bool(explored_key), explored_key=explored_key,
-                      per_node_seconds=_pos_seconds(query, res))
+                      per_node_seconds=_pos_seconds(query, res),
+                      fused_segments=res.fused_segments,
+                      fusion_fallbacks=res.fusion_fallbacks)
 
     def _maybe_explore(self, query: PolyOp, sig: str,
                        usage: Dict[str, float]) -> str:
@@ -771,17 +843,22 @@ class BigDAWG:
             with self._cache_lock:
                 entry = self.plan_cache.setdefault(mkey, entry)
         res = execute_plan(query, entry.plan, self.catalog, concurrent=True,
-                           cost_model=self.cost_model, health=self.health)
-        self.monitor.record(mkey, entry.plan.key, res.seconds,
-                            cast_bytes=res.cast_bytes,
-                            usage=usage_snapshot(),
-                            sizes=res.size_obs, shapes=res.shape_obs)
+                           cost_model=self.cost_model, health=self.health,
+                           fused=self._fused_for(query, entry.plan, entry))
+        self._note_fusion(res)
+        if not res.fusion_cold_compiles:   # compile spikes stay out of the
+            self.monitor.record(mkey, entry.plan.key, res.seconds,
+                                cast_bytes=res.cast_bytes,
+                                usage=usage_snapshot(),   # masked mean too
+                                sizes=res.size_obs, shapes=res.shape_obs)
         with self._stats_lock:
             self.serve_seconds += res.seconds
         return Report(res.value, entry.plan.key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit,
                       predicted_s=entry.predicted_s,
-                      per_node_seconds=_pos_seconds(query, res))
+                      per_node_seconds=_pos_seconds(query, res),
+                      fused_segments=res.fused_segments,
+                      fusion_fallbacks=res.fusion_fallbacks)
 
     def _feed_health(self, rep: Report) -> None:
         """Feed one successful serve to the health registry: the executed

@@ -85,6 +85,44 @@ class EngineFaultInjector:
             time.sleep(delay)
 
 
+class FusionFaultInjector:
+    """Fused-segment fault source for plan-level kernel fusion: plugged into
+    ``BigDAWG(fusion_injector=...)``, its ``on_fuse`` hook fires in the
+    executor just before every fused-segment invocation — the seam where a
+    real trace/compile failure would surface — so tests can force the
+    fused->unfused fallback MID-SERVE and assert it is sticky per segment
+    signature (``fired`` records each key the injector hit).
+
+        inj = FusionFaultInjector()
+        bd = BigDAWG(fusion_injector=inj)
+        ...
+        inj.arm(1)          # next fused invocation raises SimulatedFailure
+
+    The raise lands inside the executor's per-segment fallback guard, so the
+    serve completes unfused with identical results and the segment key is
+    marked broken (``fuseplan.mark_broken``) — it never becomes an
+    ``EngineDown``.  Thread-safe; disarmed (``fail_next=0``) by default."""
+
+    def __init__(self, fail_next: int = 0):
+        self._fail_next = fail_next
+        self._lock = threading.Lock()
+        self.fired: List[str] = []        # segment keys hit, in order
+
+    def arm(self, n: int = 1) -> None:
+        """Fail the next ``n`` fused invocations."""
+        with self._lock:
+            self._fail_next = n
+
+    def on_fuse(self, key: str) -> None:
+        with self._lock:
+            if self._fail_next <= 0:
+                return
+            self._fail_next -= 1
+            self.fired.append(key)
+        raise SimulatedFailure(
+            f"injected fused-segment compile failure for {key!r}")
+
+
 class WorkerKillInjector:
     """Process-level fault source for the multi-process pool: plugged into
     ``core.procpool.ProcPool(kill_injector=...)``, its ``on_dispatch`` hook

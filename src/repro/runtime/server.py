@@ -249,7 +249,8 @@ class QueryServer:
 
     def __init__(self, bigdawg, max_pending: Optional[int] = None,
                  latency_target_s: Optional[float] = None,
-                 processes: Optional[int] = None):
+                 processes: Optional[int] = None,
+                 fuse: Optional[bool] = None):
         # ``processes=N`` lifts the middleware into a core.procpool.ProcPool
         # — N worker processes each owning a full middleware stack, sharing
         # plans through the monitor/plan-cache files — so batch admission
@@ -261,6 +262,13 @@ class QueryServer:
             if not isinstance(bigdawg, ProcPool):
                 bigdawg = ProcPool.from_bigdawg(bigdawg, processes)
         self.bd = bigdawg
+        # fuse=True/False overrides the middleware's plan-level kernel
+        # fusion knob for this server; None leaves the middleware's own
+        # setting (BigDAWG(fuse=...)) untouched.  A ProcPool backend has no
+        # fuse attribute — its workers own their middlewares — so the
+        # override only applies to in-process backends that carry the knob
+        if fuse is not None and hasattr(self.bd, "fuse"):
+            self.bd.fuse = fuse
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         if latency_target_s is not None and latency_target_s <= 0:
@@ -271,7 +279,8 @@ class QueryServer:
         self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
                       "replans": 0, "explorations": 0, "shed": 0,
                       "seconds": 0.0, "degraded": 0, "failovers": 0,
-                      "breaker_trips": 0, "latency_ewma": 0.0}
+                      "breaker_trips": 0, "latency_ewma": 0.0,
+                      "fused_serves": 0, "fusion_fallbacks": 0}
         self._pending = 0          # batch-admitted requests still in flight
         # adaptive in-flight bound (AIMD; only consulted when
         # latency_target_s is set) and the serve-latency EWMA driving it
@@ -332,6 +341,11 @@ class QueryServer:
                 self.stats["degraded"] += 1
             self.stats["failovers"] += getattr(rep, "failovers", 0)
             self.stats["breaker_trips"] = getattr(self.bd, "breaker_trips", 0)
+            # lifetime middleware counters, mirrored like breaker_trips (a
+            # ProcPool backend has neither attribute -> stays 0)
+            self.stats["fused_serves"] = getattr(self.bd, "fused_serves", 0)
+            self.stats["fusion_fallbacks"] = getattr(self.bd,
+                                                     "fusion_fallbacks", 0)
             if self.latency_target_s is not None:
                 # AIMD on the in-flight bound, driven by the latency EWMA:
                 # under target -> +1 (up to max_pending when given), over ->
