@@ -23,8 +23,12 @@ from repro.core.executor import (execute_plan, ExecutionResult, topo_levels,
                                  host_pool)
 from repro.core.fuseplan import (FusedPlan, FusedSegment, fuse_plan,
                                  query_fingerprint)
-from repro.core.middleware import (BigDAWG, CachedPlan, Report, masked_sig,
-                                   default_plan_cache_path)
+from repro.core.deltaplan import (UpdatePlan, apply_update, delta_name,
+                                  derive)
+from repro.core.middleware import (BigDAWG, CachedPlan, MaterializedView,
+                                   Report, masked_sig,
+                                   default_plan_cache_path,
+                                   default_view_cache_path)
 from repro.core.qlang import bigdawg
 from repro.core.reqpool import RequestPool
 from repro.core.shardplan import (ScatterGather, ShardInfo, analyze,
@@ -44,8 +48,10 @@ __all__ = [
     "estimate_sizes_shapes", "Monitor", "usage_snapshot", "execute_plan",
     "ExecutionResult", "topo_levels", "host_pool", "FusedPlan",
     "FusedSegment", "fuse_plan", "query_fingerprint",
-    "BigDAWG", "CachedPlan",
-    "Report", "default_plan_cache_path", "masked_sig",
+    "UpdatePlan", "apply_update", "delta_name", "derive",
+    "BigDAWG", "CachedPlan", "MaterializedView",
+    "Report", "default_plan_cache_path", "default_view_cache_path",
+    "masked_sig",
     "BigDAWGError", "EngineDown", "Overloaded", "PlanInfeasible",
     "QueryParseError", "is_engine_failure", "CircuitBreaker", "EngineHealth",
     "RequestPool", "bigdawg", "ScatterGather", "ShardInfo", "analyze",

@@ -109,6 +109,9 @@ class Result:
     # position groups that executed as single compiled segments (plan-level
     # kernel fusion; empty on training serves or with fuse=False)
     fused_segments: Tuple[Tuple[int, ...], ...] = ()
+    # served by patching a materialized view with a delta fragment (or by
+    # the view verbatim) instead of recomputing — streaming/IVM serves
+    incremental: bool = False
 
     def describe(self) -> str:
         return " -> ".join(self.provenance)
@@ -136,7 +139,8 @@ def _result_from_report(query: PolyOp, rep: Report) -> Result:
                   report=rep, status=getattr(rep, "status", "ok"),
                   degraded=getattr(rep, "degraded", False),
                   failovers=getattr(rep, "failovers", 0),
-                  fused_segments=getattr(rep, "fused_segments", ()))
+                  fused_segments=getattr(rep, "fused_segments", ()),
+                  incremental=getattr(rep, "incremental", False))
 
 
 class Session:
@@ -161,15 +165,29 @@ class Session:
         return self.bigdawg.catalog
 
     def register(self, name: str, obj, engine: str,
-                 shards: Optional[int] = None) -> "Session":
+                 shards: Optional[int] = None,
+                 streaming: bool = False) -> "Session":
         """Home a container on an engine under ``name`` (casting it to the
         engine's native data model if needed).  ``shards=N`` additionally
         row-range splits the table for scatter–gather execution (shard
         parts are registered as ``name#i``; on a ``processes=`` session
-        part ``i`` lives only on worker ``i % processes``).  Returns the
-        session, so registrations chain."""
-        self.bigdawg.register(name, obj, engine, shards=shards)
+        part ``i`` lives only on worker ``i % processes``).
+        ``streaming=True`` declares an append-able STREAM-island table:
+        ``session.append(name, rows)`` grows it, and warm serves over it
+        may be patched incrementally from materialized views instead of
+        recomputing (see ``connect(incremental=)``).  Returns the session,
+        so registrations chain."""
+        self.bigdawg.register(name, obj, engine, shards=shards,
+                              streaming=streaming)
         return self
+
+    def append(self, name: str, rows) -> int:
+        """Append rows to a streaming registration (the STREAM island's
+        ingest path) and return the table's new version.  The next serve of
+        any cached query over ``name`` either patches its materialized view
+        with the appended suffix (``Result.incremental`` is then True) or
+        recomputes in full, whichever the cost model prices cheaper."""
+        return self.bigdawg.append(name, rows)
 
     def parse(self, text: str) -> PolyOp:
         """Compile the textual ``BIGDAWG(ISLAND(...))`` / ``|>`` syntax to
@@ -268,7 +286,11 @@ def connect(state_path: Optional[str] = None, *,
     thresholds or plug in a fault injector).  Remaining keyword arguments go
     to ``BigDAWG`` — ``train_plans``, ``explore_budget``, ``calibrate``,
     ``replan_factor``, ``health``, ``fuse`` (plan-level kernel fusion of
-    warm serves, default on; ``fuse=False`` forces node-by-node dispatch)...
+    warm serves, default on; ``fuse=False`` forces node-by-node dispatch),
+    ``incremental`` (streaming IVM: ``True`` — the default — patches
+    materialized views after ``append()`` when the cost model prices the
+    delta path cheaper than recomputing, ``"force"`` skips the gate,
+    ``False`` disables materialization entirely)...
 
     ``processes=N`` backs the session with a ``core.procpool.ProcPool`` —
     N worker processes each running a full middleware stack, sharing plans

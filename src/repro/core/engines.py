@@ -134,6 +134,15 @@ def _da_add(attrs, a, b):
     return DenseTensor(a.data + b.data)
 
 
+def _da_concat(attrs, a: DenseTensor, b: DenseTensor):
+    """Row concatenation (leading axis).  ``valid_count`` adds — exact for
+    unpadded operands, and for padded ones the per-operand counts are still
+    the only row-attributable accounting available."""
+    return DenseTensor(jnp.concatenate([a.data, b.data], axis=0),
+                       valid_count=a.valid_count + b.valid_count,
+                       fill=a.fill)
+
+
 def _da_scale(attrs, a):
     return DenseTensor(a.data * attrs["factor"])
 
@@ -240,9 +249,16 @@ def _col_join(attrs, a: ColumnarTable, b: ColumnarTable):
 def _ranges_from_counts(counts):
     total = int(counts.sum())
     out = np.ones(total, np.int64)
+    if total == 0:
+        return out
     starts = np.cumsum(counts)[:-1]
     out[0] = 0
-    out[starts] -= counts[:-1]
+    # zero counts make `starts` repeat an index; plain fancy-index -= keeps
+    # only the last repeat's update, so unmatched rows corrupt every range
+    # after them — subtract.at accumulates all of them.  Trailing zero
+    # counts land a start AT ``total``: past every live range, droppable
+    live = starts < total
+    np.subtract.at(out, starts[live], counts[:-1][live])
     return np.cumsum(out)
 
 
@@ -432,6 +448,7 @@ ENGINES: Dict[str, Engine] = {
         "select": _da_select, "haar": _da_haar, "bin_hist": _da_bin_hist,
         "tfidf": _da_tfidf, "knn": _da_knn, "add": _da_add,
         "scale": _da_scale, "transpose": _da_transpose,
+        "concat": _da_concat,
     }),
     "columnar": Engine("columnar", "columnar", {
         "count": _col_count, "distinct": _col_distinct, "select": _col_select,

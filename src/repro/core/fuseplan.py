@@ -11,9 +11,10 @@ leaves on the table.  This module closes it for the dense/array family:
   segmentation  ``fuse_plan(query, plan)`` walks the post-order under the
       plan's engine assignment and groups maximal same-engine chains of
       *fusable* ops — ``matmul``, ``add``, ``scale``, ``transpose``,
-      ``select``, ``haar``, ``tfidf``, ``knn`` on the ``dense_array``
-      engine, whose implementations are pure jnp traces over
-      ``DenseTensor.data`` — into ``FusedSegment``s.  A segment never
+      ``select``, ``haar``, ``tfidf``, ``knn``, ``count`` on the
+      ``dense_array`` engine, whose implementations are pure jnp traces
+      over ``DenseTensor.data`` (``count`` over its threaded valid-count —
+      see below) — into ``FusedSegment``s.  A segment never
       crosses an engine boundary (members share one assignment) and never
       absorbs an island-boundary (``scope``) node: scope is not fusable, so
       every island seam breaks the chain and its cast stays an explicit,
@@ -46,12 +47,14 @@ leaves on the table.  This module closes it for the dense/array family:
 
 Equivalence notes (what the ``tests/test_fusion.py`` property battery
 pins): member semantics mirror ``engines._da_*`` exactly — intermediates
-only ever flow ``.data`` (every dense op consumes ``.data`` alone), so
-composing data-level functions is identical to chaining containers; a
-``select`` at the segment root additionally returns its mask sum so the
-output's ``valid_count`` matches the eager engine's (interior selects need
-no count: dense consumers read ``.data``, and engine-produced tensors
-carry the default fill, which the lowering also uses).  Queries with
+flow ``.data`` plus a threaded valid-count value (``count`` is the one
+dense op that consumes metadata instead of data: external counts enter
+the trace as scalars, a ``select`` narrows the threaded count with its
+mask sum, ``count`` reads it), so composing data-level functions is
+identical to chaining containers; a ``select`` at the segment root
+additionally returns its mask sum so the output's ``valid_count`` matches
+the eager engine's (engine-produced tensors carry the default fill, which
+the lowering also uses for member-to-member edges).  Queries with
 shared subtrees (one uid at several post-order positions) are not fused —
 segmentation is position-keyed so a ``FusedPlan`` survives query rebuilds,
 and sharing would break the one-position-per-uid mapping.
@@ -72,11 +75,14 @@ from repro.core.planner import Plan, _work_elems, estimate_sizes_shapes
 from repro.core.tables import DenseTensor
 
 # the dense/array fusable family: every op here is a pure jnp trace over
-# DenseTensor.data in engines.py (count/distinct/bin_hist are excluded —
-# count consumes valid_count metadata, and segments may not change it
-# mid-chain; bin_hist is fusable in principle and a natural follow-on)
+# DenseTensor.data in engines.py.  ``count`` consumes valid_count METADATA
+# rather than data, so the lowering threads a per-member valid-count value
+# through the trace (external counts enter as traced scalars, a select's
+# mask sum updates it, count reads it) — see ``_build_callable``.
+# (distinct/bin_hist are still excluded; bin_hist is fusable in principle
+# and a natural follow-on)
 FUSABLE_OPS = frozenset({"matmul", "add", "scale", "transpose", "select",
-                         "haar", "tfidf", "knn"})
+                         "haar", "tfidf", "knn", "count"})
 
 # engines whose fusable ops trace (dense/array family first — triple-format
 # engines are numpy-eager in places and not jit-safe)
@@ -312,65 +318,87 @@ def _segment_weights(query, catalog, cost_model, nodes, mine,
 # lowering + compilation
 # ---------------------------------------------------------------------------
 
-def _lower(op: str, attrs: Dict[str, Any], args, fills, want_aux: bool):
+def _lower(op: str, attrs: Dict[str, Any], args, fills, vcs,
+           want_aux: bool):
     """One member op as a pure function of jnp arrays — the trace-level
     mirror of ``engines._da_*`` (same math, minus the container wrappers).
     ``fills`` aligns with ``args``: the fill value each argument's
-    container carries (select writes it into masked-out slots).  Returns
-    (out, aux): aux is the select mask sum when ``want_aux`` (root selects
-    must reproduce the eager engine's ``valid_count``)."""
+    container carries (select writes it into masked-out slots).  ``vcs``
+    also aligns with ``args``: each argument's valid-count as a traced
+    scalar, or ``None`` meaning *full* (every element valid — resolve with
+    the static ``args[i].size``).  Returns ``(out, vc_out, aux)``:
+    ``vc_out`` is the member's output valid-count under the same
+    convention (only select narrows it; count's 0-d output is full), and
+    ``aux`` is the select mask sum when ``want_aux`` (root selects must
+    reproduce the eager engine's ``valid_count`` on the container)."""
     if op == "matmul":
-        return jnp.dot(args[0], args[1]), None
+        return jnp.dot(args[0], args[1]), None, None
     if op == "add":
-        return args[0] + args[1], None
+        return args[0] + args[1], None, None
     if op == "scale":
-        return args[0] * attrs["factor"], None
+        return args[0] * attrs["factor"], None, None
     if op == "transpose":
-        return args[0].T, None
+        return args[0].T, None, None
     if op == "select":
         lo = attrs.get("lo", -np.inf)
         hi = attrs.get("hi", np.inf)
         m = (args[0] >= lo) & (args[0] <= hi)
         out = jnp.where(m, args[0], fills[0])
-        return out, (jnp.sum(m) if want_aux else None)
+        vc = jnp.sum(m)
+        return out, vc, (vc if want_aux else None)
+    if op == "count":
+        # the eager op is O(1) metadata lookup; here the metadata is the
+        # threaded valid-count value (traced for a select upstream or a
+        # padded external, static size otherwise)
+        vc = vcs[0] if vcs[0] is not None else args[0].size
+        return jnp.asarray(vc, jnp.int32), None, None
     if op == "haar":
         from repro.kernels import ops as kops
-        return kops.haar(args[0], attrs["levels"]), None
+        return kops.haar(args[0], attrs["levels"]), None, None
     if op == "tfidf":
         from repro.core.engines import tfidf_dense
-        return tfidf_dense(args[0]), None
+        return tfidf_dense(args[0]), None, None
     if op == "knn":
         from repro.kernels import ops as kops
         idx, _score = kops.knn(args[0], jnp.atleast_2d(args[1]),
                                attrs["k"])
-        return idx, None
+        return idx, None, None
     raise ValueError(f"op {op!r} is not fusable")
 
 
 def _build_callable(seg: FusedSegment) -> Callable:
-    """The segment as one function ``fn(ext_arrays, ext_fills) ->
+    """The segment as one function ``fn(ext_arrays, ext_fills, ext_vcs) ->
     (root_array, root_aux)``, jitted whole.  Intermediates never leave the
     trace; engine-produced containers carry the default fill (0.0), so
     member-to-member fills are the constant 0.0 while external inputs pass
     their container's real fill in as a traced scalar (no retrace when a
-    catalog object's fill differs between serves)."""
+    catalog object's fill differs between serves).  ``ext_vcs`` are the
+    external containers' valid-counts, likewise traced scalars: the loop
+    threads a per-member valid-count alongside the data (select narrows
+    it, count reads it) so metadata-consuming members fuse without
+    retracing when only the count changes."""
     ops, attrs_list, specs = seg.ops, seg.attrs_list, seg.input_specs
     last = len(ops) - 1
 
-    def fn(ext, fills):
+    def fn(ext, fills, vcs):
         mem: List[Any] = []
+        mem_vc: List[Any] = []
         aux = None
         for j, (op, attrs, spec) in enumerate(zip(ops, attrs_list, specs)):
-            args, afills = [], []
+            args, afills, avcs = [], [], []
             for kind, i in spec:
                 if kind == "ext":
                     args.append(ext[i])
                     afills.append(fills[i])
+                    avcs.append(vcs[i])
                 else:
                     args.append(mem[i])
                     afills.append(0.0)
-            out, a = _lower(op, dict(attrs), args, afills, want_aux=j == last)
+                    avcs.append(mem_vc[i])
+            out, vc_out, a = _lower(op, dict(attrs), args, afills, avcs,
+                                    want_aux=j == last)
             mem.append(out)
+            mem_vc.append(vc_out)
             if j == last:
                 aux = a
         return mem[-1], aux
@@ -400,10 +428,14 @@ def run_fused_segment(seg: FusedSegment,
     fn = compiled_segment(seg)
     ext = tuple(jnp.asarray(o.data) for o in ext_objs)
     fills = tuple(float(getattr(o, "fill", 0.0)) for o in ext_objs)
+    # valid-counts ride along as traced scalars (DenseTensor resolves the
+    # "full" sentinel at construction, so this is always a real count)
+    vcs = tuple(int(getattr(o, "valid_count", o.data.size))
+                for o in ext_objs)
     stamp = (seg.key, tuple((a.shape, str(a.dtype)) for a in ext))
     with _REGISTRY_LOCK:
         cold = stamp not in _WARM
-    out, aux = fn(ext, fills)
+    out, aux = fn(ext, fills, vcs)
     with _REGISTRY_LOCK:
         _WARM.add(stamp)
     if aux is not None:

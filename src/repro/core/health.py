@@ -284,9 +284,43 @@ class EngineHealth:
             return sum(br.trips for br in self.breakers.values())
 
     def snapshot(self) -> Dict[str, Dict[str, object]]:
-        """Current breaker states for stats/debugging."""
+        """Current breaker states for stats/debugging — also the persistence
+        payload ``restore`` consumes (the middleware writes it beside the
+        monitor DB on ``persist()``)."""
         now = self.time_fn()
         with self._lock:
             return {name: {"state": br.poll(now), "trips": br.trips,
                            "consecutive_failures": br.consecutive_failures}
                     for name, br in self.breakers.items()}
+
+    def restore(self, channels: Dict[str, Dict[str, object]]):
+        """Adopt a persisted ``snapshot()``: a restarted process must not
+        re-burn a full failure budget rediscovering an outage it already
+        paid to learn about.  CLOSED channels restore verbatim.  OPEN and
+        HALF_OPEN both restore as OPEN with the cooldown restarted from NOW
+        — the wall-clock gap since the snapshot is unknowable under an
+        injectable monotonic clock, and an engine that recovered meanwhile
+        re-earns trust through one half-open probe after the cooldown (the
+        cheap direction to be wrong in).  Probe grants never persist: the
+        granted request died with the old process.  Unknown channels are
+        created on demand (procpool worker channels); malformed entries are
+        skipped."""
+        now = self.time_fn()
+        for name, blob in channels.items():
+            if not isinstance(blob, dict):
+                continue
+            self.ensure_channel(str(name))
+            with self._lock:
+                br = self.breakers[str(name)]
+                state = blob.get("state")
+                if state not in (CLOSED, OPEN, HALF_OPEN):
+                    continue
+                br.state = OPEN if state in (OPEN, HALF_OPEN) else CLOSED
+                br.opened_at = now if br.state == OPEN else 0.0
+                br.probe_inflight = False
+                try:
+                    br.trips = max(0, int(blob.get("trips", 0)))
+                    br.consecutive_failures = max(0, int(
+                        blob.get("consecutive_failures", 0)))
+                except (TypeError, ValueError):
+                    br.trips, br.consecutive_failures = br.trips, 0

@@ -86,6 +86,7 @@ array = Island("array", {
     "add": ["dense_array"],
     "scale": ["dense_array"],
     "transpose": ["dense_array"],
+    "concat": ["dense_array"],
 })
 
 relational = Island("relational", {

@@ -63,10 +63,12 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+from typing import Any, Dict, FrozenSet, List, Optional, Set, Tuple, Union
 
+from repro.core import deltaplan, tables
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
 from repro.core.errors import EngineDown, PlanInfeasible
@@ -77,7 +79,7 @@ from repro.core.ioutil import (atomic_json_dump, file_version, load_json,
 from repro.core.monitor import Monitor, usage_snapshot
 from repro.core.ops import PolyOp
 from repro.core.planner import (Plan, dp_plans, estimate_sizes_shapes,
-                                plan_cost)
+                                plan_cost, price_incremental)
 from repro.core.signature import signature
 
 # separator between a signature and the engine mask it was served under:
@@ -118,11 +120,63 @@ def default_plan_cache_path(monitor_path: Optional[str]) -> Optional[str]:
     return root + ".plans.json"
 
 
+def default_view_cache_path(monitor_path: Optional[str]) -> Optional[str]:
+    """Materialized-view file that rides alongside a monitor DB path."""
+    if not monitor_path:
+        return None
+    root, _ = os.path.splitext(monitor_path)
+    return root + ".views.json"
+
+
+def default_health_path(monitor_path: Optional[str]) -> Optional[str]:
+    """Breaker-state file that rides alongside a monitor DB path."""
+    if not monitor_path:
+        return None
+    root, _ = os.path.splitext(monitor_path)
+    return root + ".health.json"
+
+
+# views above this physical size are served and patched in memory but not
+# persisted: the JSON codec is for warm-start of SMALL hot results, not a
+# second storage engine (a restarted process simply re-materializes)
+VIEW_PERSIST_MAX_BYTES = 4 << 20
+
+
 @dataclass
 class CatalogEntry:
     name: str
     obj: Any                 # a tables.* container
     engine: str              # home engine
+    # STREAM island append semantics: a streaming registration may grow by
+    # appended rows (BigDAWG.append), its signature renders shape-free, and
+    # warm serves may be patched incrementally from a materialized view
+    streaming: bool = False
+    # registration generation (bumped when register() replaces the name) —
+    # a view stamped under another epoch must not be delta-patched, the
+    # content may be unrelated even at identical row counts
+    epoch: int = 0
+    # append generation (bumped per append) — cheap change detection
+    version: int = 0
+
+
+@dataclass
+class MaterializedView:
+    """A signature's materialized result: the delivered value plus, per
+    referenced table, the (epoch, version, rows, kind) stamp it was computed
+    at.  A warm serve whose only drift from the stamps is appended rows on
+    streaming tables may run the derived ``deltaplan.UpdatePlan`` against
+    the pending suffixes and patch ``value`` in place of recomputing."""
+    value: Any
+    refs: Dict[str, Dict[str, Any]]
+    # frozenset(changed names) -> UpdatePlan | None (None = proven
+    # non-incremental for that change set; derivation runs once per set)
+    update_plans: Dict[FrozenSet[str], Optional[deltaplan.UpdatePlan]] = \
+        field(default_factory=dict)
+    # loaded from a persisted view file: stamps carry another process's
+    # epochs, so the first freshness check trusts (kind, rows) identity —
+    # the procpool deployment contract, where every worker registers the
+    # same tables — and then adopts this process's epochs
+    restored: bool = False
 
 
 @dataclass
@@ -149,6 +203,9 @@ class CachedPlan:
     # compiled callables live in fuseplan's process-wide cache, and a
     # restarted process re-runs the (cheap) segmentation pass
     fused: Any = None
+    # the signature's materialized view (streaming/IVM serves) — validity is
+    # plan-independent (query + data only), so entry replacements carry it
+    view: Optional[MaterializedView] = None
 
 
 @dataclass
@@ -189,6 +246,9 @@ class Report:
     # fused segments that failed to trace/compile/run this serve and were
     # re-executed node-by-node (sticky: later serves skip the fused attempt)
     fusion_fallbacks: int = 0
+    # served by patching the materialized view with a delta fragment (or by
+    # the view verbatim when nothing changed) instead of a full recompute
+    incremental: bool = False
 
 
 def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
@@ -215,7 +275,8 @@ class BigDAWG:
                  replan_factor: float = REPLAN_FACTOR,
                  explore_budget: float = EXPLORE_BUDGET,
                  health: Optional[EngineHealth] = None,
-                 fuse: bool = True, fusion_injector: Any = None):
+                 fuse: bool = True, fusion_injector: Any = None,
+                 incremental: Union[bool, str] = True):
         self.catalog: Dict[str, CatalogEntry] = {}
         # name -> shardplan.ShardInfo for tables registered with shards=N
         # (the shard parts live in the catalog as "name#i")
@@ -256,6 +317,18 @@ class BigDAWG:
         self.fused_serves = 0        # production serves with >=1 fused segment
         self.fusion_segments = 0     # fused segments executed, lifetime
         self.fusion_fallbacks = 0    # sticky fused->unfused fallbacks, lifetime
+        # incremental view maintenance (core.deltaplan): warm serves whose
+        # only drift is appended rows on streaming registrations run the
+        # derived update fragment and patch the materialized view.  True
+        # gates each serve on the cost model (incremental-vs-full); the
+        # string "force" skips the gate (tests/benchmarks pinning the delta
+        # path); False disables materialization and patching entirely.
+        # Inert without streaming registrations, safe to flip at runtime.
+        self.incremental = incremental
+        self.ivm_serves = 0          # serves satisfied from the view
+        self.ivm_fallbacks = 0       # eligible views that recomputed anyway
+        # registration-epoch counter (CatalogEntry.epoch source)
+        self._catalog_epoch = 0
         # signature -> CachedPlan: production requests skip re-enumeration
         # and plan-key parsing entirely; persisted beside the monitor DB so
         # restarted processes serve warm
@@ -281,6 +354,15 @@ class BigDAWG:
         self._plan_cache_version = None
         if self.plan_cache_path and os.path.exists(self.plan_cache_path):
             self.load_plan_cache(self.plan_cache_path)
+        # materialized views ride beside the plan cache; breaker state
+        # beside the monitor DB (satellite files of one state root)
+        self.view_cache_path = default_view_cache_path(self.monitor.path)
+        if self.view_cache_path and os.path.exists(self.view_cache_path):
+            self.load_views(self.view_cache_path)
+        self.health_path = default_health_path(self.monitor.path)
+        if self.health is not None and self.health_path \
+                and os.path.exists(self.health_path):
+            self._restore_health(self.health_path)
 
     def _sig_lock(self, sig: str) -> threading.RLock:
         with self._sig_locks_guard:
@@ -288,16 +370,34 @@ class BigDAWG:
 
     # -- catalog -----------------------------------------------------------
     def register(self, name: str, obj, engine: str,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None, streaming: bool = False):
         """Home ``obj`` on ``engine`` under ``name``.  With ``shards=N`` the
         object is ALSO split into N contiguous row-range parts registered as
         ``name#0 .. name#N-1`` (each homed/cast like any registration), and
         the shard registry records the decomposition — what
-        ``shardplan.analyze`` consults to offer scatter–gather execution."""
+        ``shardplan.analyze`` consults to offer scatter–gather execution.
+
+        ``streaming=True`` declares an append-able STREAM-island table:
+        ``append(name, rows)`` grows it in place, its signature renders
+        shape-free (appends keep plan-cache/monitor history), and warm
+        serves over it may be patched incrementally from materialized
+        views.  Streaming registrations must be homed on an engine whose
+        native data model matches the object (a cast home would explode
+        rows, breaking append row-identity) and cannot be sharded."""
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine}")
+        if streaming:
+            if shards is not None:
+                raise ValueError("streaming registrations cannot be sharded")
+            if ENGINES[engine].kind != obj.kind:
+                raise ValueError(
+                    f"streaming registration {name!r} must be homed "
+                    f"natively: object kind {obj.kind!r} vs engine "
+                    f"{engine!r} ({ENGINES[engine].kind!r}) — casts are not "
+                    f"append-preserving")
+            tables.leading_rows(obj)     # raises for 0-d: nothing to append
         if shards is not None:
-            from repro.core import shardplan, tables
+            from repro.core import shardplan
             if shards < 1:
                 raise ValueError(f"shards must be >= 1, got {shards}")
             parts = tables.shard_rows(obj, shards)   # split BEFORE the home
@@ -308,13 +408,47 @@ class BigDAWG:
             self.sharded[name] = info
         if ENGINES[engine].kind != obj.kind:
             from repro.core import cast as castmod
-            from repro.core.tables import device_ready
             # casts leave triple formats numpy-eager (right for short-lived
             # intermediates); a catalog object is long-lived and re-consumed
             # by device ops every query, so home it on the device once here
-            obj = device_ready(
+            obj = tables.device_ready(
                 castmod.cast(obj, ENGINES[engine].kind, self.cost_model))
-        self.catalog[name] = CatalogEntry(name, obj, engine)
+        elif streaming:
+            # streaming tables stay HOST-resident: every append reshapes
+            # them, so device residency never amortizes — and host storage
+            # makes the hot IVM path compile-free (numpy append, zero-copy
+            # suffix slice) where device arrays would pay one XLA
+            # recompilation per new shape, per serve
+            obj = tables.host_copy(obj)
+        self._catalog_epoch += 1
+        self.catalog[name] = CatalogEntry(name, obj, engine,
+                                          streaming=streaming,
+                                          epoch=self._catalog_epoch)
+
+    def append(self, name: str, rows) -> int:
+        """Append ``rows`` (a container of the table's kind) to streaming
+        registration ``name`` — the STREAM island's ingest path.  The table
+        grows in place along its leading dimension and its version bumps;
+        the signature is shape-free for streaming tables, so warm plans and
+        materialized views stay valid and the next serve either patches the
+        view with the pending suffix (``deltaplan``) or recomputes, per the
+        cost model.  Returns the new version number."""
+        entry = self.catalog.get(name)
+        if entry is None:
+            raise KeyError(f"no registration named {name!r}")
+        if not entry.streaming:
+            raise ValueError(f"{name!r} is not a streaming registration; "
+                             f"register(..., streaming=True) enables "
+                             f"append()")
+        if getattr(rows, "kind", None) != entry.obj.kind:
+            raise TypeError(f"append to {name!r} needs a "
+                            f"{entry.obj.kind!r} container, got "
+                            f"{type(rows).__name__}")
+        rows = tables.host_copy(rows)    # host-resident, like the base
+        with self._cache_lock:
+            entry.obj = tables.append_rows(entry.obj, rows)
+            entry.version += 1
+            return entry.version
 
     # -- plan-cache persistence ---------------------------------------------
     def save_plan_cache(self, path: Optional[str] = None,
@@ -348,7 +482,11 @@ class BigDAWG:
                     cur = None
                 if isinstance(cur, dict):
                     for sig, ent in cur.get("entries", {}).items():
-                        if sig not in self.plan_cache:
+                        # a sibling that crashed mid-outage (or a hand edit)
+                        # can leave masked entries in the file; adopting one
+                        # would resurrect transient degraded state forever —
+                        # masked signatures never survive a merge
+                        if sig not in self.plan_cache and MASK_SEP not in sig:
                             blob["entries"][sig] = ent
             atomic_json_dump(path, blob)
             self._plan_cache_version = file_version(path)
@@ -371,7 +509,7 @@ class BigDAWG:
             adopted = False
             for sig, ent in (blob.get("entries", {})
                              if isinstance(blob, dict) else {}).items():
-                if sig in self.plan_cache:
+                if sig in self.plan_cache or MASK_SEP in sig:
                     continue
                 try:
                     alts = tuple(_plan_from_key(k)
@@ -407,6 +545,11 @@ class BigDAWG:
         self._plan_cache_version = file_version(path)
         entries = blob.get("entries", {}) if isinstance(blob, dict) else {}
         for sig, ent in entries.items():
+            if MASK_SEP in sig:
+                # a crashed sibling's degraded entry — masked plans are tied
+                # to that process's breaker state and must never warm-start
+                # a healthy one
+                continue
             try:
                 if not isinstance(ent, dict):
                     raise ValueError(f"entry for {sig!r} is not an object")
@@ -426,6 +569,101 @@ class BigDAWG:
             except (ValueError, KeyError, TypeError) as exc:
                 warnings.warn(f"plan cache {path}: skipping bad entry "
                               f"{sig!r}: {exc}")
+
+    # -- materialized-view persistence ---------------------------------------
+    def save_views(self, path: Optional[str] = None,
+                   merge: Optional[bool] = None):
+        """Persist materialized views atomically beside the plan cache, so a
+        restarted production process patches instead of re-materializing.
+        Views above ``VIEW_PERSIST_MAX_BYTES`` stay memory-only (the JSON
+        codec warm-starts SMALL hot results, it is not a storage engine).
+        Merge-on-save follows ``save_plan_cache``: signatures this process
+        has no local view for are carried through, masked signatures never
+        persist, same-signature resolves local-wins."""
+        path = path or self.view_cache_path
+        if not path:
+            return
+        if merge is None:
+            merge = self.monitor.shared
+        with self._cache_lock:
+            entries = {}
+            for sig, e in self.plan_cache.items():
+                v = e.view
+                if v is None or MASK_SEP in sig:
+                    continue
+                if getattr(v.value, "nbytes", VIEW_PERSIST_MAX_BYTES + 1) \
+                        > VIEW_PERSIST_MAX_BYTES:
+                    continue
+                blob_v = tables.container_to_jsonable(
+                    tables.host_copy(v.value))
+                if blob_v is None:        # unknown container: memory-only
+                    continue
+                entries[sig] = {"value": blob_v, "refs": v.refs}
+            blob = {"format": 1, "entries": entries}
+            if merge:
+                try:
+                    cur = load_json(path)
+                except (OSError, ValueError):
+                    cur = None
+                if isinstance(cur, dict):
+                    for sig, ent in cur.get("entries", {}).items():
+                        if sig not in entries and MASK_SEP not in sig:
+                            blob["entries"][sig] = ent
+            atomic_json_dump(path, blob)
+
+    def load_views(self, path: str):
+        """Load persisted materialized views, attaching each (``restored``,
+        so the first freshness check trusts (kind, rows) identity and adopts
+        this process's epochs) to its signature's plan-cache entry.  A view
+        whose signature has no cache entry is dropped — the view rides the
+        entry, and without a plan the serve retrains and re-materializes
+        anyway.  Bad entries are skipped with a warning, like the plan
+        cache."""
+        try:
+            blob = load_json(path)
+        except (OSError, ValueError) as exc:
+            warnings.warn(f"view cache {path}: unreadable ({exc}); "
+                          f"starting cold")
+            return
+        entries = blob.get("entries", {}) if isinstance(blob, dict) else {}
+        for sig, ent in entries.items():
+            try:
+                value = tables.container_from_jsonable(ent["value"])
+                refs = {str(n): dict(st) for n, st in ent["refs"].items()}
+                with self._cache_lock:
+                    entry = self.plan_cache.get(sig)
+                    if entry is not None:
+                        entry.view = MaterializedView(value, refs,
+                                                      restored=True)
+            except (ValueError, KeyError, TypeError) as exc:
+                warnings.warn(f"view cache {path}: skipping bad entry "
+                              f"{sig!r}: {exc}")
+
+    # -- breaker-state persistence -------------------------------------------
+    def _save_health(self, path: Optional[str] = None):
+        """Persist the circuit-breaker registry's snapshot beside the
+        monitor DB, so a restarted process does not re-burn an EngineDown
+        failure budget rediscovering an outage it already knew about."""
+        path = path or self.health_path
+        if self.health is None or not path:
+            return
+        atomic_json_dump(path, {"format": 1,
+                                "channels": self.health.snapshot()})
+
+    def _restore_health(self, path: str):
+        """Restore persisted breaker state (warn-and-continue on damage:
+        health state is an optimization, never worth failing startup over)."""
+        try:
+            blob = load_json(path)
+        except (OSError, ValueError) as exc:
+            warnings.warn(f"health state {path}: unreadable ({exc}); "
+                          f"starting closed")
+            return
+        channels = blob.get("channels", {}) if isinstance(blob, dict) else {}
+        try:
+            self.health.restore(channels)
+        except (ValueError, KeyError, TypeError) as exc:
+            warnings.warn(f"health state {path}: not restored ({exc})")
 
     # -- phases --------------------------------------------------------------
     def _predict(self, query: PolyOp, plan: Plan, sig: str) -> float:
@@ -484,6 +722,7 @@ class BigDAWG:
         self.cost_model.save()
         self.monitor.save()
         self.save_plan_cache()
+        self._maybe_materialize(query, sig, best.value)
         return Report(best.value, best.plan.key, "training", best.seconds,
                       best.cast_bytes, sig, plans_tried=len(ranked),
                       predicted_s=predicted,
@@ -533,7 +772,8 @@ class BigDAWG:
             # prediction so a stable runtime stops re-triggering
             with self._cache_lock:
                 self.plan_cache[sig] = CachedPlan(plan, measured,
-                                                  alternates=entry.alternates)
+                                                  alternates=entry.alternates,
+                                                  view=entry.view)
         else:
             # prefer the plan's measured history (training trials measured
             # every candidate) over the raw model cost as the new baseline —
@@ -549,7 +789,8 @@ class BigDAWG:
                     # be reversed
                     alternates=tuple(
                         p for p in (entry.plan,) + entry.alternates
-                        if p.key != plan.key)[:self.MAX_ALTERNATES])
+                        if p.key != plan.key)[:self.MAX_ALTERNATES],
+                    view=entry.view)
         with self._stats_lock:
             self.replans += 1
         self.save_plan_cache()
@@ -589,6 +830,178 @@ class BigDAWG:
                 self.fused_serves += 1
                 self.fusion_segments += len(res.fused_segments)
             self.fusion_fallbacks += res.fusion_fallbacks
+
+    # -- incremental view maintenance ----------------------------------------
+    def _ref_stamps(self, query: PolyOp) -> Optional[Dict[str, Dict]]:
+        """Current (epoch, version, rows, kind, streaming) stamp for every
+        table the query references — what a materialized view records at
+        materialization time and what the freshness check compares against.
+        None when a ref is unregistered (the serve will fail anyway)."""
+        stamps: Dict[str, Dict] = {}
+        for r in query.refs():
+            e = self.catalog.get(r.name)
+            if e is None:
+                return None
+            try:
+                rows = tables.leading_rows(e.obj)
+            except TypeError:        # 0-d scalar: no append axis to track
+                rows = None
+            stamps[r.name] = {"epoch": e.epoch, "version": e.version,
+                              "rows": rows, "kind": e.obj.kind,
+                              "streaming": bool(e.streaming)}
+        return stamps
+
+    def _maybe_materialize(self, query: PolyOp, sig: str, value) -> None:
+        """Attach a full serve's result to the signature's cache entry as a
+        materialized view (only when incremental serving is on and the query
+        touches at least one streaming table — views over static tables
+        would never be patched, only invalidated)."""
+        if not self.incremental or MASK_SEP in sig:
+            return
+        stamps = self._ref_stamps(query)
+        if not stamps or not any(st["streaming"] for st in stamps.values()):
+            return
+        with self._cache_lock:
+            entry = self.plan_cache.get(sig)
+            if entry is not None:
+                # host-resident like the streaming tables it tracks: the
+                # patch concat then runs in numpy (compile-free) instead of
+                # re-jitting for every grown view shape
+                entry.view = MaterializedView(tables.host_copy(value),
+                                              stamps)
+
+    def _try_incremental(self, query: PolyOp, sig: str,
+                         entry: CachedPlan) -> Optional[Report]:
+        """Serve from the materialized view when the only drift since
+        materialization is appended rows on streaming tables: derive (once
+        per change set) the ``deltaplan`` update fragment, price it against
+        the full recompute, execute it over the pending suffixes through the
+        ordinary concurrent executor path, and patch the view.  Returns None
+        — full recompute, never wrong — when the view is stale in any other
+        way (re-registration, shrinkage, kind change), the lineage is not
+        provably incremental, the cost model prefers recomputing, or the
+        delta execution fails.  Deliberately feeds NEITHER the monitor nor
+        the health stragglers: a delta serve's near-zero per-node seconds
+        would corrupt the full-serve statistics both consume."""
+        view = entry.view
+        if view is None:
+            return None
+        t0 = time.perf_counter()
+        stamps = self._ref_stamps(query)
+        if stamps is None or set(stamps) != set(view.refs):
+            entry.view = None
+            return None
+        changed: Dict[str, int] = {}
+        for name, st in stamps.items():
+            old = view.refs[name]
+            if old.get("kind") != st["kind"] or \
+                    (not view.restored and old.get("epoch") != st["epoch"]):
+                entry.view = None     # re-registered / re-homed: the content
+                return None           # may be unrelated at equal row counts
+            o_rows, n_rows = old.get("rows"), st["rows"]
+            if st["streaming"] and o_rows is not None \
+                    and n_rows is not None and n_rows > o_rows:
+                changed[name] = int(o_rows)
+            elif o_rows != n_rows:
+                # shrunk, or a non-streaming table grew: not append history
+                entry.view = None
+                return None
+        if view.restored:
+            # persisted by another process (or a previous life): the stamps
+            # carry foreign epochs, so the check above trusted (kind, rows)
+            # identity — the procpool deployment contract, every worker
+            # registers the same tables.  Adopt this process's epochs so
+            # later re-registrations invalidate normally
+            view.restored = False
+            for name, st in stamps.items():
+                view.refs[name]["epoch"] = st["epoch"]
+                view.refs[name]["version"] = st["version"]
+        if not changed:
+            # nothing drifted at all: the view IS the answer
+            with self._stats_lock:
+                self.ivm_serves += 1
+            return Report(view.value, entry.plan.key, "production",
+                          time.perf_counter() - t0, 0.0, sig, cache_hit=True,
+                          predicted_s=entry.predicted_s, incremental=True)
+        if len(changed) > 1:
+            # multi-table appends must align (the only derivable multi-hot
+            # ops, add-family, consume their operands row-for-row): equal
+            # old sizes and equal delta sizes, else recompute
+            if len({changed[n] for n in changed}) > 1 or \
+                    len({stamps[n]["rows"] - changed[n]
+                         for n in changed}) > 1:
+                with self._stats_lock:
+                    self.ivm_fallbacks += 1
+                return None
+        key = frozenset(changed)
+        if key not in view.update_plans:
+            view.update_plans[key] = deltaplan.derive(
+                query, set(key),
+                kinds={n: st["kind"] for n, st in stamps.items()})
+        up = view.update_plans[key]
+        if up is None:               # proven non-incremental for this set
+            with self._stats_lock:
+                self.ivm_fallbacks += 1
+            return None
+        # bind each pending suffix under its delta name in a temporary
+        # catalog overlay — the fragment executes through the ordinary
+        # planner/executor path against it
+        tmp = dict(self.catalog)
+        for name, old_rows in changed.items():
+            src = self.catalog[name]
+            dn = deltaplan.delta_name(name)
+            tmp[dn] = CatalogEntry(dn, tables.suffix_rows(src.obj, old_rows),
+                                   src.engine)
+        # restrict the fragment's planning to the incumbent plan's engine
+        # set (plus the root island's natives, for the delivery scope): the
+        # delta operands are tiny, and an unconstrained DP flips to
+        # cast-heavy placements the full serve never validated
+        from repro.core.islands import scope_candidates
+        allowed = {eng for _, eng in entry.plan.assignment}
+        allowed.update(scope_candidates(up.fragment.island))
+        mask = frozenset(e for e in ENGINES if e not in allowed)
+        try:
+            price, fplan = price_incremental(
+                up.fragment, tmp, cost_model=self.cost_model,
+                view_bytes=float(getattr(view.value, "nbytes", 0.0)),
+                full_s=entry.predicted_s or
+                self._predict(query, entry.plan, sig), mask=mask)
+        except Exception as exc:
+            warnings.warn(f"incremental pricing for {sig!r} failed "
+                          f"({exc}); recomputing")
+            with self._stats_lock:
+                self.ivm_fallbacks += 1
+            return None
+        if self.incremental != "force" and not price.worthwhile:
+            # the delta dominates (or the patch would stream more bytes than
+            # recomputing costs): the gate picks the full path
+            with self._stats_lock:
+                self.ivm_fallbacks += 1
+            return None
+        try:
+            res = execute_plan(up.fragment, fplan, tmp, concurrent=True,
+                               cost_model=self.cost_model,
+                               health=self.health)
+            merged = deltaplan.apply_update(up, view.value, res.value)
+        except EngineDown:
+            raise    # the failover driver owns breaker-feeding and retries
+        except Exception as exc:
+            warnings.warn(f"incremental update for {sig!r} failed ({exc}); "
+                          f"dropping the view and recomputing")
+            entry.view = None
+            with self._stats_lock:
+                self.ivm_fallbacks += 1
+            return None
+        with self._cache_lock:
+            view.value = merged
+            view.refs = stamps
+        seconds = time.perf_counter() - t0
+        with self._stats_lock:
+            self.ivm_serves += 1
+            self.serve_seconds += seconds
+        return Report(merged, entry.plan.key, "production", seconds,
+                      res.cast_bytes, sig, cache_hit=True,
+                      predicted_s=entry.predicted_s, incremental=True)
 
     def _production(self, query: PolyOp, sig: str) -> Report:
         usage = usage_snapshot()
@@ -638,15 +1051,19 @@ class BigDAWG:
                         # alternate pool (incumbent included) so exploration
                         # continues to challenge it
                         alts = ()
+                        view = None
                         if entry is not None:
                             alts = tuple(
                                 p for p in (entry.plan,) + entry.alternates
                                 if p.key != plan_key)[:self.MAX_ALTERNATES]
+                            # view validity is plan-independent (query +
+                            # data only) — a promoted alternate keeps it
+                            view = entry.view
                         entry = CachedPlan(plan,
                                            stats.mean_seconds if stats.n
                                            else self._predict(query, plan,
                                                               sig),
-                                           alternates=alts)
+                                           alternates=alts, view=view)
                         self.plan_cache[sig] = entry
         if plan is None:
             return self._train(query, sig)
@@ -659,6 +1076,10 @@ class BigDAWG:
             with self._cache_lock:
                 self.plan_cache.pop(sig, None)
             return self._train(query, sig)
+        if self.incremental:
+            rep = self._try_incremental(query, sig, entry)
+            if rep is not None:
+                return rep
         res = execute_plan(query, plan, self.catalog, concurrent=True,
                            cost_model=self.cost_model, health=self.health,
                            fused=self._fused_for(query, plan, entry))
@@ -680,6 +1101,7 @@ class BigDAWG:
             replanned = self._maybe_replan(query, sig, measured, entry)
         with self._stats_lock:
             self.serve_seconds += res.seconds
+        self._maybe_materialize(query, sig, res.value)
         explored_key = self._maybe_explore(query, sig, usage)
         return Report(res.value, plan_key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit, replanned=replanned,
@@ -795,6 +1217,8 @@ class BigDAWG:
         self.monitor.save()
         self.cost_model.save()
         self.save_plan_cache()
+        self.save_views()
+        self._save_health()
 
     def drain_explorations(self, timeout: Optional[float] = None) -> int:
         """Block until all in-flight background exploration trials finish
@@ -910,7 +1334,11 @@ class BigDAWG:
                 raise
             finally:
                 health.release_probes(probes)
-            self._feed_health(rep)
+            if not rep.incremental:
+                # a delta serve's near-zero per-node seconds would feed the
+                # straggler z-stats a stream of false outliers-in-reverse
+                # and skew every engine's mean toward zero
+                self._feed_health(rep)
             rep.failovers = failovers
             rep.degraded = bool(mask)
             rep.status = "degraded" if mask else "ok"

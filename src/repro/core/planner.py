@@ -203,6 +203,12 @@ def estimate_sizes_shapes(query: PolyOp, catalog=None,
                 out_b = 4.0 * s[0] * width
         elif op == "project":
             out_b = in_bytes[0] * 0.5
+        elif op == "concat":
+            out_b = float(sum(in_bytes))
+            s1, s2 = (ins[0][1], ins[1][1]) if len(ins) == 2 else (None, None)
+            out_s = (s1[0] + s2[0],) + tuple(s1[1:]) \
+                if s1 and s2 and len(s1) == len(s2) and s1[1:] == s2[1:] \
+                else None
         # select/haar/tfidf/scale/add/join/groupby_sum/ingest/to_array:
         # output ~ input size (the max-input default).  scope (island
         # boundary) is the identity on logical content — the single-input
@@ -571,6 +577,55 @@ def price_scatter_gather(query: PolyOp, fragment: PolyOp, catalog=None,
     return ScatterGatherPrice(sharded_s=sharded, unsharded_s=unsharded,
                               fragment_s=fragment_s, merge_s=merge_s,
                               ipc_s=ipc_s)
+
+
+@dataclass(frozen=True)
+class IncrementalPrice:
+    """Predicted seconds for both ways of serving a streaming signature
+    after an append — what the middleware's IVM gate compares.  ``delta_s``
+    is the update fragment against the pending delta rows, ``patch_s`` the
+    view patch (concat/sum/kmerge over the materialized bytes), ``full_s``
+    the cached plan's full recompute baseline (the plan-cache entry's
+    prediction, which the replan loop keeps synced to measured serves)."""
+    delta_s: float
+    patch_s: float
+    full_s: float
+
+    @property
+    def worthwhile(self) -> bool:
+        return self.delta_s + self.patch_s < self.full_s
+
+
+def price_incremental(fragment: PolyOp, catalog=None,
+                      cost_model: Optional[CostModel] = None,
+                      view_bytes: float = 0.0, full_s: float = 0.0,
+                      merge_bytes_per_s: float = MERGE_BYTES_PER_S,
+                      mask: FrozenSet[str] = NO_MASK
+                      ) -> Tuple[IncrementalPrice, Plan]:
+    """Price the incremental update path for one append and return the
+    fragment's plan alongside.  The fragment is costed by the same k=1 DP
+    every other cheap re-plan uses, against the TEMPORARY catalog whose
+    ``@delta`` entries hold the pending suffix rows — the calibrated size
+    rules price the small operands naturally, so a tiny delta prices tiny
+    and a delta that dominates the base prices accordingly.  The patch is
+    the materialized view plus the delta result through the master-side
+    merge throughput (same coarse constant the scatter-gather gate uses:
+    the decision only needs the right order of magnitude).
+
+    ``mask`` restricts the fragment's engines: the middleware passes
+    everything OUTSIDE the incumbent full plan's engine set, so the delta
+    runs only through engine/cast paths the full serve already validated —
+    delta operands are tiny, and unconstrained the DP happily flips to a
+    cast-heavy placement the incumbent never exercised."""
+    cm = cost_model or default_cost_model()
+    ranked = dp_plans(fragment, catalog, max_plans=1, cost_model=cm,
+                      mask=mask)
+    delta_s, fplan = ranked[0]
+    sizes, _ = estimate_sizes_shapes(fragment, catalog)
+    delta_out = sizes[fragment.nodes()[-1].uid]
+    patch_s = (float(view_bytes) + delta_out) / max(merge_bytes_per_s, 1.0)
+    return IncrementalPrice(delta_s=delta_s, patch_s=patch_s,
+                            full_s=float(full_s)), fplan
 
 
 def estimate_casts(query: PolyOp, plan: Plan, catalog=None,

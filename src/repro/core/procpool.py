@@ -44,7 +44,16 @@ Design points:
   runs as per-shard fragments on the owning workers in parallel and is
   reassembled by the decomposition's merge (concat / sum / k-way ordered
   merge) in the master.  A shard fragment retries on the SAME worker index
-  after a respawn: only that worker holds the shard's rows.
+  after a respawn: only that worker holds the shard's rows.  The gather is
+  *incremental* (``IncrementalGather``): frames fold into the accumulator
+  as workers reply — sum in arrival order, concat/kmerge over the
+  contiguous ready prefix — so per-shard payloads are freed immediately
+  instead of piling up until the slowest worker answers.
+* **streaming appends fan out.**  ``register(..., streaming=True)`` mirrors
+  the STREAM-island append contract across the pool: ``append(name, rows)``
+  grows the table on every worker (each keeps its own materialized views
+  patchable), in the master's catalog, and in the respawn replay log — a
+  replacement worker replays the CURRENT rows, never a pre-append state.
 
 ``ProcPool`` duck-types the middleware surface the serving stack consumes —
 ``execute(query, mode, degrade=)`` returning a ``Report``, ``register``,
@@ -157,8 +166,14 @@ def _worker_main(widx: int, conn, spec: Dict[str, Any]) -> None:
                 conn.send(("ok", rid, _portable_report(rep)))
             elif kind == "register":
                 name, obj, engine = msg[2], msg[3], msg[4]
-                bd.register(name, obj, engine)
+                # older masters frame register without the streaming flag —
+                # length-check instead of unpacking so both framings work
+                streaming = bool(msg[5]) if len(msg) > 5 else False
+                bd.register(name, obj, engine, streaming=streaming)
                 conn.send(("ok", rid, None))
+            elif kind == "append":
+                name, rows = msg[2], msg[3]
+                conn.send(("ok", rid, bd.append(name, rows)))
             elif kind == "persist":
                 bd.persist()
                 conn.send(("ok", rid, None))
@@ -201,7 +216,114 @@ def _monitor_hammer(path: str, private_sig: str, shared_sig: str,
         time.sleep(0.001 * ((seed + r) % 3))
 
 
+def _plan_cache_hammer(state_path: str, private_sig: str, bad_sig: str,
+                       rounds: int, seed: int) -> None:
+    """Spawn target for the masked-signature purity test: hammer one shared
+    plan-cache file with interleaved merge-saves and reloads while a
+    ``@!``-masked entry keeps being re-injected underneath.  Lives here (not
+    in the test module) because spawn pickles targets by import path.
+
+    Each process holds ONE private unmasked signature plus a live masked
+    entry in its in-memory cache, and every other round writes the masked
+    signature straight into the shared file (simulating a sibling that
+    crashed mid-outage with degraded state persisted).  The merge-on-save
+    protocol must carry every private signature forever while NEVER writing,
+    re-adopting, or resurrecting the masked one."""
+    from repro.core.ioutil import atomic_json_dump, load_json
+    from repro.core.middleware import (BigDAWG, CachedPlan, MASK_SEP,
+                                       _plan_from_key)
+    from repro.core.monitor import Monitor
+
+    assert MASK_SEP in bad_sig
+    bd = BigDAWG(monitor=Monitor(state_path, shared=True))
+    bd.plan_cache[private_sig] = CachedPlan(_plan_from_key("0:dense_array"))
+    bd.plan_cache[bad_sig] = CachedPlan(_plan_from_key("0:columnar"))
+    for r in range(rounds):
+        bd.reload_plan_cache_if_changed()
+        bd.save_plan_cache()
+        if (r + seed) % 2 == 0:
+            # adversarial sibling: masked entry lands in the file between
+            # this process's save and everyone else's next merge
+            try:
+                blob = load_json(bd.plan_cache_path)
+            except (OSError, ValueError):
+                blob = None
+            if isinstance(blob, dict):
+                blob.setdefault("entries", {})[bad_sig] = {
+                    "plan": "0:kv_sparse", "predicted_s": 0.0,
+                    "alternates": []}
+                atomic_json_dump(bd.plan_cache_path, blob)
+        time.sleep(0.001 * ((seed + r) % 3))
+
+
 # -- master side --------------------------------------------------------------
+
+class IncrementalGather:
+    """Fold-on-arrival gather accumulator for the sharded scatter path.
+
+    The master used to hold every shard's full result frame until the LAST
+    worker answered, then merge once — peak memory was the sum of all shard
+    results, and the whole merge cost landed after the slowest worker.
+    This accumulator merges frames as they ARRIVE instead: ``sum`` folds
+    pairwise in any order (element-wise addition commutes and the group
+    keys are aligned by construction); ``concat`` and ``kmerge`` are
+    order-sensitive, so they fold the contiguous ready prefix in shard
+    order — both are associative over a prefix, and ``kmerge`` ties stay
+    stable because already-folded earlier shards always sit on the left.
+    A folded frame's payload is dropped immediately; the master holds at
+    most the running accumulator plus whatever out-of-order frames are
+    still waiting on a predecessor.  Thread-safe: worker gather threads
+    call ``add`` concurrently."""
+
+    __slots__ = ("merge", "by", "n", "folds", "_lock", "_acc", "_next",
+                 "_pending")
+
+    def __init__(self, merge: str, n_shards: int, by: Optional[str] = None):
+        if merge not in ("concat", "sum", "kmerge"):
+            raise ValueError(f"unknown merge kind {merge!r}")
+        self.merge = merge
+        self.by = by
+        self.n = n_shards
+        self.folds = 0                 # pairwise merges performed (testing)
+        self._lock = threading.Lock()
+        self._acc: Any = None
+        self._next = 0                 # next shard index the prefix fold needs
+        self._pending: Dict[int, Any] = {}
+
+    def add(self, i: int, part) -> None:
+        """Absorb shard ``i``'s result frame, folding whatever became
+        contiguous (everything, for ``sum``) into the accumulator."""
+        with self._lock:
+            if self.merge == "sum":
+                if self._acc is None:
+                    self._acc = part
+                else:
+                    self._acc = tables.sum_shards([self._acc, part])
+                    self.folds += 1
+                self._next += 1
+                return
+            self._pending[i] = part
+            while self._next in self._pending:
+                part = self._pending.pop(self._next)
+                if self._acc is None:
+                    self._acc = part
+                elif self.merge == "concat":
+                    self._acc = tables.concat_shards([self._acc, part])
+                    self.folds += 1
+                else:
+                    self._acc = tables.kmerge_shards([self._acc, part],
+                                                     self.by)
+                    self.folds += 1
+                self._next += 1
+
+    def result(self):
+        with self._lock:
+            if self._next != self.n or self._pending:
+                raise RuntimeError(
+                    f"gather incomplete: {self._next}/{self.n} shards folded,"
+                    f" {sorted(self._pending)} awaiting predecessors")
+            return self._acc
+
 
 class _Worker:
     """Master-side handle: process + pipe + the lock serializing its RPCs."""
@@ -256,9 +378,12 @@ class ProcPool:
         self.health = health or EngineHealth(
             failure_threshold=1,
             channels=[worker_channel(i) for i in range(processes)])
-        # master-side registry: the replay log (respawn re-registers), the
-        # catalog mirror (signatures + scatter pricing), the shard registry
-        self._registrations: List[Tuple[str, Any, str, Optional[int]]] = []
+        # master-side registry: the replay log (respawn re-registers; an
+        # append rewrites the logged table in place so replacements replay
+        # the CURRENT rows), the catalog mirror (signatures + scatter
+        # pricing), the shard registry
+        self._registrations: List[
+            Tuple[str, Any, str, Optional[int], bool]] = []
         self.catalog: Dict[str, Any] = {}
         self.sharded: Dict[str, ShardInfo] = {}
         self._scatter_cache: Dict[str, bool] = {}
@@ -304,9 +429,9 @@ class ProcPool:
             h = self._spawn(idx)
             # replay BEFORE publishing the handle: no request may overtake
             # the catalog rebuild on the fresh process
-            for name, obj, engine, target in self._registrations:
+            for name, obj, engine, target, streaming in self._registrations:
                 if target is None or target == idx:
-                    self._rpc(h, "register", name, obj, engine,
+                    self._rpc(h, "register", name, obj, engine, streaming,
                               timeout=self.start_timeout_s)
             self.workers[idx] = h
             self.respawns += 1
@@ -386,13 +511,19 @@ class ProcPool:
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, obj, engine: str,
-                 shards: Optional[int] = None) -> None:
+                 shards: Optional[int] = None,
+                 streaming: bool = False) -> None:
         """Mirror of ``BigDAWG.register`` across the pool.  The full table
         goes to every worker; with ``shards=N`` part ``i`` additionally goes
         ONLY to worker ``i % processes`` under ``name#i`` — the placement
-        the scatter path dispatches against."""
+        the scatter path dispatches against.  ``streaming=True`` declares an
+        append-able STREAM-island table (``append`` grows it on every
+        worker); streaming tables cannot be sharded — appends would have to
+        re-balance the row-range parts."""
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine}")
+        if streaming and shards is not None:
+            raise ValueError("a streaming registration cannot be sharded")
         obj = tables.host_copy(obj)
         if shards is not None:
             if shards < 1:
@@ -404,23 +535,57 @@ class ProcPool:
             for i, part in enumerate(parts):
                 self._register_one(shard_name(name, i), part, engine,
                                    target=i % self.n)
-        self._register_one(name, obj, engine, target=None)
+        self._register_one(name, obj, engine, target=None,
+                           streaming=streaming)
 
     def _register_one(self, name: str, obj, engine: str,
-                      target: Optional[int]) -> None:
+                      target: Optional[int],
+                      streaming: bool = False) -> None:
         from repro.core.middleware import CatalogEntry
         # log first: any respawn from here on replays this entry itself
-        self._registrations.append((name, obj, engine, target))
-        self.catalog[name] = CatalogEntry(name, obj, engine)
+        self._registrations.append((name, obj, engine, target, streaming))
+        self.catalog[name] = CatalogEntry(name, obj, engine,
+                                          streaming=streaming)
         for idx in range(self.n):
             if target is not None and target != idx:
                 continue
             h = self.workers[idx]
             try:
-                self._rpc(h, "register", name, obj, engine,
+                self._rpc(h, "register", name, obj, engine, streaming,
                           timeout=self.start_timeout_s)
             except _WorkerDied:
                 self._respawn(idx, h)      # replay delivers this entry too
+
+    def append(self, name: str, rows) -> int:
+        """Mirror of ``BigDAWG.append`` across the pool: grow a streaming
+        registration on every worker and in the master's catalog/replay log.
+        The replay log is rewritten IN PLACE first, so a worker that dies
+        mid-broadcast respawns with the grown table already replayed — no
+        worker can serve pre-append rows after this returns.  Returns the
+        master's new version for the table."""
+        entry = self.catalog.get(name)
+        if entry is None:
+            raise KeyError(f"no registration named {name!r}")
+        if not entry.streaming:
+            raise ValueError(f"{name!r} is not a streaming registration "
+                             f"(register with streaming=True)")
+        rows = tables.host_copy(rows)
+        with self._lock:
+            for j, reg in enumerate(self._registrations):
+                if reg[0] == name and reg[4]:
+                    self._registrations[j] = (
+                        reg[0], tables.append_rows(reg[1], rows), reg[2],
+                        reg[3], True)
+            entry.obj = tables.append_rows(entry.obj, rows)
+            entry.version += 1
+        for idx in range(self.n):
+            h = self.workers[idx]
+            try:
+                self._rpc(h, "append", name, rows)
+            except _WorkerDied:
+                self._respawn(idx, h)  # replay log already holds the grown
+                #                        table — nothing left to deliver
+        return entry.version
 
     @classmethod
     def from_bigdawg(cls, bd, processes: int, **kwargs) -> "ProcPool":
@@ -438,7 +603,8 @@ class ProcPool:
                 part_target[shard_name(name, i)] = i % processes
         for name, entry in bd.catalog.items():
             pool._register_one(name, tables.host_copy(entry.obj),
-                               entry.engine, part_target.get(name))
+                               entry.engine, part_target.get(name),
+                               streaming=getattr(entry, "streaming", False))
         return pool
 
     # -- serving -------------------------------------------------------------
@@ -503,9 +669,21 @@ class ProcPool:
         """Fan the decomposition's fragments to their owning workers in
         parallel, merge in the master (numpy-only).  Fragment ``i`` is
         pinned to worker ``i % n`` — the only process holding shard ``i``'s
-        rows — so a death retries the SAME index after respawn."""
+        rows — so a death retries the SAME index after respawn.
+
+        The gather is incremental: each frame folds into an
+        ``IncrementalGather`` accumulator the moment its worker replies and
+        the per-shard payload is dropped, so the master's peak memory is
+        the running accumulator (plus out-of-order stragglers), not the sum
+        of every shard frame — and by the time the slowest worker answers,
+        every other frame's merge work is already done."""
         t0 = time.perf_counter()
-        reps: List[Any] = [None] * sg.n_shards
+        gather = IncrementalGather(sg.merge, sg.n_shards, by=sg.merge_by)
+        # Report metadata survives the payload drop: (cast_bytes, mode,
+        # cache_hit, failovers, degraded) per shard, plus shard 0's Report
+        # (payload stripped) as the roll-up base
+        metas: List[Optional[Tuple]] = [None] * sg.n_shards
+        first_rep: List[Any] = [None]
         errs: List[Optional[BaseException]] = [None] * sg.n_shards
 
         def run(i: int) -> None:
@@ -515,7 +693,7 @@ class ProcPool:
                 h = self.workers[idx]
                 try:
                     self.dispatches += 1
-                    reps[i] = self._rpc(h, "execute", frag, mode, degrade)
+                    rep = self._rpc(h, "execute", frag, mode, degrade)
                 except _WorkerDied:
                     self._respawn(idx, h)
                     continue
@@ -523,6 +701,12 @@ class ProcPool:
                     errs[i] = exc
                     return
                 self.health.record_success(worker_channel(idx))
+                metas[i] = (rep.cast_bytes, rep.mode, rep.cache_hit,
+                            getattr(rep, "failovers", 0),
+                            getattr(rep, "degraded", False))
+                if i == 0:
+                    first_rep[0] = replace(rep, result=None)
+                gather.add(i, rep.result)     # frees the frame once folded
                 return
             errs[i] = EngineDown(worker_channel(idx), f"shard {i}")
 
@@ -539,21 +723,19 @@ class ProcPool:
         err = next((e for e in errs if e is not None), None)
         if err is not None:
             raise err
-        from repro.core.executor import merge_shard_results
-        merged, _merge_s = merge_shard_results(
-            sg.merge, [r.result for r in reps], by=sg.merge_by)
+        merged = gather.result()
         self.scatter_serves += 1
-        first = reps[0]
+        first = first_rep[0]
         return replace(
             first, result=merged,
             seconds=time.perf_counter() - t0,
-            cast_bytes=float(sum(r.cast_bytes for r in reps)),
-            mode="training" if any(r.mode == "training" for r in reps)
+            cast_bytes=float(sum(m[0] for m in metas)),
+            mode="training" if any(m[1] == "training" for m in metas)
             else "production",
-            cache_hit=all(r.cache_hit for r in reps),
+            cache_hit=all(m[2] for m in metas),
             per_node_seconds=dict(first.per_node_seconds),
-            failovers=sum(getattr(r, "failovers", 0) for r in reps),
-            degraded=any(getattr(r, "degraded", False) for r in reps),
+            failovers=sum(m[3] for m in metas),
+            degraded=any(m[4] for m in metas),
             shards=sg.n_shards)
 
     def _scatter_worthwhile(self, query: PolyOp, sg) -> bool:

@@ -44,9 +44,17 @@ def _node_str(node, catalog=None) -> str:
     if isinstance(node, Ref):
         shape = ""
         if catalog is not None and node.name in catalog:
-            obj = catalog[node.name].obj
-            data = getattr(obj, "data", None)
-            shape = f":{obj.kind}{tuple(data.shape) if data is not None else ''}"
+            entry = catalog[node.name]
+            obj = entry.obj
+            if getattr(entry, "streaming", False):
+                # streaming tables grow between serves: their shape must not
+                # enter the signature, or every append would orphan the plan
+                # cache / monitor history the incremental-serve path lives on
+                shape = f":{obj.kind}~"
+            else:
+                data = getattr(obj, "data", None)
+                shape = f":{obj.kind}" \
+                    f"{tuple(data.shape) if data is not None else ''}"
         return f"${node.name}{shape}"
     attrs = ",".join(f"{k}={_bin_constant(v)}"
                      for k, v in sorted(node.attrs.items()))

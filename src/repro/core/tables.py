@@ -19,6 +19,16 @@ and the three merge primitives — ``concat_shards`` (row-wise ops),
 reassemble per-shard results.  The merge helpers are deliberately
 numpy-only: they run in the MASTER process, which must never initialize the
 XLA backend (workers own the device; see ``core/procpool.py``).
+
+The streaming/IVM substrate (``core/deltaplan.py``) builds on the same
+row-range algebra: a table that grew by appended rows is exactly a 2-shard
+decomposition ``[old prefix, appended suffix]``, so ``append_rows`` /
+``suffix_rows`` here are the base+delta halves of ``shard_rows`` /
+``concat_shards``.  Both follow their input's residency (numpy in, numpy
+out) so the procpool master can maintain its catalog mirror without
+touching the XLA runtime.  ``container_to_jsonable`` /
+``container_from_jsonable`` round-trip small containers through JSON — the
+materialized-view persistence format that rides beside the plan cache.
 """
 from __future__ import annotations
 
@@ -307,3 +317,170 @@ def kmerge_shards(parts: Sequence, by: str):
     merged = {c: np.concatenate([cols[c] for cols in compact])[order]
               for c in names}
     return ColumnarTable(merged)
+
+
+# -- streaming append / delta slicing ----------------------------------------
+
+def _xp_of(a):
+    """The array module matching ``a``'s residency: numpy leaves stay numpy
+    (procpool-master safe), device leaves stay on the device."""
+    return np if isinstance(a, np.ndarray) else jnp
+
+
+def leading_rows(obj) -> int:
+    """Leading-dimension row count of a container — the quantity appends
+    grow and the materialized-view freshness stamps record.  Raises
+    ``TypeError`` for containers with no row dimension (0-d tensors)."""
+    if isinstance(obj, ColumnarTable):
+        return obj.nrows
+    if isinstance(obj, COOMatrix):
+        return int(obj.shape[0])
+    data = getattr(obj, "data", None)
+    if data is not None and getattr(data, "ndim", 0) >= 1:
+        return int(data.shape[0])
+    raise TypeError(f"no row dimension on {type(obj).__name__}")
+
+
+def append_rows(base, delta):
+    """``base`` grown by ``delta``'s rows along the leading dimension — the
+    STREAM island's append semantics.  The result's old-row prefix is
+    bit-identical to ``base`` (``suffix_rows(result, leading_rows(base)) ==
+    delta``), which is what lets the IVM path reconstruct the pending delta
+    from the current table without keeping an append log.  Containers must
+    be the same kind with matching trailing geometry; padded dense tensors
+    are refused for the same reason ``shard_rows`` refuses them (their
+    valid elements are not row-attributable)."""
+    if type(base) is not type(delta):
+        raise TypeError(f"cannot append {type(delta).__name__} rows to "
+                        f"{type(base).__name__}")
+    if isinstance(base, DenseTensor):
+        a, d = base.data, delta.data
+        if getattr(a, "ndim", 0) < 1:
+            raise ValueError("cannot append rows to a 0-d tensor")
+        if a.shape[1:] != d.shape[1:]:
+            raise ValueError(f"append shape mismatch: base rows are "
+                             f"{a.shape[1:]}, delta rows are {d.shape[1:]}")
+        for t in (base, delta):
+            if t.valid_count not in (-1, int(np.prod(t.data.shape))):
+                raise ValueError("cannot append to/with a padded DenseTensor")
+        xp = _xp_of(a)
+        return DenseTensor(xp.concatenate([a, xp.asarray(d)], axis=0),
+                           fill=base.fill)
+    if isinstance(base, ColumnarTable):
+        if set(base.columns) != set(delta.columns):
+            raise ValueError(f"append column mismatch: "
+                             f"{sorted(base.columns)} vs "
+                             f"{sorted(delta.columns)}")
+        first = next(iter(base.columns.values()))
+        xp = _xp_of(first)
+        cols = {c: xp.concatenate([v, xp.asarray(delta.columns[c])])
+                for c, v in base.columns.items()}
+        valid = xp.concatenate([xp.asarray(base.valid),
+                                xp.asarray(delta.valid)])
+        return ColumnarTable(cols, valid=valid)
+    if isinstance(base, COOMatrix):
+        xp = _xp_of(base.rows)
+        off = int(base.shape[0])
+        rows = xp.concatenate([base.rows,
+                               (xp.asarray(delta.rows) + off).astype(
+                                   base.rows.dtype)])
+        return COOMatrix(rows,
+                         xp.concatenate([base.cols, xp.asarray(delta.cols)]),
+                         xp.concatenate([base.vals, xp.asarray(delta.vals)]),
+                         (off + int(delta.shape[0]),
+                          max(int(base.shape[1]), int(delta.shape[1]))))
+    if isinstance(base, StreamBuffer):
+        if base.data.shape[1:] != delta.data.shape[1:]:
+            raise ValueError("append window-shape mismatch")
+        xp = _xp_of(base.data)
+        return StreamBuffer(xp.concatenate([base.data,
+                                            xp.asarray(delta.data)], axis=0),
+                            t0=base.t0)
+    raise TypeError(f"cannot append rows to {type(base).__name__}")
+
+
+def suffix_rows(obj, start: int):
+    """Rows ``[start:]`` of a container as a same-kind container — the
+    pending delta of a streaming table whose materialized view was taken at
+    ``start`` rows (the inverse of ``append_rows``)."""
+    n = leading_rows(obj)
+    if not 0 <= start <= n:
+        raise ValueError(f"suffix start {start} outside [0, {n}]")
+    if isinstance(obj, DenseTensor):
+        if obj.valid_count not in (-1, int(np.prod(obj.data.shape))):
+            raise ValueError("cannot row-slice a padded DenseTensor")
+        return DenseTensor(obj.data[start:], fill=obj.fill)
+    if isinstance(obj, ColumnarTable):
+        return ColumnarTable({c: v[start:] for c, v in obj.columns.items()},
+                             valid=obj.valid[start:])
+    if isinstance(obj, COOMatrix):
+        xp = _xp_of(obj.rows)
+        m = obj.rows >= start
+        return COOMatrix((obj.rows[m] - start).astype(obj.rows.dtype),
+                         obj.cols[m], obj.vals[m],
+                         (n - start, int(obj.shape[1])))
+    if isinstance(obj, StreamBuffer):
+        return StreamBuffer(obj.data[start:], t0=obj.t0 + start)
+    raise TypeError(f"cannot row-slice {type(obj).__name__}")
+
+
+# -- JSON round-trip (materialized-view persistence) --------------------------
+
+def _arr_to_json(a) -> Dict:
+    a = np.asarray(a)
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.ravel().tolist()}
+
+
+def _arr_from_json(blob) -> np.ndarray:
+    return np.asarray(blob["data"], dtype=np.dtype(blob["dtype"])).reshape(
+        tuple(blob["shape"]))
+
+
+def container_to_jsonable(obj):
+    """A pure-JSON encoding of a container (numpy-leafed values; call
+    ``host_copy`` first for device objects), or ``None`` for types this
+    codec does not cover.  Sized for SMALL payloads — materialized views
+    under the persistence cap — not as a general serialization format."""
+    if isinstance(obj, DenseTensor):
+        return {"kind": "dense", "array": _arr_to_json(obj.data),
+                "valid_count": int(obj.valid_count), "fill": float(obj.fill)}
+    if isinstance(obj, ColumnarTable):
+        return {"kind": "columnar",
+                "columns": {c: _arr_to_json(v)
+                            for c, v in obj.columns.items()},
+                "valid": np.asarray(obj.valid).tolist()}
+    if isinstance(obj, COOMatrix):
+        return {"kind": "coo", "rows": _arr_to_json(obj.rows),
+                "cols": _arr_to_json(obj.cols),
+                "vals": _arr_to_json(obj.vals),
+                "shape": [int(obj.shape[0]), int(obj.shape[1])]}
+    if isinstance(obj, StreamBuffer):
+        return {"kind": "stream", "array": _arr_to_json(obj.data),
+                "t0": int(obj.t0)}
+    return None
+
+
+def container_from_jsonable(blob):
+    """Inverse of ``container_to_jsonable`` (numpy-leafed result).  Raises
+    ``ValueError`` on unknown kinds; key/shape errors propagate as the
+    usual ``KeyError``/``TypeError`` for the caller's skip-with-warning
+    policy."""
+    kind = blob.get("kind") if isinstance(blob, dict) else None
+    if kind == "dense":
+        return DenseTensor(_arr_from_json(blob["array"]),
+                           valid_count=int(blob["valid_count"]),
+                           fill=float(blob["fill"]))
+    if kind == "columnar":
+        return ColumnarTable({c: _arr_from_json(v)
+                              for c, v in blob["columns"].items()},
+                             valid=np.asarray(blob["valid"], bool))
+    if kind == "coo":
+        return COOMatrix(_arr_from_json(blob["rows"]),
+                         _arr_from_json(blob["cols"]),
+                         _arr_from_json(blob["vals"]),
+                         (int(blob["shape"][0]), int(blob["shape"][1])))
+    if kind == "stream":
+        return StreamBuffer(_arr_from_json(blob["array"]),
+                            t0=int(blob.get("t0", 0)))
+    raise ValueError(f"unknown container kind {kind!r}")

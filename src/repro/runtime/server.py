@@ -250,7 +250,8 @@ class QueryServer:
     def __init__(self, bigdawg, max_pending: Optional[int] = None,
                  latency_target_s: Optional[float] = None,
                  processes: Optional[int] = None,
-                 fuse: Optional[bool] = None):
+                 fuse: Optional[bool] = None,
+                 incremental: Optional[Any] = None):
         # ``processes=N`` lifts the middleware into a core.procpool.ProcPool
         # — N worker processes each owning a full middleware stack, sharing
         # plans through the monitor/plan-cache files — so batch admission
@@ -269,6 +270,11 @@ class QueryServer:
         # override only applies to in-process backends that carry the knob
         if fuse is not None and hasattr(self.bd, "fuse"):
             self.bd.fuse = fuse
+        # incremental=True/False/"force" overrides the middleware's
+        # streaming-IVM knob the same way (None leaves BigDAWG(incremental=)
+        # untouched; ProcPool backends without the attribute are skipped)
+        if incremental is not None and hasattr(self.bd, "incremental"):
+            self.bd.incremental = incremental
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         if latency_target_s is not None and latency_target_s <= 0:
@@ -280,7 +286,8 @@ class QueryServer:
                       "replans": 0, "explorations": 0, "shed": 0,
                       "seconds": 0.0, "degraded": 0, "failovers": 0,
                       "breaker_trips": 0, "latency_ewma": 0.0,
-                      "fused_serves": 0, "fusion_fallbacks": 0}
+                      "fused_serves": 0, "fusion_fallbacks": 0,
+                      "ivm_serves": 0, "ivm_fallbacks": 0}
         self._pending = 0          # batch-admitted requests still in flight
         # adaptive in-flight bound (AIMD; only consulted when
         # latency_target_s is set) and the serve-latency EWMA driving it
@@ -346,6 +353,9 @@ class QueryServer:
             self.stats["fused_serves"] = getattr(self.bd, "fused_serves", 0)
             self.stats["fusion_fallbacks"] = getattr(self.bd,
                                                      "fusion_fallbacks", 0)
+            self.stats["ivm_serves"] = getattr(self.bd, "ivm_serves", 0)
+            self.stats["ivm_fallbacks"] = getattr(self.bd,
+                                                  "ivm_fallbacks", 0)
             if self.latency_target_s is not None:
                 # AIMD on the in-flight bound, driven by the latency EWMA:
                 # under target -> +1 (up to max_pending when given), over ->

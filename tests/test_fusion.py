@@ -82,6 +82,7 @@ def chain_specs(draw):
                    "haar"]          # both shapes keep cols % 4 == 0
         if i == n_ops - 1:
             choices.append("knn")   # int indices: terminal only
+            choices.append("count")  # 0-d scalar: terminal only
         op = draw(st.sampled_from(choices))
         if op == "select":
             ops.append(("select",
@@ -107,6 +108,9 @@ def chain_specs(draw):
             ops.append(("knn",
                         {"other": "Q16" if shape[1] == 16 else "Q8",
                          "k": 3}))
+            break
+        elif op == "count":
+            ops.append(("count", {}))
             break
     return src, tuple(ops)
 
@@ -157,6 +161,51 @@ def test_fused_equals_unfused(spec):
     for seg in got.fused_segments:
         for pos in seg:
             assert got.per_node_seconds[nodes[pos].uid] >= 0.0
+
+
+def test_fused_count_reads_threaded_valid_count():
+    """``count`` fuses by consuming the valid-count value threaded through
+    the trace: a padded external's metadata count enters as a traced
+    scalar, and an upstream select's mask sum replaces it — both must match
+    the eager engine exactly, with count mid-chain as well as at the
+    root."""
+    bd = _middleware()
+    rng = np.random.default_rng(11)
+    padded = DenseTensor(jnp.asarray(rng.normal(size=(N, T))
+                                     .astype(np.float32)), valid_count=29)
+    bd.register("Xpad", padded, "dense_array")
+    queries = [
+        array.count(array.select(Ref("Xd"), lo=0.0, hi=0.7)),
+        array.count(array.scale(Ref("Xpad"), factor=2.0)),
+        array.scale(array.count(array.select(Ref("Xd"), lo=-0.3)),
+                    factor=0.5),
+        array.count(array.select(array.matmul(Ref("Xd"), Ref("W16")),
+                                 lo=0.0)),
+    ]
+    for query in queries:
+        nodes = query.nodes()
+        plan = Plan(tuple((i, "dense_array") for i in range(len(nodes))))
+        fused = fuse_plan(query, plan, bd.catalog, cost_model=bd.cost_model)
+        assert any("count" in s.ops for s in fused.segments)
+        base = execute_plan(query, plan, bd.catalog, concurrent=True)
+        got = execute_plan(query, plan, bd.catalog, concurrent=True,
+                           fused=fused)
+        assert got.fusion_fallbacks == 0, fuseplan.broken_keys()
+        assert got.fused_segments
+        np.testing.assert_array_equal(np.asarray(base.value.data),
+                                      np.asarray(got.value.data))
+        assert base.value.valid_count == got.value.valid_count
+    # the metadata really flowed: a padded count is 29, not N*T
+    q = array.count(array.transpose(array.transpose(Ref("Xpad"))))
+    plan = Plan(((0, "dense_array"), (1, "dense_array"),
+                 (2, "dense_array")))
+    base = execute_plan(q, plan, bd.catalog, concurrent=True)
+    # NB the eager transpose drops padding metadata (engine outputs are
+    # full) — fused must mirror that, not "fix" it
+    got = execute_plan(q, plan, bd.catalog, concurrent=True,
+                       fused=fuse_plan(q, plan, bd.catalog))
+    assert int(np.asarray(got.value.data)) == \
+        int(np.asarray(base.value.data))
 
 
 # ---------------------------------------------------------------------------

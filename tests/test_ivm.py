@@ -1,0 +1,548 @@
+"""Streaming island + delta-driven materialized views (ISSUE 9).
+
+The contract under test: after ``append``-ing rows to a streaming
+registration, a warm serve that patches its materialized view through the
+derived ``deltaplan.UpdatePlan`` must be *indistinguishable* from a full
+recompute — identical values, shapes and valid counts — across every
+provably-incremental operator family (the 200-example differential
+property); anything unprovable must fall back to recompute and still be
+correct, never wrong.  Around that core: the STREAM qlang block compiles to
+the same signatures as the programmatic build, views persist and patch
+across process restarts, the pricing gate recomputes when the delta
+dominates (``"force"`` overrides it), breaker state survives ``persist()``
+(satellite 2), the incremental scatter gather folds frames in any arrival
+order (satellite 1), and the merge-on-save protocol never resurrects a
+``@!``-masked plan-cache entry under multi-process contention
+(satellite 4).
+"""
+import multiprocessing
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro.proptest import given, settings, strategies as st
+
+from repro.core import deltaplan, tables
+from repro.core.health import CLOSED, OPEN, EngineHealth
+from repro.core.islands import array, relational, stream
+from repro.core.ioutil import load_json
+from repro.core.middleware import (MASK_SEP, BigDAWG, default_health_path,
+                                   default_view_cache_path, masked_sig)
+from repro.core.monitor import Monitor
+from repro.core.ops import Ref
+from repro.core.procpool import (IncrementalGather, ProcPool,
+                                 _plan_cache_hammer)
+from repro.core.qlang import bigdawg as qparse
+from repro.core.signature import signature
+from repro.core.tables import ColumnarTable, DenseTensor, StreamBuffer
+
+# bounded shape buckets keep the jit cache small across 200+ examples
+_BASE_ROWS = (8, 12, 16)
+_DELTA_ROWS = (2, 4)
+_COLS = 4
+
+
+def _dense(rng, rows):
+    return DenseTensor(rng.normal(size=(rows, _COLS)).astype(np.float32))
+
+
+def _col(rng, rows):
+    return ColumnarTable({
+        "key": rng.integers(0, 6, rows).astype(np.int32),
+        "value": rng.normal(size=rows).astype(np.float32)})
+
+
+def _stream(rng, rows, t0=0.0):
+    return StreamBuffer(rng.normal(size=(rows, _COLS)).astype(np.float32),
+                        t0=t0)
+
+
+def _bd(incremental, state=None, **kw):
+    kw.setdefault("train_plans", 1)
+    kw.setdefault("train_repeats", 1)
+    return BigDAWG(monitor=Monitor(state, shared=bool(state)),
+                   incremental=incremental, **kw)
+
+
+# Each family: (maker kind, static side tables, query builder, whether the
+# delta lineage is provably incremental).  Unprovable families MUST still
+# serve correct results via full recompute (Report.incremental False).
+_STATIC_W = "W"          # (COLS, 3) dense — replicated matmul operand
+_STATIC_A0 = "A0"        # (6, COLS) dense — concat's untouched first input
+_STATIC_R = "R"          # 6-key columnar — replicated join right side
+
+FAMILIES = [
+    ("dense_scale", "dense",
+     lambda: array.scale(Ref("S"), factor=2.0), True),
+    ("dense_select", "dense",
+     lambda: array.select(Ref("S"), lo=-0.5, hi=0.5), True),
+    ("dense_matmul_left", "dense",
+     lambda: array.matmul(Ref("S"), Ref(_STATIC_W)), True),
+    ("dense_add_self", "dense",
+     lambda: array.add(Ref("S"), Ref("S")), True),
+    ("dense_haar", "dense",
+     lambda: array.haar(Ref("S"), levels=1), True),
+    ("dense_count_of_select", "dense",
+     lambda: array.count(array.select(Ref("S"), lo=0.0)), True),
+    ("dense_concat_last", "dense",
+     lambda: array.concat(Ref(_STATIC_A0), Ref("S")), True),
+    ("dense_transpose", "dense",
+     lambda: array.transpose(Ref("S")), False),
+    ("dense_tfidf", "dense",
+     lambda: array.tfidf(Ref("S")), False),
+    ("dense_concat_first", "dense",
+     lambda: array.concat(Ref("S"), Ref(_STATIC_A0)), False),
+    ("col_select", "columnar",
+     lambda: relational.select(Ref("S"), column="value", lo=0.0), True),
+    ("col_project", "columnar",
+     lambda: relational.project(Ref("S"), columns=["value"]), True),
+    ("col_count", "columnar",
+     lambda: relational.count(Ref("S")), True),
+    ("col_sort", "columnar",
+     lambda: relational.sort(Ref("S"), by="value"), True),
+    ("col_groupby_sum", "columnar",
+     lambda: relational.groupby_sum(Ref("S"), key="key", value="value",
+                                    num_groups=6), True),
+    ("col_join_left", "columnar",
+     lambda: relational.join(Ref("S"), Ref(_STATIC_R),
+                             left_on="key", right_on="key"), True),
+    ("col_join_right", "columnar",
+     lambda: relational.join(Ref(_STATIC_R), Ref("S"),
+                             left_on="key", right_on="key"), False),
+    ("col_distinct", "columnar",
+     lambda: relational.distinct(Ref("S"), column="value"), False),
+    ("stream_haar", "stream",
+     lambda: stream.haar(Ref("S"), levels=1), True),
+]
+
+_ENGINE_OF = {"dense": "dense_array", "columnar": "columnar",
+              "stream": "stream"}
+_MAKER_OF = {"dense": _dense, "columnar": _col, "stream": _stream}
+
+
+def _register_statics(bd, rng):
+    bd.register(_STATIC_W, DenseTensor(
+        rng.normal(size=(_COLS, 3)).astype(np.float32)), "dense_array")
+    bd.register(_STATIC_A0, _dense(rng, 6), "dense_array")
+    bd.register(_STATIC_R, ColumnarTable({
+        "key": np.arange(6, dtype=np.int32),
+        "rval": rng.normal(size=6).astype(np.float32)}), "columnar")
+
+
+def _assert_equal(a, b):
+    a, b = tables.host_copy(a), tables.host_copy(b)
+    assert type(a) is type(b)
+    if isinstance(a, DenseTensor):
+        assert np.asarray(a.data).shape == np.asarray(b.data).shape
+        np.testing.assert_allclose(np.asarray(a.data, np.float64),
+                                   np.asarray(b.data, np.float64),
+                                   rtol=1e-5, atol=1e-5)
+        assert a.valid_count == b.valid_count
+    elif isinstance(a, ColumnarTable):
+        assert set(a.columns) == set(b.columns)
+        av, bv = np.asarray(a.valid), np.asarray(b.valid)
+        assert np.array_equal(av, bv)
+        for c in a.columns:
+            np.testing.assert_allclose(
+                np.asarray(a.columns[c], np.float64)[av],
+                np.asarray(b.columns[c], np.float64)[bv],
+                rtol=1e-5, atol=1e-5)
+    elif isinstance(a, StreamBuffer):
+        assert np.asarray(a.data).shape == np.asarray(b.data).shape
+        np.testing.assert_allclose(np.asarray(a.data, np.float64),
+                                   np.asarray(b.data, np.float64),
+                                   rtol=1e-5, atol=1e-5)
+        assert a.t0 == b.t0
+    else:
+        raise AssertionError(f"unexpected container {type(a).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# the 200-example differential property: delta patch == full recompute
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=0, max_value=len(FAMILIES) - 1),
+       st.sampled_from(_BASE_ROWS), st.sampled_from(_DELTA_ROWS),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_delta_serve_equals_full_recompute(fi, nb, nd, seed):
+    tag, kind, build, provable = FAMILIES[fi]
+    rng = np.random.default_rng(seed)
+    maker, engine = _MAKER_OF[kind], _ENGINE_OF[kind]
+    base, delta = maker(rng, nb), maker(rng, nd)
+
+    bd = _bd(incremental="force")
+    _register_statics(bd, np.random.default_rng(7))
+    bd.register("S", base, engine, streaming=True)
+    q = build()
+    bd.execute(q, mode="training")          # materializes the view
+    assert bd.append("S", delta) == 1
+    rep = bd.execute(q, mode="production")
+    assert rep.incremental == provable, (tag, rep.incremental)
+    if provable:
+        assert bd.ivm_serves == 1 and bd.ivm_fallbacks == 0
+    else:
+        assert bd.ivm_serves == 0 and bd.ivm_fallbacks == 1
+
+    oracle = _bd(incremental=False)
+    _register_statics(oracle, np.random.default_rng(7))
+    oracle.register("S", tables.append_rows(base, delta), engine,
+                    streaming=True)
+    full = oracle.execute(q, mode="training")
+    assert full.incremental is False
+    _assert_equal(rep.result, full.result)
+
+    # the patched view keeps serving: a second append must patch again (or
+    # fall back again), and still match a from-scratch recompute
+    if provable:
+        delta2 = maker(rng, nd)
+        bd.append("S", delta2)
+        rep2 = bd.execute(q, mode="production")
+        assert rep2.incremental and bd.ivm_serves == 2
+        oracle2 = _bd(incremental=False)
+        _register_statics(oracle2, np.random.default_rng(7))
+        oracle2.register(
+            "S", tables.append_rows(tables.append_rows(base, delta), delta2),
+            engine, streaming=True)
+        _assert_equal(rep2.result,
+                      oracle2.execute(q, mode="training").result)
+
+
+def test_unchanged_view_serves_verbatim():
+    rng = np.random.default_rng(3)
+    bd = _bd(incremental="force")
+    bd.register("S", _dense(rng, 12), "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=3.0)
+    r0 = bd.execute(q, mode="training")
+    r1 = bd.execute(q, mode="production")   # no appends: view verbatim
+    assert r1.incremental and r1.cache_hit
+    _assert_equal(r0.result, r1.result)
+    assert bd.ivm_serves == 1
+
+
+def test_reregister_bumps_epoch_and_drops_view():
+    """Replacing a streaming registration outright (same name, same row
+    count) must invalidate the view — content identity is the epoch, not
+    the row count."""
+    rng = np.random.default_rng(4)
+    bd = _bd(incremental="force")
+    bd.register("S", _dense(rng, 12), "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=2.0)
+    bd.execute(q, mode="training")
+    fresh = _dense(rng, 12)
+    bd.register("S", fresh, "dense_array", streaming=True)
+    rep = bd.execute(q, mode="production")
+    assert rep.incremental is False
+    np.testing.assert_allclose(np.asarray(tables.host_copy(rep.result).data),
+                               np.asarray(fresh.data) * 2.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# STREAM qlang block: same signatures, same incremental serves
+# ---------------------------------------------------------------------------
+
+def test_stream_qlang_block_compiles_to_same_signature():
+    rng = np.random.default_rng(5)
+    bd = _bd(incremental="force")
+    bd.register("S", _stream(rng, 12), "stream", streaming=True)
+    q_prog = stream.haar(Ref("S"), levels=1)
+    q_text = qparse("BIGDAWG(STREAM(haar(S, levels=1)))")
+    assert signature(q_text, bd.catalog) == signature(q_prog, bd.catalog)
+    bd.execute(q_text, mode="training")
+    bd.append("S", _stream(rng, 4, t0=12.0))
+    rep = bd.execute(q_text, mode="production")
+    assert rep.incremental
+    oracle = _bd(incremental=False)
+    oracle.register("S", bd.catalog["S"].obj, "stream", streaming=True)
+    _assert_equal(rep.result,
+                  oracle.execute(q_prog, mode="training").result)
+
+
+def test_streaming_signature_is_shape_free():
+    """Appends must not move the signature — that is what keeps the plan
+    cache and view keyed stably across appends."""
+    rng = np.random.default_rng(6)
+    bd = _bd(incremental=True)
+    bd.register("S", _dense(rng, 8), "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=2.0)
+    before = signature(q, bd.catalog)
+    bd.append("S", _dense(rng, 4))
+    assert signature(q, bd.catalog) == before
+
+
+# ---------------------------------------------------------------------------
+# the pricing gate: incremental only when the cost model says it pays
+# ---------------------------------------------------------------------------
+
+def test_gate_recomputes_when_delta_dominates_and_force_overrides():
+    rng = np.random.default_rng(8)
+
+    def serve_after_big_append(mode):
+        bd = _bd(incremental=mode)
+        bd.register("S", _dense(rng, 8), "dense_array", streaming=True)
+        q = array.matmul(Ref("S"), Ref("W"))
+        bd.register("W", DenseTensor(
+            rng.normal(size=(_COLS, 3)).astype(np.float32)), "dense_array")
+        bd.execute(q, mode="training")
+        bd.append("S", _dense(rng, 512))    # delta >> base: patching can't
+        rep = bd.execute(q, mode="production")  # beat recomputing
+        return bd, rep
+
+    bd, rep = serve_after_big_append(True)
+    assert rep.incremental is False and bd.ivm_fallbacks == 1
+    bd, rep = serve_after_big_append("force")
+    assert rep.incremental is True and bd.ivm_serves == 1
+
+
+def test_incremental_off_never_materializes():
+    rng = np.random.default_rng(9)
+    bd = _bd(incremental=False)
+    bd.register("S", _dense(rng, 12), "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=2.0)
+    bd.execute(q, mode="training")
+    bd.append("S", _dense(rng, 2))
+    rep = bd.execute(q, mode="production")
+    assert rep.incremental is False
+    assert bd.ivm_serves == 0 and bd.ivm_fallbacks == 0
+    entry = bd.plan_cache[rep.sig]
+    assert entry.view is None
+
+
+# ---------------------------------------------------------------------------
+# registration / append validation
+# ---------------------------------------------------------------------------
+
+def test_streaming_registration_validation():
+    rng = np.random.default_rng(10)
+    bd = _bd(incremental=True)
+    with pytest.raises(ValueError):      # casts are not append-preserving
+        bd.register("S", _dense(rng, 8), "columnar", streaming=True)
+    with pytest.raises(ValueError):      # sharding + appends don't compose
+        bd.register("S", _dense(rng, 8), "dense_array", shards=2,
+                    streaming=True)
+    with pytest.raises(TypeError):       # 0-d: no row dimension to grow
+        bd.register("Z", DenseTensor(np.float32(3.0)), "dense_array",
+                    streaming=True)
+    bd.register("P", _dense(rng, 8), "dense_array")          # not streaming
+    with pytest.raises(ValueError):
+        bd.append("P", _dense(rng, 2))
+    with pytest.raises(KeyError):
+        bd.append("missing", _dense(rng, 2))
+    bd.register("S", _dense(rng, 8), "dense_array", streaming=True)
+    with pytest.raises((TypeError, ValueError)):             # kind mismatch
+        bd.append("S", _col(rng, 2))
+
+
+# ---------------------------------------------------------------------------
+# view persistence: patch across a process restart
+# ---------------------------------------------------------------------------
+
+def test_views_persist_and_patch_after_restart(tmp_path):
+    state = str(tmp_path / "mon.json")
+    rng = np.random.default_rng(11)
+    base, delta = _dense(rng, 12), _dense(rng, 4)
+
+    bd1 = _bd(incremental="force", state=state)
+    bd1.register("S", base, "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=2.0)
+    bd1.execute(q, mode="training")
+    bd1.persist()
+    assert os.path.exists(default_view_cache_path(state))
+
+    # "restarted process": same state paths, data re-registered already
+    # grown (the deployment contract: registrations replay current tables)
+    bd2 = _bd(incremental="force", state=state)
+    bd2.register("S", base, "dense_array", streaming=True)
+    bd2.append("S", delta)
+    rep = bd2.execute(q, mode="production")
+    assert rep.incremental, "restored view did not patch"
+    full = tables.append_rows(base, delta)
+    np.testing.assert_allclose(np.asarray(tables.host_copy(rep.result).data),
+                               np.asarray(full.data) * 2.0, rtol=1e-5)
+
+
+def test_view_save_skips_masked_and_oversized(tmp_path):
+    from repro.core import middleware as mw
+    state = str(tmp_path / "mon.json")
+    rng = np.random.default_rng(12)
+    bd = _bd(incremental="force", state=state)
+    bd.register("S", _dense(rng, 12), "dense_array", streaming=True)
+    q = array.scale(Ref("S"), factor=2.0)
+    rep = bd.execute(q, mode="training")
+    # graft a masked entry carrying a view: it must never hit the file
+    entry = bd.plan_cache[rep.sig]
+    bad = masked_sig(rep.sig, frozenset({"kv_sparse"}))
+    bd.plan_cache[bad] = entry
+    bd.save_views()
+    blob = load_json(default_view_cache_path(state))
+    assert list(blob["entries"]) == [rep.sig]
+    # oversized views stay memory-only
+    old = mw.VIEW_PERSIST_MAX_BYTES
+    mw.VIEW_PERSIST_MAX_BYTES = 1
+    try:
+        bd.save_views(merge=False)
+        assert load_json(default_view_cache_path(state))["entries"] == {}
+    finally:
+        mw.VIEW_PERSIST_MAX_BYTES = old
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: breaker state persists and restores
+# ---------------------------------------------------------------------------
+
+def test_breaker_snapshot_restore_semantics():
+    h = EngineHealth(failure_threshold=1)
+    h.record_failure("kv_sparse")        # trips OPEN
+    h.record_success("columnar")
+    snap = h.snapshot()
+    assert snap["kv_sparse"]["state"] == OPEN
+    h2 = EngineHealth(failure_threshold=1)
+    h2.restore(snap)
+    s2 = h2.snapshot()
+    assert s2["kv_sparse"]["state"] == OPEN
+    assert s2["kv_sparse"]["trips"] == 1
+    assert s2["columnar"]["state"] == CLOSED
+    # malformed entries are skipped, not fatal
+    h2.restore({"weird": "not-a-dict", "also": {"state": "bogus"}})
+
+
+def test_health_persists_across_restart(tmp_path):
+    state = str(tmp_path / "mon.json")
+    rng = np.random.default_rng(13)
+    bd1 = _bd(incremental=True, state=state,
+              health=EngineHealth(failure_threshold=1))
+    bd1.register("X", _dense(rng, 8), "dense_array")
+    bd1.health.record_failure("kv_sparse")
+    bd1.persist()
+    assert os.path.exists(default_health_path(state))
+
+    bd2 = _bd(incremental=True, state=state,
+              health=EngineHealth(failure_threshold=1))
+    snap = bd2.health.snapshot()
+    assert snap["kv_sparse"]["state"] == OPEN     # outage knowledge kept
+    assert snap["kv_sparse"]["trips"] == 1
+    # a health-less middleware ignores the file entirely
+    bd3 = _bd(incremental=True, state=state)
+    assert bd3.health is None
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: incremental gather folds frames in any arrival order
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from(["concat", "sum", "kmerge"]),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_incremental_gather_matches_batch_merge(merge, n, seed):
+    rng = np.random.default_rng(seed)
+    if merge == "concat":
+        parts = [_dense(rng, int(rng.integers(1, 5))) for _ in range(n)]
+        oracle = tables.concat_shards(parts)
+    elif merge == "sum":
+        parts = [ColumnarTable({"key": np.arange(4, dtype=np.int32),
+                                "sum": rng.normal(size=4)})
+                 for _ in range(n)]
+        oracle = tables.sum_shards(parts)
+    else:
+        parts = [ColumnarTable({
+            "key": np.sort(rng.integers(0, 40, 5)).astype(np.int32),
+            "value": rng.normal(size=5).astype(np.float32)})
+            for _ in range(n)]
+        oracle = tables.kmerge_shards(parts, "key")
+    order = rng.permutation(n)
+    g = IncrementalGather(merge, n, by="key" if merge == "kmerge" else None)
+    for i in order:
+        g.add(int(i), parts[i])
+    out = g.result()
+    if merge == "kmerge":
+        for c in ("key", "value"):
+            np.testing.assert_allclose(np.asarray(out.columns[c]),
+                                       np.asarray(oracle.columns[c]))
+    else:
+        _assert_equal(out, oracle)
+    assert g.folds == n - 1
+
+
+def test_incremental_gather_guards():
+    with pytest.raises(ValueError):
+        IncrementalGather("median", 2)
+    g = IncrementalGather("concat", 3)
+    g.add(2, _dense(np.random.default_rng(0), 2))   # out of order: pending
+    with pytest.raises(RuntimeError):
+        g.result()
+
+
+# ---------------------------------------------------------------------------
+# streaming appends across a worker pool
+# ---------------------------------------------------------------------------
+
+def test_pool_append_reaches_every_worker_and_respawn(tmp_path):
+    rng = np.random.default_rng(14)
+    base, delta = _dense(rng, 12), _dense(rng, 4)
+    state = str(tmp_path / "mon.json")
+    with ProcPool(2, state_path=state, train_plans=1) as pool:
+        pool.register("S", base, "dense_array", streaming=True)
+        pool.register("P", base, "dense_array")
+        with pytest.raises(ValueError):
+            pool.register("T", base, "dense_array", shards=2, streaming=True)
+        with pytest.raises(ValueError):
+            pool.append("P", delta)          # not a streaming registration
+        with pytest.raises(KeyError):
+            pool.append("missing", delta)
+        q = array.scale(Ref("S"), factor=2.0)
+        pool.execute(q, mode="training")
+        assert pool.append("S", delta) == 1
+        full = tables.append_rows(base, delta)
+        # both workers serve the grown table (round-robin hits each)
+        for _ in range(2):
+            rep = pool.execute(q, mode="production")
+            np.testing.assert_allclose(
+                np.asarray(tables.host_copy(rep.result).data),
+                np.asarray(full.data) * 2.0, rtol=1e-5)
+        # a killed worker replays the grown table, not the pre-append base
+        pool.workers[0].proc.terminate()
+        pool.workers[0].proc.join(timeout=10)
+        for _ in range(2):
+            rep = pool.execute(q, mode="production")
+            assert np.asarray(tables.host_copy(rep.result).data).shape == \
+                np.asarray(full.data).shape
+        assert pool.respawns >= 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: masked signatures never survive multi-process merge-on-save
+# ---------------------------------------------------------------------------
+
+def test_masked_entries_never_resurrect_under_contention(tmp_path):
+    """N real processes hammer one shared plan-cache file with merge-saves
+    and reloads while a ``@!``-masked entry is repeatedly injected into the
+    file underneath them.  Every private signature must survive; the masked
+    one must be gone from the final file after any process's save, must
+    never be adopted into a fresh load, and must never be re-persisted."""
+    state = str(tmp_path / "contended.json")
+    bad = masked_sig("deg-sig", frozenset({"kv_sparse"}))
+    ctx = multiprocessing.get_context("spawn")
+    n_procs, rounds = 3, 6
+    procs = [ctx.Process(target=_plan_cache_hammer,
+                         args=(state, f"private-{i}", bad, rounds, i))
+             for i in range(n_procs)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(timeout=120)
+        assert p.exitcode == 0
+    # a fresh process loads the survivors — and never the masked entry,
+    # even if the last file write was an adversarial injection
+    bd = BigDAWG(monitor=Monitor(state, shared=True))
+    assert not any(MASK_SEP in sig for sig in bd.plan_cache)
+    for i in range(n_procs):
+        assert f"private-{i}" in bd.plan_cache
+    bd.save_plan_cache()
+    blob = load_json(bd.plan_cache_path)
+    assert not any(MASK_SEP in sig for sig in blob["entries"])
+    assert all(f"private-{i}" in blob["entries"] for i in range(n_procs))
