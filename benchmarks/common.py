@@ -1,9 +1,40 @@
 """Shared benchmark utilities: timing, CSV emission."""
 from __future__ import annotations
 
+import gc
 import time
 
 import jax
+import numpy as np
+
+
+def timed_loop(fn, n: int, on_error=None):
+    """Time ``n`` sequential calls of ``fn()`` with the collector paused.
+
+    Returns ``(lats_ms, results, failed)``: per-call wall milliseconds as
+    an ndarray, the collected return values, and how many calls raised.
+    Collector pauses (host-allocation-heavy serves) would put 30+ ms GC
+    spikes into any phase's p99 — collect up front, then keep the collector
+    out of the timed loop.  A raised exception propagates unless
+    ``on_error`` is given, in which case it is called with the exception
+    and the call counts as failed."""
+    lats, results, failed = [], [], 0
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(n):
+            t0 = time.perf_counter()
+            try:
+                results.append(fn())
+            except Exception as exc:        # noqa: BLE001 — counted
+                if on_error is None:
+                    raise
+                failed += 1
+                on_error(exc)
+            lats.append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+    return np.asarray(lats) * 1e3, results, failed
 
 
 def bench(fn, *args, warmup: int = 1, iters: int = 3, **kw):

@@ -110,12 +110,22 @@ def main(fast: bool = False):
                 srv.warm([query(i) for i in range(N_SIGS)])
                 srv.submit_many(traffic(2 * procs * N_SIGS),
                                 workers=CLIENT_THREADS)      # per-worker warm
+                stats0 = srv.stats()         # metrics snapshot, pre-round
                 t0 = time.perf_counter()
                 reps = srv.submit_many(traffic(requests),
                                        workers=CLIENT_THREADS)
                 wall = time.perf_counter() - t0
+                stats1 = srv.stats()
                 assert all(r.mode == "production" for r in reps), \
                     "warm round hit a training serve"
+                # the measured round's per-request serve time, re-derived
+                # from the metrics registry rather than a hand-kept dict:
+                # server.seconds sums per-request wall across client
+                # threads, so dividing the delta by the request delta gives
+                # mean in-request latency (> wall/requests under overlap)
+                served = stats1["requests"] - stats0["requests"]
+                serve_s = stats1["seconds"] - stats0["seconds"]
+                lat = srv.metrics.histogram("server.latency").summary()
             finally:
                 pool.close()
             rps = len(reps) / max(wall, 1e-9)
@@ -124,15 +134,18 @@ def main(fast: bool = False):
             report[f"warm_procs{procs}"] = {
                 "processes": procs,
                 "client_threads": CLIENT_THREADS,
-                "requests": len(reps),
+                "requests": served,
                 "seconds": round(wall, 6),
                 "rps": round(rps, 3),
                 "rps_speedup_vs_1": round(rps / base_rps, 3),
+                "mean_request_ms": round(serve_s / max(served, 1) * 1e3, 3),
+                "p95_request_ms": round(lat["p95"] * 1e3, 3),
                 "host_cpus": HOST_CPUS,
             }
             e = report[f"warm_procs{procs}"]
             print(f"# warm procs={procs} requests={e['requests']} "
-                  f"rps={e['rps']:.2f} speedup={e['rps_speedup_vs_1']:.2f}x",
+                  f"rps={e['rps']:.2f} speedup={e['rps_speedup_vs_1']:.2f}x "
+                  f"mean={e['mean_request_ms']:.2f}ms",
                   file=sys.stderr, flush=True)
 
         # process scaling needs processor scaling — only judged where the
@@ -198,7 +211,11 @@ def main(fast: bool = False):
             served += 1 if rep.result is not None else 0
     finally:
         fault_wall = time.perf_counter() - t0
-        kills, respawns = inj.kills, pool.respawns
+        # respawn/dispatch accounting lives in the pool's metrics registry
+        # (pool.respawns is a view over it)
+        kills = inj.kills
+        respawns = int(pool.metrics.value("pool.respawns"))
+        dispatches = int(pool.metrics.value("pool.dispatches"))
         trips = pool.breaker_trips
         pool.close()
     assert kills >= 1 and respawns >= 1 and served == kill_requests
@@ -207,6 +224,7 @@ def main(fast: bool = False):
         "served": served,
         "kills": kills,
         "respawns": respawns,
+        "dispatches": dispatches,
         "breaker_trips": trips,
         "seconds": round(fault_wall, 6),
         "host_cpus": HOST_CPUS,

@@ -36,7 +36,6 @@ Run: PYTHONPATH=src python benchmarks/fig_resilient_serving.py [--fast]
 """
 from __future__ import annotations
 
-import gc
 import json
 import sys
 import time
@@ -44,6 +43,7 @@ import time
 import numpy as np
 import jax.numpy as jnp
 
+from common import timed_loop
 from repro.core import BigDAWG, DenseTensor, array
 from repro.core.health import EngineHealth
 from repro.core.middleware import _plan_from_key
@@ -76,37 +76,25 @@ def make_stack(cooldown_s: float, waves_shape):
 
 def run_phase(srv: QueryServer, n: int, incumbent: str):
     """Serve ``n`` requests sequentially, timing each; a raised exception
-    counts as a failed request (the tentpole's contract is that none is)."""
-    stats0 = dict(srv.stats)
-    lats, reports, failed = [], [], 0
-    # collector pauses (columnar serves are host-allocation heavy) would
-    # put 30+ ms GC spikes into the p99 of ANY phase — collect up front,
-    # then keep the collector out of the timed loop
-    gc.collect()
-    gc.disable()
-    try:
-        for _ in range(n):
-            t0 = time.perf_counter()
-            try:
-                reports.append(srv.submit(query()))
-            except Exception as exc:                # noqa: BLE001 — counted
-                failed += 1
-                print(f"# FAILED request: {type(exc).__name__}: {exc}",
-                      file=sys.stderr, flush=True)
-            lats.append(time.perf_counter() - t0)
-    finally:
-        gc.enable()
-    lats_ms = np.asarray(lats) * 1e3
+    counts as a failed request (the tentpole's contract is that none is).
+    The phase counters are deltas between metrics snapshots (``srv.stats``
+    is a view over the server's Metrics registry)."""
+    stats0 = srv.stats()
+    lats_ms, reports, failed = timed_loop(
+        lambda: srv.submit(query()), n,
+        on_error=lambda exc: print(
+            f"# FAILED request: {type(exc).__name__}: {exc}",
+            file=sys.stderr, flush=True))
+    stats1 = srv.stats()
     return {
         "requests": n,
         "failed": failed,
         "p50_ms": round(float(np.percentile(lats_ms, 50)), 3),
         "p99_ms": round(float(np.percentile(lats_ms, 99)), 3),
         "p99_vs_healthy": 0.0,                      # stamped by main()
-        "failovers": srv.stats["failovers"] - stats0["failovers"],
-        "breaker_trips": srv.stats["breaker_trips"]
-        - stats0["breaker_trips"],
-        "degraded_serves": srv.stats["degraded"] - stats0["degraded"],
+        "failovers": stats1["failovers"] - stats0["failovers"],
+        "breaker_trips": stats1["breaker_trips"] - stats0["breaker_trips"],
+        "degraded_serves": stats1["degraded"] - stats0["degraded"],
         "incumbent_serves": sum(1 for r in reports
                                 if r.plan_key == incumbent),
     }, reports, lats_ms

@@ -29,6 +29,7 @@ from repro.core.middleware import (BigDAWG, CachedPlan, MaterializedView,
                                    Report, masked_sig,
                                    default_plan_cache_path,
                                    default_view_cache_path)
+from repro.core.tracing import NULL_TRACER, Span, Trace, Tracer
 from repro.core.qlang import bigdawg
 from repro.core.reqpool import RequestPool
 from repro.core.shardplan import (ScatterGather, ShardInfo, analyze,
@@ -54,6 +55,7 @@ __all__ = [
     "masked_sig",
     "BigDAWGError", "EngineDown", "Overloaded", "PlanInfeasible",
     "QueryParseError", "is_engine_failure", "CircuitBreaker", "EngineHealth",
+    "NULL_TRACER", "Span", "Trace", "Tracer",
     "RequestPool", "bigdawg", "ScatterGather", "ShardInfo", "analyze",
     "analyze_catalog", "run_scatter_gather", "ProcPool", "worker_channel",
     "IslandNamespace", "Result", "Session", "connect",

@@ -112,6 +112,10 @@ class Result:
     # served by patching a materialized view with a delta fragment (or by
     # the view verbatim) instead of recomputing — streaming/IVM serves
     incremental: bool = False
+    # the request's completed span tree (core.tracing.Trace) when the
+    # session was opened with trace=True; None otherwise.  Inspect with
+    # .trace.tree() / .trace.find("engine_op") or export .trace.to_json()
+    trace: Any = None
 
     def describe(self) -> str:
         return " -> ".join(self.provenance)
@@ -140,7 +144,8 @@ def _result_from_report(query: PolyOp, rep: Report) -> Result:
                   degraded=getattr(rep, "degraded", False),
                   failovers=getattr(rep, "failovers", 0),
                   fused_segments=getattr(rep, "fused_segments", ()),
-                  incremental=getattr(rep, "incremental", False))
+                  incremental=getattr(rep, "incremental", False),
+                  trace=getattr(rep, "trace", None))
 
 
 class Session:
@@ -245,6 +250,18 @@ class Session:
         return QueryServer(self.bigdawg, max_pending=max_pending,
                            latency_target_s=latency_target_s)
 
+    def metrics(self, merged: bool = True) -> Dict[str, Any]:
+        """Point-in-time snapshot of the middleware's telemetry registry:
+        ``{"counters", "gauges", "histograms"}`` (histograms summarized as
+        count/sum/p50/p95/p99).  With ``merged=True`` (default) and a
+        ``state_path``-backed session, persisted sections from other
+        processes (procpool workers, earlier lives) are folded in.  Empty
+        snapshot when the backing middleware carries no registry."""
+        reg = getattr(self.bigdawg, "metrics", None)
+        if reg is None:
+            return {"counters": {}, "gauges": {}, "histograms": {}}
+        return reg.snapshot(merged=merged)
+
     def persist(self) -> None:
         """Flush monitor DB, calibration and plan cache (waiting for
         in-flight background explorations first) so a later ``connect`` to
@@ -290,7 +307,11 @@ def connect(state_path: Optional[str] = None, *,
     ``incremental`` (streaming IVM: ``True`` — the default — patches
     materialized views after ``append()`` when the cost model prices the
     delta path cheaper than recomputing, ``"force"`` skips the gate,
-    ``False`` disables materialization entirely)...
+    ``False`` disables materialization entirely), ``trace`` (``trace=True``
+    records a per-request span tree on every ``Result.trace`` — including
+    worker-side spans on a ``processes=`` session), ``metrics_path``
+    (where the telemetry registry persists; defaults to
+    ``<root>.metrics.json`` beside the monitor DB)...
 
     ``processes=N`` backs the session with a ``core.procpool.ProcPool`` —
     N worker processes each running a full middleware stack, sharing plans

@@ -246,6 +246,11 @@ class CostModel:
         # measured host-pool submit->result round trip on this machine — the
         # executor's predicted-seconds auto-threading gate compares against it
         self.dispatch_overhead = _Mean()
+        # per-worker-count refinement: worker count -> per-task amortized
+        # overhead (the executor probes at 1/2/4 workers; the gate
+        # interpolates at the level's actual count).  ``dispatch_overhead``
+        # stays as the legacy single-point fallback for old calib files
+        self.dispatch_table: Dict[int, _Mean] = {}
         self.calibrated = False
         # guards every rate dict: observations arrive from concurrent serves
         # and background exploration while other threads predict
@@ -280,10 +285,29 @@ class CostModel:
             rate = _DEFAULT_ELEMS_PER_S.get(kind, 1e8)
         return _OP_OVERHEAD_S + max(elems, 1.0) / max(rate, 1.0)
 
-    def dispatch_overhead_s(self) -> float:
+    def dispatch_overhead_s(self, workers: Optional[int] = None) -> float:
         """Learned per-task host-pool dispatch overhead (seconds), falling
-        back to a conservative default before any measurement."""
+        back to a conservative default before any measurement.
+
+        With ``workers`` and a measured per-worker-count table, linearly
+        interpolates between the bracketing measured counts (flat
+        extrapolation outside the measured range); without a table — or
+        without ``workers`` — the legacy single-point mean is used."""
         with self._lock:
+            pts = sorted((w, m.mean) for w, m in self.dispatch_table.items()
+                         if m.n)
+            if workers is not None and pts:
+                w = int(workers)
+                if w <= pts[0][0]:
+                    return pts[0][1]
+                if w >= pts[-1][0]:
+                    return pts[-1][1]
+                for (w0, s0), (w1, s1) in zip(pts, pts[1:]):
+                    if w0 <= w <= w1:
+                        f = (w - w0) / float(w1 - w0)
+                        return s0 + f * (s1 - s0)
+            if pts:                       # table only: mean over the probes
+                return sum(s for _, s in pts) / len(pts)
             if self.dispatch_overhead.n:
                 return self.dispatch_overhead.mean
         return _DEFAULT_DISPATCH_OVERHEAD_S
@@ -380,13 +404,16 @@ class CostModel:
             self.cast_rate.setdefault(f"{src_kind}>{dst_kind}", _Mean()) \
                 .update(nbytes / seconds)
 
-    def observe_dispatch(self, seconds: float):
-        """Fold one measured host-pool submit->result round trip into the
-        learned per-host dispatch overhead (the executor measures it on the
-        live pool; see ``executor._dispatch_overhead``)."""
+    def observe_dispatch(self, seconds: float, workers: int = 1):
+        """Fold one measured per-task host-pool dispatch overhead into the
+        model (see ``executor._dispatch_overhead``): the per-worker-count
+        table entry for ``workers``, plus the legacy single-point mean so
+        old readers keep working."""
         if seconds <= 0:
             return
         with self._lock:
+            self.dispatch_table.setdefault(int(workers), _Mean()) \
+                .update(seconds)
             self.dispatch_overhead.update(seconds)
 
     def observe_execution(self, result):
@@ -483,6 +510,8 @@ class CostModel:
                               for k, m in self.cast_rate.items()},
                 "dispatch_overhead": [self.dispatch_overhead.mean,
                                       self.dispatch_overhead.n],
+                "dispatch_table": {str(w): [m.mean, m.n]
+                                   for w, m in self.dispatch_table.items()},
             }
         atomic_json_dump(path, blob)
 
@@ -500,3 +529,6 @@ class CostModel:
             if do:
                 self.dispatch_overhead = _Mean(mean=float(do[0]),
                                                n=int(do[1]))
+            self.dispatch_table = {int(w): _Mean(mean=float(m), n=int(cnt))
+                                   for w, (m, cnt)
+                                   in blob.get("dispatch_table", {}).items()}

@@ -95,10 +95,11 @@ _POOL: Optional[ThreadPoolExecutor] = None
 _POOL_SIZE = 0
 _POOL_LOCK = threading.Lock()
 
-# one measurement of the pool round-trip cost per process (see
-# _dispatch_overhead); cached so later cost models inherit it without
+# one measurement of the pool round-trip cost per worker count per process
+# (see _dispatch_overhead); cached so later cost models inherit it without
 # re-measuring on the serve path
-_DISPATCH_MEASURED: Optional[float] = None
+DISPATCH_PROBE_WORKERS = (1, 2, 4)
+_DISPATCH_MEASURED: Dict[int, float] = {}
 _DISPATCH_LOCK = threading.Lock()
 
 
@@ -194,36 +195,51 @@ def _node_input_nbytes(node: PolyOp, catalog, values) -> float:
     return total
 
 
-def _dispatch_overhead(cost_model, reps: int = 5) -> float:
-    """The learned per-host thread-dispatch overhead, in seconds.
+def _dispatch_overhead(cost_model, workers: Optional[int] = None,
+                       reps: int = 5) -> float:
+    """The learned per-host thread-dispatch overhead, in seconds, for a
+    level dispatched over ``workers`` pool threads.
 
-    Measured once per process as the median of ``reps`` no-op submit->result
-    round trips, then folded into the cost model (``observe_dispatch``) so
-    it persists beside the calibration and later processes start from a
-    real number.  A model that already carries measurements (restored from
-    disk) is trusted without re-measuring.
+    Measured once per process at each of ``DISPATCH_PROBE_WORKERS`` (1/2/4
+    host workers): the median over ``reps`` rounds of (submit ``w`` no-op
+    tasks, await all, divide by ``w``) — per-task amortized overhead, which
+    FALLS with worker count as submissions overlap result waits.  The table
+    is folded into the cost model (``observe_dispatch(s, workers=w)``) so
+    it persists beside the calibration and later processes start from real
+    numbers; the auto-threading gate then interpolates at the level's
+    actual worker count instead of assuming the single-point cost.  A model
+    that already carries measurements (restored from disk) is trusted
+    without re-measuring.
 
-    The round trips run on a PRIVATE single-worker pool, not the live host
-    pool: the quantity of interest is pure submit->result overhead, and on
-    the shared pool a queued background exploration trial would be timed as
+    The round trips run on PRIVATE probe pools, not the live host pool:
+    the quantity of interest is pure submit->result overhead, and on the
+    shared pool a queued background exploration trial would be timed as
     'overhead', poisoning the persisted value (seconds-scale floor => the
     gate never threads again)."""
-    global _DISPATCH_MEASURED
-    if cost_model.dispatch_overhead.n:
-        return cost_model.dispatch_overhead_s()
+    if cost_model.dispatch_overhead.n or cost_model.dispatch_table:
+        return cost_model.dispatch_overhead_s(workers)
     with _DISPATCH_LOCK:
-        if _DISPATCH_MEASURED is None:
-            with ThreadPoolExecutor(max_workers=1) as probe:
-                probe.submit(lambda: None).result()      # thread spin-up
-                samples = []
-                for _ in range(reps):
-                    t0 = time.perf_counter()
-                    probe.submit(lambda: None).result()
-                    samples.append(time.perf_counter() - t0)
-            samples.sort()
-            _DISPATCH_MEASURED = samples[len(samples) // 2]
-    cost_model.observe_dispatch(_DISPATCH_MEASURED)
-    return cost_model.dispatch_overhead_s()
+        if not _DISPATCH_MEASURED:
+            for w in DISPATCH_PROBE_WORKERS:
+                with ThreadPoolExecutor(max_workers=w) as probe:
+                    # concurrent sleeps force all w threads to spin up
+                    # before the timed rounds
+                    for f in [probe.submit(time.sleep, 0.001)
+                              for _ in range(w)]:
+                        f.result()
+                    samples = []
+                    for _ in range(reps):
+                        t0 = time.perf_counter()
+                        futs = [probe.submit(lambda: None)
+                                for _ in range(w)]
+                        for f in futs:
+                            f.result()
+                        samples.append((time.perf_counter() - t0) / w)
+                samples.sort()
+                _DISPATCH_MEASURED[w] = samples[len(samples) // 2]
+    for w, s in _DISPATCH_MEASURED.items():
+        cost_model.observe_dispatch(s, workers=w)
+    return cost_model.dispatch_overhead_s(workers)
 
 
 def _task_pred_seconds(node: PolyOp, engine_name: str, catalog, values,
@@ -287,7 +303,7 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
                  concurrent: bool = False,
                  cost_model: Optional[CostModel] = None,
                  host_workers: Optional[int] = None,
-                 health=None, fused=None) -> ExecutionResult:
+                 health=None, fused=None, trace=None) -> ExecutionResult:
     """``health`` (a ``core.health.EngineHealth``) opts the run into the
     resilience path: the registry's ``before_op`` hook fires ahead of every
     engine op (the fault-injection seam), and any *engine* failure — an
@@ -311,9 +327,14 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
     the members inside the same task (sticky per segment signature — see
     ``fuseplan.mark_broken``), so fusion can never turn a servable query
     into an error.  Sequential (training) mode ignores ``fused``: per-node
-    calibration timings must stay pure."""
+    calibration timings must stay pure.
+
+    ``trace`` (a ``core.tracing.Span``, or None) attaches already-measured
+    ``engine_op`` / ``fused_segment`` / ``cast`` child spans under the
+    caller's span — no extra clock reads beyond the timings this function
+    takes anyway, and zero work when None."""
     amap = plan.engine_map(query)
-    migrator = Migrator(cost_model=cost_model)
+    migrator = Migrator(cost_model=cost_model, trace=trace)
     values: Dict[int, Any] = {}
     per_node: Dict[int, float] = {}
     node_obs: List[Tuple[str, str, float, float]] = []
@@ -345,7 +366,10 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
         except Exception as exc:
             _engine_fail(exc, eng.name, node.op)
             raise
-        per_node[node.uid] = time.perf_counter() - tn
+        dt = time.perf_counter() - tn
+        per_node[node.uid] = dt
+        if trace is not None:
+            trace.static_child("engine_op", dt, op=node.op, engine=eng.name)
         return node.uid, out
 
     def _engine_fail(exc: BaseException, engine: str, op: str):
@@ -407,6 +431,15 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
             dt = time.perf_counter() - tn
             for p, w in zip(seg.positions, seg.weights):
                 per_node[uid_at[p]] = dt * w
+            if trace is not None:
+                # one fused_segment span, with per-member engine_op children
+                # carrying the same pro-rata attribution per_node got
+                sid = trace.static_child("fused_segment", dt,
+                                         engine=seg.engine,
+                                         positions=list(seg.positions))
+                for p, w in zip(seg.positions, seg.weights):
+                    trace.trace.static("engine_op", sid, dt * w,
+                                       op=node_at[p].op, engine=seg.engine)
             return uid_at[seg.root_pos], out
 
         def _segment_unfused(seg, eng):
@@ -468,7 +501,7 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
                 # same predicted-seconds gate as the unfused path; a
                 # segment's task prediction sums its members'
                 floor_s = HOST_TASK_GATE_FACTOR * _dispatch_overhead(
-                    cost_model)
+                    cost_model, workers)
 
                 def _unit_pred(u):
                     kind, x = u
@@ -508,7 +541,7 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
                 # learned dispatch overhead; without: the static byte gate.
                 if cost_model is not None:
                     floor_s = HOST_TASK_GATE_FACTOR * \
-                        _dispatch_overhead(cost_model)
+                        _dispatch_overhead(cost_model, workers)
                     heavy = sum(1 for n in level
                                 if _task_pred_seconds(n, amap[n.uid], catalog,
                                                       values, cost_model)
@@ -562,7 +595,11 @@ def execute_plan(query: PolyOp, plan: Plan, catalog,
             except Exception as exc:
                 _engine_fail(exc, eng.name, node.op)
                 raise
-            per_node[node.uid] = time.perf_counter() - tg
+            dt = time.perf_counter() - tg
+            per_node[node.uid] = dt
+            if trace is not None:
+                trace.static_child("engine_op", dt, op=node.op,
+                                   engine=eng.name)
             values[node.uid] = out
 
     result = _deliver(query, values[query.uid])

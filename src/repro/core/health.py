@@ -146,6 +146,9 @@ class EngineHealth:
         self.always_up = tuple(always_up)
         self.time_fn = time_fn
         self.injector = injector
+        # optional runtime.telemetry.Metrics; the owning BigDAWG wires it so
+        # breaker trips land in the shared registry ("health.breaker_trips")
+        self.metrics = None
         self._lock = threading.Lock()
 
     # -- registry management ------------------------------------------------
@@ -184,7 +187,17 @@ class EngineHealth:
         with self._lock:
             br = self.breakers[engine]
             br.poll(self.time_fn())
-            return br.on_failure(self.time_fn())
+            tripped = br.on_failure(self.time_fn())
+        if tripped:
+            self._note_trip(engine)
+        return tripped
+
+    def _note_trip(self, engine: str):
+        """Mirror a breaker trip into the metrics registry (no-op until the
+        owning middleware wires ``self.metrics``).  Called OUTSIDE
+        ``self._lock``: metrics takes its own lock."""
+        if self.metrics is not None:
+            self.metrics.counter("health.breaker_trips")
 
     def record_success(self, engine: str):
         with self._lock:
@@ -242,6 +255,7 @@ class EngineHealth:
         per_engine: Dict[str, List[float]] = {}
         for engine, secs in engine_seconds:
             per_engine.setdefault(engine, []).append(secs)
+        tripped: List[str] = []
         with self._lock:
             now = self.time_fn()
             for engine, times in per_engine.items():
@@ -259,9 +273,12 @@ class EngineHealth:
                 br = self.breakers[engine]
                 br.poll(now)
                 if flagged:
-                    br.on_failure(now)
+                    if br.on_failure(now):
+                        tripped.append(engine)
                 else:
                     br.on_success()
+        for engine in tripped:
+            self._note_trip(engine)
 
     def _straggler(self, engine: str):
         det = self._stragglers.get(engine)

@@ -39,7 +39,8 @@ threads at once: a per-signature lock serializes requests for the SAME
 signature (two cold requests train once — the second waits, then serves the
 fresh cache entry) while different signatures train and serve fully in
 parallel.  The monitor and cost model take their own internal locks, the
-plan cache and the stats counters are guarded here, and exploration runs
+plan cache is guarded here, the stats counters live in the lock-free
+``runtime.telemetry.Metrics`` registry, and exploration runs
 off-path, so the whole middleware admits multi-threaded traffic (see
 ``runtime.server.QueryServer.submit_many``).
 
@@ -68,7 +69,7 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, FrozenSet, List, Optional, Set, Tuple, Union
 
-from repro.core import deltaplan, tables
+from repro.core import deltaplan, tables, tracing
 from repro.core.costmodel import CostModel, default_calibration_path
 from repro.core.engines import ENGINES
 from repro.core.errors import EngineDown, PlanInfeasible
@@ -249,6 +250,11 @@ class Report:
     # served by patching the materialized view with a delta fragment (or by
     # the view verbatim when nothing changed) instead of a full recompute
     incremental: bool = False
+    # the request's span tree (core.tracing.Trace) when tracing was on (or a
+    # propagated cross-process context forced it); the Session surfaces it
+    # as Result.trace.  Inside a procpool worker this is converted to its
+    # portable dict form before crossing the pipe
+    trace: Any = None
 
 
 def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
@@ -256,6 +262,20 @@ def _pos_seconds(query: PolyOp, res: ExecutionResult) -> Dict[int, float]:
     position (shared subtrees collapse to their one executed timing)."""
     return {pos: res.per_node_seconds.get(n.uid, 0.0)
             for pos, n in enumerate(query.nodes())}
+
+
+def _metric_prop(name: str, cast=int) -> property:
+    """A lifetime counter backed by the Metrics registry, exposed under the
+    historical attribute name (``bd.replans`` etc.) so every existing reader
+    keeps working — reads are lock-free snapshot lookups, writes go through
+    the registry (one lock for ALL middleware stats instead of a private
+    ``_stats_lock``)."""
+    def _get(self):
+        return cast(self.metrics.value(name))
+
+    def _set(self, v):
+        self.metrics.set_counter(name, float(v))
+    return property(_get, _set)
 
 
 class BigDAWG:
@@ -276,18 +296,36 @@ class BigDAWG:
                  explore_budget: float = EXPLORE_BUDGET,
                  health: Optional[EngineHealth] = None,
                  fuse: bool = True, fusion_injector: Any = None,
-                 incremental: Union[bool, str] = True):
+                 incremental: Union[bool, str] = True,
+                 trace: bool = False, metrics: Any = None,
+                 metrics_path: Optional[str] = None):
         self.catalog: Dict[str, CatalogEntry] = {}
         # name -> shardplan.ShardInfo for tables registered with shards=N
         # (the shard parts live in the catalog as "name#i")
         self.sharded: Dict[str, "shardplan.ShardInfo"] = {}
         self.monitor = monitor or Monitor()
+        # request tracing (core.tracing): trace=True makes every execute()
+        # build a per-request span tree, returned on Report.trace.  Off by
+        # default — the disabled tracer allocates nothing and every
+        # instrumentation site is a single None check
+        self.tracer = tracing.Tracer(enabled=bool(trace))
+        # process-wide metrics registry (runtime.telemetry): absorbs the old
+        # per-middleware stats counters behind lock-free-read properties
+        # (below) and persists merge-on-save beside the monitor DB
+        if metrics is None:
+            from repro.runtime.telemetry import (Metrics,
+                                                 default_metrics_path)
+            mpath = metrics_path or (default_metrics_path(self.monitor.path)
+                                     if self.monitor.path else None)
+            metrics = Metrics(mpath, shared=self.monitor.shared)
+        self.metrics = metrics
         # optional per-engine circuit-breaker registry: when present, every
         # execute() runs through the failover driver (_execute_resilient) —
         # tripped engines are masked out of planning, EngineDown retries
         # re-plan, successes/stragglers feed the breakers
         self.health = health
-        self.failovers = 0
+        if health is not None and getattr(health, "metrics", None) is None:
+            health.metrics = self.metrics    # breaker trips -> registry
         self.train_plans = train_plans
         # run each candidate plan this many times during training and record
         # only the last — first-run jit/compile cost would otherwise bias the
@@ -299,13 +337,12 @@ class BigDAWG:
         if calibrate and not self.cost_model.calibrated:
             self.cost_model.calibrate()
         self.replan_factor = replan_factor
-        self.replans = 0
         # budgeted alternate exploration (see module docstring): exploration
-        # seconds may never exceed explore_budget x cumulative serve seconds
+        # seconds may never exceed explore_budget x cumulative serve seconds.
+        # The counters themselves (replans/explorations/explore_seconds/
+        # serve_seconds/failovers/fusion/ivm stats) live in the metrics
+        # registry, exposed under their historical names via _metric_prop
         self.explore_budget = explore_budget
-        self.explorations = 0
-        self.explore_seconds = 0.0
-        self.serve_seconds = 0.0
         # plan-level kernel fusion (core.fuseplan): production serves execute
         # each cached plan's same-engine fusable chains as single jitted
         # callables.  Safe to flip at runtime (the FusedPlan rides the cache
@@ -314,9 +351,6 @@ class BigDAWG:
         # compile-failure seam for the fallback fault tests
         self.fuse = fuse
         self.fusion_injector = fusion_injector
-        self.fused_serves = 0        # production serves with >=1 fused segment
-        self.fusion_segments = 0     # fused segments executed, lifetime
-        self.fusion_fallbacks = 0    # sticky fused->unfused fallbacks, lifetime
         # incremental view maintenance (core.deltaplan): warm serves whose
         # only drift is appended rows on streaming registrations run the
         # derived update fragment and patch the materialized view.  True
@@ -325,8 +359,6 @@ class BigDAWG:
         # path); False disables materialization and patching entirely.
         # Inert without streaming registrations, safe to flip at runtime.
         self.incremental = incremental
-        self.ivm_serves = 0          # serves satisfied from the view
-        self.ivm_fallbacks = 0       # eligible views that recomputed anyway
         # registration-epoch counter (CatalogEntry.epoch source)
         self._catalog_epoch = 0
         # signature -> CachedPlan: production requests skip re-enumeration
@@ -340,8 +372,6 @@ class BigDAWG:
         # training per signature), different signatures run in parallel
         self._sig_locks: Dict[str, threading.RLock] = {}
         self._sig_locks_guard = threading.Lock()
-        # guards the counters above (replans/explorations/*_seconds)
-        self._stats_lock = threading.Lock()
         # guards plan_cache dict mutation + CachedPlan alternate rotation
         self._cache_lock = threading.RLock()
         # background exploration bookkeeping: at most one in-flight trial per
@@ -363,6 +393,18 @@ class BigDAWG:
         if self.health is not None and self.health_path \
                 and os.path.exists(self.health_path):
             self._restore_health(self.health_path)
+
+    # -- lifetime stats (metrics-registry backed, historical names) ----------
+    replans = _metric_prop("bd.replans")
+    explorations = _metric_prop("bd.explorations")
+    explore_seconds = _metric_prop("bd.explore_seconds", float)
+    serve_seconds = _metric_prop("bd.serve_seconds", float)
+    failovers = _metric_prop("bd.failovers")
+    fused_serves = _metric_prop("bd.fused_serves")
+    fusion_segments = _metric_prop("bd.fusion_segments")
+    fusion_fallbacks = _metric_prop("bd.fusion_fallbacks")
+    ivm_serves = _metric_prop("bd.ivm_serves")
+    ivm_fallbacks = _metric_prop("bd.ivm_fallbacks")
 
     def _sig_lock(self, sig: str) -> threading.RLock:
         with self._sig_locks_guard:
@@ -675,7 +717,9 @@ class BigDAWG:
         return plan_cost(query, plan, self.catalog, self.cost_model,
                          sizes=sizes, shapes=shapes)
 
-    def _train(self, query: PolyOp, sig: str) -> Report:
+    def _train(self, query: PolyOp, sig: str,
+               span: Optional[tracing.Span] = None) -> Report:
+        tspan = span.child("train", sig=sig) if span is not None else None
         ranked = dp_plans(query, self.catalog, max_plans=self.train_plans,
                           cost_model=self.cost_model,
                           measured_sizes=self.monitor.measured_sizes(sig),
@@ -695,7 +739,7 @@ class BigDAWG:
             # Monitor.best() comparison sees is from one dispatch mode
             res = execute_plan(query, plan, self.catalog, concurrent=True,
                                cost_model=self.cost_model,
-                               health=self.health)
+                               health=self.health, trace=tspan)
             self.monitor.record(sig, plan.key, res.seconds,
                                 cast_bytes=res.cast_bytes, usage=usage,
                                 sizes=res.size_obs, shapes=res.shape_obs)
@@ -719,6 +763,9 @@ class BigDAWG:
         with self._cache_lock:
             self.plan_cache[sig] = CachedPlan(best.plan, predicted,
                                               alternates=alternates)
+        if tspan is not None:
+            tspan.annotate(plans=len(ranked))
+            tspan.end()
         self.cost_model.save()
         self.monitor.save()
         self.save_plan_cache()
@@ -791,8 +838,7 @@ class BigDAWG:
                         p for p in (entry.plan,) + entry.alternates
                         if p.key != plan.key)[:self.MAX_ALTERNATES],
                     view=entry.view)
-        with self._stats_lock:
-            self.replans += 1
+        self.metrics.counter("bd.replans")
         self.save_plan_cache()
         return True
 
@@ -821,15 +867,14 @@ class BigDAWG:
         return f
 
     def _note_fusion(self, res: ExecutionResult) -> None:
-        """Roll one serve's fusion outcome into the lifetime counters
-        (caller does NOT hold the stats lock)."""
-        if not res.fused_segments and not res.fusion_fallbacks:
-            return
-        with self._stats_lock:
-            if res.fused_segments:
-                self.fused_serves += 1
-                self.fusion_segments += len(res.fused_segments)
-            self.fusion_fallbacks += res.fusion_fallbacks
+        """Roll one serve's fusion outcome into the lifetime counters."""
+        if res.fused_segments:
+            self.metrics.counter("bd.fused_serves")
+            self.metrics.counter("bd.fusion_segments",
+                                 float(len(res.fused_segments)))
+        if res.fusion_fallbacks:
+            self.metrics.counter("bd.fusion_fallbacks",
+                                 float(res.fusion_fallbacks))
 
     # -- incremental view maintenance ----------------------------------------
     def _ref_stamps(self, query: PolyOp) -> Optional[Dict[str, Dict]]:
@@ -870,8 +915,9 @@ class BigDAWG:
                 entry.view = MaterializedView(tables.host_copy(value),
                                               stamps)
 
-    def _try_incremental(self, query: PolyOp, sig: str,
-                         entry: CachedPlan) -> Optional[Report]:
+    def _try_incremental(self, query: PolyOp, sig: str, entry: CachedPlan,
+                         span: Optional[tracing.Span] = None
+                         ) -> Optional[Report]:
         """Serve from the materialized view when the only drift since
         materialization is appended rows on streaming tables: derive (once
         per change set) the ``deltaplan`` update fragment, price it against
@@ -918,8 +964,7 @@ class BigDAWG:
                 view.refs[name]["version"] = st["version"]
         if not changed:
             # nothing drifted at all: the view IS the answer
-            with self._stats_lock:
-                self.ivm_serves += 1
+            self.metrics.counter("bd.ivm_serves")
             return Report(view.value, entry.plan.key, "production",
                           time.perf_counter() - t0, 0.0, sig, cache_hit=True,
                           predicted_s=entry.predicted_s, incremental=True)
@@ -930,8 +975,7 @@ class BigDAWG:
             if len({changed[n] for n in changed}) > 1 or \
                     len({stamps[n]["rows"] - changed[n]
                          for n in changed}) > 1:
-                with self._stats_lock:
-                    self.ivm_fallbacks += 1
+                self.metrics.counter("bd.ivm_fallbacks")
                 return None
         key = frozenset(changed)
         if key not in view.update_plans:
@@ -940,8 +984,7 @@ class BigDAWG:
                 kinds={n: st["kind"] for n, st in stamps.items()})
         up = view.update_plans[key]
         if up is None:               # proven non-incremental for this set
-            with self._stats_lock:
-                self.ivm_fallbacks += 1
+            self.metrics.counter("bd.ivm_fallbacks")
             return None
         # bind each pending suffix under its delta name in a temporary
         # catalog overlay — the fragment executes through the ordinary
@@ -969,19 +1012,17 @@ class BigDAWG:
         except Exception as exc:
             warnings.warn(f"incremental pricing for {sig!r} failed "
                           f"({exc}); recomputing")
-            with self._stats_lock:
-                self.ivm_fallbacks += 1
+            self.metrics.counter("bd.ivm_fallbacks")
             return None
         if self.incremental != "force" and not price.worthwhile:
             # the delta dominates (or the patch would stream more bytes than
             # recomputing costs): the gate picks the full path
-            with self._stats_lock:
-                self.ivm_fallbacks += 1
+            self.metrics.counter("bd.ivm_fallbacks")
             return None
         try:
             res = execute_plan(up.fragment, fplan, tmp, concurrent=True,
                                cost_model=self.cost_model,
-                               health=self.health)
+                               health=self.health, trace=span)
             merged = deltaplan.apply_update(up, view.value, res.value)
         except EngineDown:
             raise    # the failover driver owns breaker-feeding and retries
@@ -989,25 +1030,31 @@ class BigDAWG:
             warnings.warn(f"incremental update for {sig!r} failed ({exc}); "
                           f"dropping the view and recomputing")
             entry.view = None
-            with self._stats_lock:
-                self.ivm_fallbacks += 1
+            self.metrics.counter("bd.ivm_fallbacks")
             return None
         with self._cache_lock:
             view.value = merged
             view.refs = stamps
         seconds = time.perf_counter() - t0
-        with self._stats_lock:
-            self.ivm_serves += 1
-            self.serve_seconds += seconds
+        self.metrics.counter("bd.ivm_serves")
+        self.metrics.counter("bd.serve_seconds", seconds)
+        self.metrics.observe("bd.serve_latency", seconds)
         return Report(merged, entry.plan.key, "production", seconds,
                       res.cast_bytes, sig, cache_hit=True,
                       predicted_s=entry.predicted_s, incremental=True)
 
-    def _production(self, query: PolyOp, sig: str) -> Report:
+    def _production(self, query: PolyOp, sig: str,
+                    span: Optional[tracing.Span] = None) -> Report:
         usage = usage_snapshot()
+        # the "plan" span covers plan SELECTION (monitor lookup + cache
+        # resolution); it is ended explicitly before any fall-through to
+        # _train so training time never hides inside it
+        pspan = span.child("plan", sig=sig) if span is not None else None
         plan_key, stats, drifted = self.monitor.best(sig, usage)
         if plan_key is None:
-            return self._train(query, sig)
+            if pspan is not None:
+                pspan.end()
+            return self._train(query, sig, span=span)
         if drifted:
             # usage changed too much since training — re-train now, queue the
             # DP's true runner-up plans for background exploration (not the
@@ -1015,7 +1062,9 @@ class BigDAWG:
             # planner candidates under the current sizes)
             with self._cache_lock:
                 self.plan_cache.pop(sig, None)
-            rep = self._train(query, sig)
+            if pspan is not None:
+                pspan.end()
+            rep = self._train(query, sig, span=span)
             for alt in self.plan_cache[sig].alternates:
                 self.monitor.queue_background(sig, alt.key)
             rep.drifted = True
@@ -1066,7 +1115,9 @@ class BigDAWG:
                                            alternates=alts, view=view)
                         self.plan_cache[sig] = entry
         if plan is None:
-            return self._train(query, sig)
+            if pspan is not None:
+                pspan.end()
+            return self._train(query, sig, span=span)
         if len(plan.assignment) != len(query.nodes()):
             # a persisted entry (or hand-edited history) for a different
             # query shape under this signature: unusable, retrain
@@ -1075,14 +1126,31 @@ class BigDAWG:
                           f"retraining")
             with self._cache_lock:
                 self.plan_cache.pop(sig, None)
-            return self._train(query, sig)
+            if pspan is not None:
+                pspan.end()
+            return self._train(query, sig, span=span)
+        if pspan is not None:
+            pspan.annotate(plan_key=plan_key)
+            pspan.end()
+            span.event("cache_hit" if hit else "cache_miss",
+                       plan_key=plan_key)
         if self.incremental:
-            rep = self._try_incremental(query, sig, entry)
+            ispan = span.child("ivm_patch", sig=sig) if span is not None \
+                else None
+            served = False
+            try:
+                rep = self._try_incremental(query, sig, entry, span=ispan)
+                served = rep is not None
+            finally:
+                if ispan is not None:
+                    ispan.annotate(served=served)
+                    ispan.end()
             if rep is not None:
                 return rep
         res = execute_plan(query, plan, self.catalog, concurrent=True,
                            cost_model=self.cost_model, health=self.health,
-                           fused=self._fused_for(query, plan, entry))
+                           fused=self._fused_for(query, plan, entry),
+                           trace=span)
         self._note_fusion(res)
         if res.fusion_cold_compiles:
             # first serve of a fused segment signature at these shapes: the
@@ -1099,8 +1167,8 @@ class BigDAWG:
             measured = after.mean_seconds if after is not None and after.n \
                 else res.seconds
             replanned = self._maybe_replan(query, sig, measured, entry)
-        with self._stats_lock:
-            self.serve_seconds += res.seconds
+        self.metrics.counter("bd.serve_seconds", res.seconds)
+        self.metrics.observe("bd.serve_latency", res.seconds)
         self._maybe_materialize(query, sig, res.value)
         explored_key = self._maybe_explore(query, sig, usage)
         return Report(res.value, plan_key, "production", res.seconds,
@@ -1126,10 +1194,8 @@ class BigDAWG:
         nothing was scheduled."""
         if self.explore_budget <= 0.0:
             return ""
-        with self._stats_lock:
-            over = self.explore_seconds > \
-                self.explore_budget * self.serve_seconds
-        if over:
+        if self.metrics.value("bd.explore_seconds") > \
+                self.explore_budget * self.metrics.value("bd.serve_seconds"):
             return ""
         with self._explore_guard:
             if sig in self._explore_inflight:    # one trial per sig at a time
@@ -1174,9 +1240,8 @@ class BigDAWG:
         try:
             res = execute_plan(query, alt, self.catalog, concurrent=True,
                                host_workers=1, cost_model=self.cost_model)
-            with self._stats_lock:
-                self.explore_seconds += res.seconds
-                self.explorations += 1
+            self.metrics.counter("bd.explore_seconds", res.seconds)
+            self.metrics.counter("bd.explorations")
             self.monitor.record(sig, alt.key, res.seconds,
                                 cast_bytes=res.cast_bytes, usage=usage,
                                 sizes=res.size_obs, shapes=res.shape_obs)
@@ -1203,9 +1268,8 @@ class BigDAWG:
         phase can burn in a burst; epoch-style callers (benchmarks, load
         phases) re-anchor here so every phase sees the same steady-state
         ``explore_budget`` fraction."""
-        with self._stats_lock:
-            self.explore_seconds = 0.0
-            self.serve_seconds = 0.0
+        self.metrics.set_counter("bd.explore_seconds", 0.0)
+        self.metrics.set_counter("bd.serve_seconds", 0.0)
 
     def persist(self) -> None:
         """Flush all persistent state — monitor DB, cost-model calibration
@@ -1219,6 +1283,7 @@ class BigDAWG:
         self.save_plan_cache()
         self.save_views()
         self._save_health()
+        self.metrics.save()
 
     def drain_explorations(self, timeout: Optional[float] = None) -> int:
         """Block until all in-flight background exploration trials finish
@@ -1240,8 +1305,8 @@ class BigDAWG:
         return done
 
     # -- resilient serving ---------------------------------------------------
-    def _serve_masked(self, query: PolyOp, sig: str,
-                      mask: FrozenSet[str]) -> Report:
+    def _serve_masked(self, query: PolyOp, sig: str, mask: FrozenSet[str],
+                      span: Optional[tracing.Span] = None) -> Report:
         """Failover/degraded serve: plan and execute with ``mask`` engines
         excluded.  The plan comes from a mask-keyed cache entry (first
         request under a given mask pays one cheap k=1 DP; the rest of the
@@ -1268,15 +1333,16 @@ class BigDAWG:
                 entry = self.plan_cache.setdefault(mkey, entry)
         res = execute_plan(query, entry.plan, self.catalog, concurrent=True,
                            cost_model=self.cost_model, health=self.health,
-                           fused=self._fused_for(query, entry.plan, entry))
+                           fused=self._fused_for(query, entry.plan, entry),
+                           trace=span)
         self._note_fusion(res)
         if not res.fusion_cold_compiles:   # compile spikes stay out of the
             self.monitor.record(mkey, entry.plan.key, res.seconds,
                                 cast_bytes=res.cast_bytes,
                                 usage=usage_snapshot(),   # masked mean too
                                 sizes=res.size_obs, shapes=res.shape_obs)
-        with self._stats_lock:
-            self.serve_seconds += res.seconds
+        self.metrics.counter("bd.serve_seconds", res.seconds)
+        self.metrics.observe("bd.serve_latency", res.seconds)
         return Report(res.value, entry.plan.key, "production", res.seconds,
                       res.cast_bytes, sig, cache_hit=hit,
                       predicted_s=entry.predicted_s,
@@ -1296,7 +1362,8 @@ class BigDAWG:
             (eng, rep.per_node_seconds.get(pos, 0.0)) for pos, eng in pairs)
 
     def _execute_resilient(self, query: PolyOp, sig: str, mode: str,
-                           degrade: bool) -> Report:
+                           degrade: bool,
+                           span: Optional[tracing.Span] = None) -> Report:
         """The failover driver (requires ``self.health``): plan under the
         current breaker mask, execute, and on ``EngineDown`` retry — the
         failed attempt fed the engine's breaker, so retries first burn the
@@ -1315,12 +1382,13 @@ class BigDAWG:
             if degrade:
                 mask = frozenset(mask | health.degrade_mask())
             try:
-                rep = self._serve_masked(query, sig, mask) if mask \
-                    else self._dispatch(query, sig, mode)
-            except EngineDown:
+                rep = self._serve_masked(query, sig, mask, span=span) \
+                    if mask else self._dispatch(query, sig, mode, span=span)
+            except EngineDown as exc:
                 failovers += 1
-                with self._stats_lock:
-                    self.failovers += 1
+                self.metrics.counter("bd.failovers")
+                if span is not None:
+                    span.event("failover", engine=exc.engine, op=exc.op)
                 if failovers >= limit:
                     raise
                 continue
@@ -1351,20 +1419,23 @@ class BigDAWG:
         return self.health.trips() if self.health is not None else 0
 
     # -- public API ----------------------------------------------------------
-    def _dispatch(self, query: PolyOp, sig: str, mode: str) -> Report:
+    def _dispatch(self, query: PolyOp, sig: str, mode: str,
+                  span: Optional[tracing.Span] = None) -> Report:
         """The paper's phase protocol (caller holds the signature lock)."""
         if mode == "training":
-            return self._train(query, sig)
+            return self._train(query, sig, span=span)
         if mode == "production":
-            return self._production(query, sig)
+            return self._production(query, sig, span=span)
         if mode == "auto":
             known, _, _ = self.monitor.best(sig)
-            return self._production(query, sig) if known else \
-                self._train(query, sig)
+            return self._production(query, sig, span=span) if known else \
+                self._train(query, sig, span=span)
         raise ValueError(mode)
 
     def execute(self, query: PolyOp, mode: str = "auto", *,
-                degrade: bool = False) -> Report:
+                degrade: bool = False,
+                trace_ctx: Optional[Tuple[str, Optional[str]]] = None
+                ) -> Report:
         """Thread-safe entry point.  Requests for the SAME signature are
         serialized on a per-signature lock — two cold requests racing in
         ``auto`` mode train exactly once: the loser blocks, then re-checks
@@ -1377,12 +1448,29 @@ class BigDAWG:
         planning, ``EngineDown`` mid-plan retries (re-planning around the
         dead engine once its breaker opens), and the Report carries
         ``status``/``degraded``/``failovers``.  ``degrade=True`` (the
-        server's overload path) plans on the always-up engine set only."""
+        server's overload path) plans on the always-up engine set only.
+
+        With tracing on (``BigDAWG(trace=True)``), or when an upstream
+        process propagated a ``trace_ctx`` ``(trace_id, parent_span_id)``
+        across the pipe RPC, the request records a span tree returned on
+        ``Report.trace`` — a root ``request`` span over plan / train /
+        cast / engine_op / ivm_patch / failover children."""
         sig = signature(query, self.catalog)
-        with self._sig_lock(sig):
-            if self.health is not None:
-                return self._execute_resilient(query, sig, mode, degrade)
-            return self._dispatch(query, sig, mode)
+        trace = self.tracer.start(trace_ctx)
+        span = trace.root("request", sig=sig, mode=mode) \
+            if trace is not None else None
+        try:
+            with self._sig_lock(sig):
+                if self.health is not None:
+                    rep = self._execute_resilient(query, sig, mode, degrade,
+                                                  span=span)
+                else:
+                    rep = self._dispatch(query, sig, mode, span=span)
+        finally:
+            if span is not None:
+                span.end()
+        rep.trace = trace
+        return rep
 
     def run_background_queue(self, query_by_sig: Dict[str, PolyOp]):
         """Re-explore queued alternate plans 'when the system is

@@ -36,6 +36,7 @@ class Migrator:
     # (src_kind, dst_kind, bytes, seconds) per executed cast hop
     events: List[Tuple[str, str, float, float]] = field(default_factory=list)
     cost_model: Optional[Any] = None     # enables calibrated multi-hop routes
+    trace: Optional[Any] = None          # parent tracing.Span for cast spans
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False,
                                   compare=False)
 
@@ -54,6 +55,9 @@ class Migrator:
                 self.bytes_moved += nbytes
                 self.n_casts += 1
                 self.events.append((src_kind, dst_kind, float(nbytes), dt))
+            if self.trace is not None:     # Trace appends take their own lock
+                self.trace.static_child("cast", dt, src=src_kind,
+                                        dst=dst_kind, bytes=float(nbytes))
         return obj
 
     def reset(self):

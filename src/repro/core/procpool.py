@@ -73,7 +73,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import shardplan, tables
+from repro.core import shardplan, tables, tracing
 from repro.core.engines import ENGINES
 from repro.core.errors import (BigDAWGError, EngineDown, Overloaded,
                                PlanInfeasible, QueryParseError)
@@ -124,8 +124,10 @@ def _portable_exc(exc: BaseException) -> BaseException:
 
 def _portable_report(rep) -> Any:
     """Report with its result's array leaves rebased to numpy — device
-    buffers must not cross the process boundary."""
-    return replace(rep, result=tables.host_copy(rep.result))
+    buffers must not cross the process boundary — and its trace converted
+    to a plain dict (a live Trace carries a threading.Lock)."""
+    return replace(rep, result=tables.host_copy(rep.result),
+                   trace=tracing.portable(getattr(rep, "trace", None)))
 
 
 def _worker_main(widx: int, conn, spec: Dict[str, Any]) -> None:
@@ -157,9 +159,13 @@ def _worker_main(widx: int, conn, spec: Dict[str, Any]) -> None:
         try:
             if kind == "execute":
                 query, mode, degrade = msg[2], msg[3], msg[4]
+                # older masters frame execute without the trace context —
+                # length-check like the register streaming flag below
+                tctx = msg[5] if len(msg) > 5 else None
                 if shared:
                     bd.reload_shared()
-                rep = bd.execute(query, mode, degrade=degrade)
+                rep = bd.execute(query, mode, degrade=degrade,
+                                 trace_ctx=tctx)
                 if shared and rep.mode == "training":
                     bd.monitor.save()
                     bd.save_plan_cache()
@@ -275,20 +281,36 @@ class IncrementalGather:
     still waiting on a predecessor.  Thread-safe: worker gather threads
     call ``add`` concurrently."""
 
-    __slots__ = ("merge", "by", "n", "folds", "_lock", "_acc", "_next",
-                 "_pending")
+    __slots__ = ("merge", "by", "n", "folds", "span", "_lock", "_acc",
+                 "_next", "_pending")
 
-    def __init__(self, merge: str, n_shards: int, by: Optional[str] = None):
+    def __init__(self, merge: str, n_shards: int, by: Optional[str] = None,
+                 span=None):
         if merge not in ("concat", "sum", "kmerge"):
             raise ValueError(f"unknown merge kind {merge!r}")
         self.merge = merge
         self.by = by
         self.n = n_shards
         self.folds = 0                 # pairwise merges performed (testing)
+        self.span = span               # parent tracing.Span: gather_fold spans
         self._lock = threading.Lock()
         self._acc: Any = None
         self._next = 0                 # next shard index the prefix fold needs
         self._pending: Dict[int, Any] = {}
+
+    def _fold(self, fn, shard: int):
+        """One pairwise merge, counted and (when tracing) span-recorded —
+        no clock reads on the untraced path."""
+        if self.span is None:
+            out = fn()
+        else:
+            t0 = time.perf_counter()
+            out = fn()
+            self.span.static_child("gather_fold",
+                                   time.perf_counter() - t0,
+                                   shard=shard, merge=self.merge)
+        self.folds += 1
+        return out
 
     def add(self, i: int, part) -> None:
         """Absorb shard ``i``'s result frame, folding whatever became
@@ -298,8 +320,8 @@ class IncrementalGather:
                 if self._acc is None:
                     self._acc = part
                 else:
-                    self._acc = tables.sum_shards([self._acc, part])
-                    self.folds += 1
+                    self._acc = self._fold(
+                        lambda: tables.sum_shards([self._acc, part]), i)
                 self._next += 1
                 return
             self._pending[i] = part
@@ -308,12 +330,13 @@ class IncrementalGather:
                 if self._acc is None:
                     self._acc = part
                 elif self.merge == "concat":
-                    self._acc = tables.concat_shards([self._acc, part])
-                    self.folds += 1
+                    self._acc = self._fold(
+                        lambda: tables.concat_shards([self._acc, part]),
+                        self._next)
                 else:
-                    self._acc = tables.kmerge_shards([self._acc, part],
-                                                     self.by)
-                    self.folds += 1
+                    self._acc = self._fold(
+                        lambda: tables.kmerge_shards([self._acc, part],
+                                                     self.by), self._next)
                 self._next += 1
 
     def result(self):
@@ -369,6 +392,16 @@ class ProcPool:
         self.state_path = state_path
         self._spec = {"state_path": state_path, "resilient": resilient,
                       "bigdawg_kwargs": dict(bigdawg_kwargs)}
+        # tracing: the master mirrors the workers' trace= knob (it rides
+        # bigdawg_kwargs into each worker's BigDAWG).  With it on, execute()
+        # roots a master-side request span and ships (trace_id, span_id)
+        # with every dispatch so worker spans re-attach under it
+        self.tracer = tracing.Tracer(
+            enabled=bool(bigdawg_kwargs.get("trace", False)))
+        from repro.runtime.telemetry import Metrics, default_metrics_path
+        self.metrics = Metrics(
+            default_metrics_path(state_path) if state_path else None,
+            shared=bool(state_path))
         self.request_timeout_s = request_timeout_s
         self.start_timeout_s = start_timeout_s
         self.retries = retries
@@ -391,12 +424,24 @@ class ProcPool:
         self._rid = itertools.count(1)
         self._rr = itertools.count()
         self._lock = threading.Lock()      # guards workers[] swaps
-        self.respawns = 0
-        self.dispatches = 0
-        self.scatter_serves = 0
         self._closed = False
         self.workers: List[_Worker] = [self._spawn(i)
                                        for i in range(processes)]
+
+    # lifetime counters, backed by the metrics registry (``respawns`` etc.
+    # stay readable/assignable attributes for existing callers and tests)
+    def _metric_prop(name: str) -> property:      # noqa: N805 — factory
+        def _get(self):
+            return int(self.metrics.value(name))
+
+        def _set(self, v):
+            self.metrics.set_counter(name, float(v))
+        return property(_get, _set)
+
+    respawns = _metric_prop("pool.respawns")
+    dispatches = _metric_prop("pool.dispatches")
+    scatter_serves = _metric_prop("pool.scatter_serves")
+    del _metric_prop
 
     # -- lifecycle -----------------------------------------------------------
     def _spawn(self, idx: int) -> _Worker:
@@ -434,7 +479,7 @@ class ProcPool:
                     self._rpc(h, "register", name, obj, engine, streaming,
                               timeout=self.start_timeout_s)
             self.workers[idx] = h
-            self.respawns += 1
+            self.metrics.counter("pool.respawns")
             # the replacement is healthy — don't make it re-earn trust
             # through a half-open probe
             self.health.reset(ch)
@@ -469,45 +514,59 @@ class ProcPool:
 
     # -- RPC core ------------------------------------------------------------
     def _rpc(self, h: _Worker, kind: str, *payload,
-             timeout: Optional[float] = None):
+             timeout: Optional[float] = None, span=None):
         """One framed request/reply on a worker's pipe.  Raises
         ``_WorkerDied`` on EOF/broken pipe/dead process/timeout; re-raises
         the worker's transported exception on an ``err`` reply.  Replies are
         rid-matched: a buffered reply to an earlier timed-out request is
-        discarded here rather than mis-delivered."""
+        discarded here rather than mis-delivered.
+
+        With a ``span``, the wait for the worker's pipe lock is recorded as
+        a ``queue_wait`` child and the in-flight RPC as ``worker_dispatch``."""
         rid = next(self._rid)
         timeout = self.request_timeout_s if timeout is None else timeout
+        qspan = span.child("queue_wait", worker=h.idx) \
+            if span is not None else None
         with h.lock:
+            if qspan is not None:
+                qspan.end()
+                dspan = span.child("worker_dispatch", worker=h.idx, kind=kind)
+            else:
+                dspan = None
             try:
-                h.conn.send((kind, rid) + payload)
-            except (OSError, BrokenPipeError, ValueError):
-                raise _WorkerDied(h.idx) from None
-            if self.kill_injector is not None and kind == "execute":
-                # fault seam: the request is now in flight on that process
-                self.kill_injector.on_dispatch(h.idx, h.proc.pid)
-            deadline = time.monotonic() + timeout
-            while True:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    # hung worker: indistinguishable from dead at this layer
-                    # — kill it so the respawn starts from a clean slate
-                    if h.proc.is_alive():
-                        h.proc.terminate()
-                    raise _WorkerDied(h.idx)
-                if h.conn.poll(min(0.1, remaining)):
-                    try:
-                        status, r_rid, out = h.conn.recv()
-                    except (EOFError, OSError):
-                        raise _WorkerDied(h.idx) from None
-                    if r_rid != rid:
-                        continue           # stale reply — discard, keep waiting
-                    if status == "ok":
-                        return out
-                    raise out
-                if not h.proc.is_alive():
-                    # one last poll: a reply can be buffered past death
-                    if not h.conn.poll(0.2):
+                try:
+                    h.conn.send((kind, rid) + payload)
+                except (OSError, BrokenPipeError, ValueError):
+                    raise _WorkerDied(h.idx) from None
+                if self.kill_injector is not None and kind == "execute":
+                    # fault seam: the request is now in flight on that process
+                    self.kill_injector.on_dispatch(h.idx, h.proc.pid)
+                deadline = time.monotonic() + timeout
+                while True:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        # hung worker: indistinguishable from dead at this
+                        # layer — kill it so the respawn starts clean
+                        if h.proc.is_alive():
+                            h.proc.terminate()
                         raise _WorkerDied(h.idx)
+                    if h.conn.poll(min(0.1, remaining)):
+                        try:
+                            status, r_rid, out = h.conn.recv()
+                        except (EOFError, OSError):
+                            raise _WorkerDied(h.idx) from None
+                        if r_rid != rid:
+                            continue       # stale reply — discard, keep waiting
+                        if status == "ok":
+                            return out
+                        raise out
+                    if not h.proc.is_alive():
+                        # one last poll: a reply can be buffered past death
+                        if not h.conn.poll(0.2):
+                            raise _WorkerDied(h.idx)
+            finally:
+                if dspan is not None:
+                    dspan.end()
 
     # -- registration --------------------------------------------------------
     def register(self, name: str, obj, engine: str,
@@ -622,6 +681,7 @@ class ProcPool:
             except _WorkerDied:
                 self._respawn(idx, h)      # nothing to retry: a dead worker's
                 #                            unflushed deltas died with it
+        self.metrics.save()
 
     def ping(self) -> List[Optional[int]]:
         """Liveness probe: worker pids (None where a worker had to be
@@ -637,35 +697,63 @@ class ProcPool:
         return out
 
     def execute(self, query: PolyOp, mode: str = "auto", *,
-                degrade: bool = False):
+                degrade: bool = False,
+                trace_ctx: Optional[Tuple[str, Optional[str]]] = None):
         """The serving entry point ``QueryServer``/``Session`` call.
         Scatter–gather when the query decomposes over sharded registrations
         and the pricing says it pays; otherwise round-robin to one worker.
         Worker death is retried on a respawned replacement up to
         ``retries`` times, then surfaces as ``EngineDown`` — requests are
-        never lost to a crash and never hang past the timeout."""
+        never lost to a crash and never hang past the timeout.
+
+        With tracing on (``trace=True`` in the pool's bigdawg kwargs) —
+        or a propagated ``trace_ctx`` — the Report carries ONE connected
+        trace: the master's request/queue_wait/worker_dispatch (and
+        gather_fold / respawn) spans plus every worker-side span, all
+        under the same trace id."""
         if self._closed:
             raise RuntimeError("ProcPool is closed")
-        sg = shardplan.analyze_catalog(query, self.sharded)
-        if sg is not None and self._scatter_worthwhile(query, sg):
-            return self._execute_scatter(sg, mode, degrade)
-        return self._execute_one(query, mode, degrade)
+        trace = self.tracer.start(trace_ctx)
+        span = trace.root("request", mode=mode, pool=self.n) \
+            if trace is not None else None
+        try:
+            sg = shardplan.analyze_catalog(query, self.sharded)
+            if sg is not None and self._scatter_worthwhile(query, sg):
+                rep = self._execute_scatter(sg, mode, degrade, span=span)
+            else:
+                rep = self._execute_one(query, mode, degrade, span=span)
+        finally:
+            if span is not None:
+                span.end()
+        if trace is not None:
+            rep.trace = trace
+        return rep
 
-    def _execute_one(self, query: PolyOp, mode: str, degrade: bool):
+    def _execute_one(self, query: PolyOp, mode: str, degrade: bool,
+                     span=None):
         idx = next(self._rr) % self.n
+        tctx = span.trace.ctx(span) if span is not None else None
         for _attempt in range(self.retries + 1):
             h = self.workers[idx]
             try:
-                self.dispatches += 1
-                rep = self._rpc(h, "execute", query, mode, degrade)
+                self.metrics.counter("pool.dispatches")
+                rep = self._rpc(h, "execute", query, mode, degrade, tctx,
+                                span=span)
             except _WorkerDied:
+                if span is not None:
+                    span.event("respawn", worker=idx)
                 self._respawn(idx, h)
                 continue
             self.health.record_success(worker_channel(idx))
+            if span is not None:
+                # re-attach the worker's serialized spans (the retry serve
+                # after a respawn lands here too — same trace id)
+                span.trace.adopt(rep.trace)
+                rep.trace = None
             return rep
         raise EngineDown(worker_channel(idx), "execute")
 
-    def _execute_scatter(self, sg, mode: str, degrade: bool):
+    def _execute_scatter(self, sg, mode: str, degrade: bool, span=None):
         """Fan the decomposition's fragments to their owning workers in
         parallel, merge in the master (numpy-only).  Fragment ``i`` is
         pinned to worker ``i % n`` — the only process holding shard ``i``'s
@@ -678,13 +766,15 @@ class ProcPool:
         of every shard frame — and by the time the slowest worker answers,
         every other frame's merge work is already done."""
         t0 = time.perf_counter()
-        gather = IncrementalGather(sg.merge, sg.n_shards, by=sg.merge_by)
+        gather = IncrementalGather(sg.merge, sg.n_shards, by=sg.merge_by,
+                                   span=span)
         # Report metadata survives the payload drop: (cast_bytes, mode,
         # cache_hit, failovers, degraded) per shard, plus shard 0's Report
         # (payload stripped) as the roll-up base
         metas: List[Optional[Tuple]] = [None] * sg.n_shards
         first_rep: List[Any] = [None]
         errs: List[Optional[BaseException]] = [None] * sg.n_shards
+        tctx = span.trace.ctx(span) if span is not None else None
 
         def run(i: int) -> None:
             frag = sg.fragment(i)
@@ -692,20 +782,25 @@ class ProcPool:
             for _attempt in range(self.retries + 1):
                 h = self.workers[idx]
                 try:
-                    self.dispatches += 1
-                    rep = self._rpc(h, "execute", frag, mode, degrade)
+                    self.metrics.counter("pool.dispatches")
+                    rep = self._rpc(h, "execute", frag, mode, degrade, tctx,
+                                    span=span)
                 except _WorkerDied:
+                    if span is not None:
+                        span.event("respawn", worker=idx, shard=i)
                     self._respawn(idx, h)
                     continue
                 except BaseException as exc:   # noqa: BLE001 — worker error
                     errs[i] = exc
                     return
                 self.health.record_success(worker_channel(idx))
+                if span is not None:
+                    span.trace.adopt(rep.trace)
                 metas[i] = (rep.cast_bytes, rep.mode, rep.cache_hit,
                             getattr(rep, "failovers", 0),
                             getattr(rep, "degraded", False))
                 if i == 0:
-                    first_rep[0] = replace(rep, result=None)
+                    first_rep[0] = replace(rep, result=None, trace=None)
                 gather.add(i, rep.result)     # frees the frame once folded
                 return
             errs[i] = EngineDown(worker_channel(idx), f"shard {i}")
@@ -724,7 +819,7 @@ class ProcPool:
         if err is not None:
             raise err
         merged = gather.result()
-        self.scatter_serves += 1
+        self.metrics.counter("pool.scatter_serves")
         first = first_rep[0]
         return replace(
             first, result=merged,

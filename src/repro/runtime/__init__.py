@@ -2,7 +2,10 @@ from repro.runtime.trainer import Trainer, SimulatedFailure
 from repro.runtime.server import BatchServer, Overloaded, QueryServer, Shed
 from repro.runtime.fault import (EngineFaultInjector, FailureInjector,
                                  StragglerDetector, WorkerKillInjector)
+from repro.runtime.telemetry import (Histogram, Metrics,
+                                     default_metrics_path, load_merged)
 
 __all__ = ["Trainer", "SimulatedFailure", "BatchServer", "QueryServer",
            "Shed", "Overloaded", "EngineFaultInjector", "FailureInjector",
-           "StragglerDetector", "WorkerKillInjector"]
+           "StragglerDetector", "WorkerKillInjector",
+           "Histogram", "Metrics", "default_metrics_path", "load_merged"]

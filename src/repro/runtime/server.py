@@ -49,6 +49,7 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
+from collections.abc import Mapping
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
 import jax
@@ -212,6 +213,52 @@ class BatchServer:
         return requests
 
 
+class StatsView(Mapping):
+    """Backward-compatible dict view over the server's ``Metrics`` registry.
+
+    ``QueryServer.stats`` used to be a plain dict guarded by its own lock —
+    one of three separately-locked counter stores in the serving stack.
+    The counters now live in :class:`repro.runtime.telemetry.Metrics`; this
+    view keeps every old read working: ``srv.stats["requests"]``,
+    ``dict(srv.stats)``, iteration, ``len``.  Middleware-lifetime keys
+    (``breaker_trips``, ``fused_serves``, ...) are read live off the
+    backend, exactly as ``submit`` used to mirror them.  Calling the view
+    (``srv.stats()``) returns a plain dict snapshot."""
+
+    _KEYS = ("requests", "cache_hits", "trainings", "replans",
+             "explorations", "shed", "seconds", "degraded", "failovers",
+             "breaker_trips", "latency_ewma", "fused_serves",
+             "fusion_fallbacks", "ivm_serves", "ivm_fallbacks")
+    _FLOAT = frozenset(("seconds", "latency_ewma"))
+    # lifetime middleware counters read live off the backend (a ProcPool
+    # backend lacks the fused/ivm attributes -> 0, like the old mirror)
+    _LIVE = frozenset(("breaker_trips", "fused_serves", "fusion_fallbacks",
+                       "ivm_serves", "ivm_fallbacks"))
+
+    def __init__(self, server: "QueryServer"):
+        self._server = server
+
+    def __getitem__(self, key: str):
+        if key not in self._KEYS:
+            raise KeyError(key)
+        if key in self._LIVE:
+            return int(getattr(self._server.bd, key, 0))
+        v = self._server.metrics.value("server." + key)
+        return float(v) if key in self._FLOAT else int(v)
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __call__(self) -> Dict[str, Any]:
+        return {k: self[k] for k in self._KEYS}
+
+    def __repr__(self) -> str:
+        return repr(self())
+
+
 class QueryServer:
     """Production-facing polystore front end over a ``BigDAWG`` instance.
 
@@ -282,18 +329,20 @@ class QueryServer:
                              f"{latency_target_s}")
         self.max_pending = max_pending
         self.latency_target_s = latency_target_s
-        self.stats = {"requests": 0, "cache_hits": 0, "trainings": 0,
-                      "replans": 0, "explorations": 0, "shed": 0,
-                      "seconds": 0.0, "degraded": 0, "failovers": 0,
-                      "breaker_trips": 0, "latency_ewma": 0.0,
-                      "fused_serves": 0, "fusion_fallbacks": 0,
-                      "ivm_serves": 0, "ivm_fallbacks": 0}
+        # counters live in the middleware's Metrics registry when it has one
+        # (so server.* and bd.* metrics land in one snapshot/file); a
+        # pre-taxonomy stand-in without a registry gets a pathless private
+        # one.  ``self.stats`` stays a dict-shaped view over it.
+        from repro.runtime.telemetry import Metrics
+        reg = getattr(self.bd, "metrics", None)
+        self.metrics = reg if reg is not None else Metrics()
+        self.stats = StatsView(self)
         self._pending = 0          # batch-admitted requests still in flight
         # adaptive in-flight bound (AIMD; only consulted when
         # latency_target_s is set) and the serve-latency EWMA driving it
         self._bound = float(max_pending or 2 * self.DEFAULT_REQUEST_WORKERS)
         self._lat_ewma = 0.0
-        self._stats_lock = threading.Lock()
+        self._admit_lock = threading.Lock()
         # lazily-built request pool (NOT the executor host pool — request
         # threads block on level barriers); grows, never shrinks
         self._requests = RequestPool()
@@ -333,55 +382,49 @@ class QueryServer:
         else:     # plain call keeps pre-taxonomy BigDAWG stand-ins working
             rep = self.bd.execute(query, mode="auto")
         dt = time.perf_counter() - t0
-        with self._stats_lock:
-            self.stats["requests"] += 1
-            self.stats["seconds"] += dt
-            if rep.mode == "training":
-                self.stats["trainings"] += 1
-            if rep.cache_hit:
-                self.stats["cache_hits"] += 1
-            if rep.replanned:
-                self.stats["replans"] += 1
-            if rep.explored:
-                self.stats["explorations"] += 1
-            if getattr(rep, "degraded", False):
-                self.stats["degraded"] += 1
-            self.stats["failovers"] += getattr(rep, "failovers", 0)
-            self.stats["breaker_trips"] = getattr(self.bd, "breaker_trips", 0)
-            # lifetime middleware counters, mirrored like breaker_trips (a
-            # ProcPool backend has neither attribute -> stays 0)
-            self.stats["fused_serves"] = getattr(self.bd, "fused_serves", 0)
-            self.stats["fusion_fallbacks"] = getattr(self.bd,
-                                                     "fusion_fallbacks", 0)
-            self.stats["ivm_serves"] = getattr(self.bd, "ivm_serves", 0)
-            self.stats["ivm_fallbacks"] = getattr(self.bd,
-                                                  "ivm_fallbacks", 0)
-            if self.latency_target_s is not None:
-                # AIMD on the in-flight bound, driven by the latency EWMA:
-                # under target -> +1 (up to max_pending when given), over ->
-                # halve (floor 1).  Training requests are excluded — a cold
-                # signature's plan-enumeration time says nothing about
-                # steady-state serve latency
-                if rep.mode != "training":
-                    a = 0.2
-                    self._lat_ewma = dt if self._lat_ewma == 0.0 \
-                        else (1 - a) * self._lat_ewma + a * dt
-                    self.stats["latency_ewma"] = self._lat_ewma
-                    if self._lat_ewma <= self.latency_target_s:
-                        cap = float(self.max_pending) if self.max_pending \
-                            else float("inf")
-                        self._bound = min(cap, self._bound + 1.0)
-                    else:
-                        self._bound = max(1.0, self._bound / 2.0)
+        m = self.metrics
+        m.counter("server.requests")
+        m.counter("server.seconds", dt)
+        m.observe("server.latency", dt)
+        if rep.mode == "training":
+            m.counter("server.trainings")
+        if rep.cache_hit:
+            m.counter("server.cache_hits")
+        if rep.replanned:
+            m.counter("server.replans")
+        if rep.explored:
+            m.counter("server.explorations")
+        if getattr(rep, "degraded", False):
+            m.counter("server.degraded")
+        failovers = getattr(rep, "failovers", 0)
+        if failovers:
+            m.counter("server.failovers", float(failovers))
+        if self.latency_target_s is not None and rep.mode != "training":
+            # AIMD on the in-flight bound, driven by the latency EWMA:
+            # under target -> +1 (up to max_pending when given), over ->
+            # halve (floor 1).  Training requests are excluded — a cold
+            # signature's plan-enumeration time says nothing about
+            # steady-state serve latency
+            with self._admit_lock:
+                a = 0.2
+                self._lat_ewma = dt if self._lat_ewma == 0.0 \
+                    else (1 - a) * self._lat_ewma + a * dt
+                if self._lat_ewma <= self.latency_target_s:
+                    cap = float(self.max_pending) if self.max_pending \
+                        else float("inf")
+                    self._bound = min(cap, self._bound + 1.0)
+                else:
+                    self._bound = max(1.0, self._bound / 2.0)
+                m.gauge("server.latency_ewma", self._lat_ewma)
         return rep
 
     def _try_admit(self) -> Optional[str]:
         """Reserve an in-flight slot for one batch request: ``"admit"``
         (serve normally), ``"degrade"`` (adaptive middle rung: serve on the
         always-up engines), or ``None`` (shed).  The check-and-increment is
-        atomic under the stats lock, so concurrent ``submit_many`` batches
+        atomic under the admission lock, so concurrent ``submit_many`` batches
         can never jointly exceed the bound."""
-        with self._stats_lock:
+        with self._admit_lock:
             if self.latency_target_s is not None:
                 bound = max(1, int(self._bound))
                 if self._pending < bound:
@@ -393,11 +436,11 @@ class QueryServer:
                         and getattr(self.bd, "health", None) is not None:
                     self._pending += 1
                     return "degrade"
-                self.stats["shed"] += 1
+                self.metrics.counter("server.shed")
                 return None
             if self.max_pending is not None \
                     and self._pending >= self.max_pending:
-                self.stats["shed"] += 1
+                self.metrics.counter("server.shed")
                 return None
             self._pending += 1
             return "admit"
@@ -406,7 +449,7 @@ class QueryServer:
         try:
             return self.submit(q, degrade=degrade)
         finally:
-            with self._stats_lock:
+            with self._admit_lock:
                 self._pending -= 1
 
     def submit_many(self, queries: Iterable, workers: Optional[int] = None
